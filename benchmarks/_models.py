@@ -1,0 +1,45 @@
+"""Tiny supervised models for the personalization / selection benches
+(structural stand-in for the paper's one-hidden-layer CNN: one hidden
+layer, 200 units in full mode, fewer in quick mode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(key, d_in: int, d_hidden: int, n_classes: int):
+    k1, k2 = jax.random.split(key)
+    s1 = 1.0 / jnp.sqrt(d_in)
+    s2 = 1.0 / jnp.sqrt(d_hidden)
+    return {"w1": jax.random.normal(k1, (d_in, d_hidden)) * s1,
+            "b1": jnp.zeros((d_hidden,)),
+            "w2": jax.random.normal(k2, (d_hidden, n_classes)) * s2,
+            "b2": jnp.zeros((n_classes,))}
+
+
+def mlp_logits(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params, data):
+    """data: {"x": (n, d), "y": (n,), "mask": (n,)}"""
+    logits = mlp_logits(params, data["x"])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, data["y"][:, None].astype(jnp.int32),
+                               axis=1)[:, 0]
+    nll = lse - gold
+    m = data.get("mask")
+    if m is None:
+        return jnp.mean(nll)
+    mf = m.astype(jnp.float32)
+    return jnp.sum(nll * mf) / jnp.maximum(jnp.sum(mf), 1.0)
+
+
+def mlp_accuracy(params, x, y, mask=None):
+    pred = jnp.argmax(mlp_logits(params, x), axis=-1)
+    ok = (pred == y).astype(jnp.float32)
+    if mask is not None:
+        mf = mask.astype(jnp.float32)
+        return jnp.sum(ok * mf) / jnp.maximum(jnp.sum(mf), 1.0)
+    return jnp.mean(ok)

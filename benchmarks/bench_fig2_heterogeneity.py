@@ -1,0 +1,73 @@
+"""Figure 2: benefits of heterogeneity. k-means cost of k-FED under
+structured partitions (k' clusters per device) vs IID random partitions,
+relative to the oracle clustering cost:
+
+    ratio = (phi(k') - phi*) / (phi(k) - phi*)    (< 1 is a win)
+
+On FEMNIST-like and Shakespeare-like synthetic proxies (Appendix B.1
+structure; LEAF itself is not downloadable offline — DESIGN.md §7)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core.kfed import kfed, kmeans_cost_of_labels
+from repro.core.lloyd import kmeans_pp_init, lloyd
+from repro.data.partition import partition_iid, partition_structured
+from repro.data.synthetic_tasks import femnist_like, shakespeare_like
+
+
+def _oracle(key, X, k):
+    """Centralized clustering = the paper's oracle target T."""
+    init, cm = kmeans_pp_init(key, X, k)
+    res = lloyd(jnp.asarray(X), init, center_mask=cm)
+    return np.asarray(res.assign), float(
+        kmeans_cost_of_labels(jnp.asarray(X), res.assign, k))
+
+
+def _run_dataset(name, xs, ys, k, k_primes, Z, seeds=2):
+    X = np.concatenate(xs).astype(np.float32)
+    rows = []
+    orc_lbl, phi_star = _oracle(jax.random.PRNGKey(0), X, k)
+    rng = np.random.default_rng(0)
+    for kp in k_primes:
+        ratios, us = [], 0.0
+        for s in range(seeds):
+            st = partition_structured(rng, X, orc_lbl, k=k, Z=Z, k_prime=kp)
+            ii = partition_iid(rng, X, orc_lbl, k=k, Z=Z)
+
+            def cost_of(part, kp_eff):
+                res = kfed(jax.random.PRNGKey(10 + s),
+                           jnp.asarray(part.data), k=k, k_prime=kp_eff,
+                           k_valid=jnp.asarray(part.k_valid),
+                           point_mask=jnp.asarray(part.point_mask))
+                lbl = jnp.where(jnp.asarray(part.point_mask),
+                                res.labels, -1)
+                return float(kmeans_cost_of_labels(
+                    jnp.asarray(part.data), lbl, k))
+
+            phi_kp = cost_of(st, kp)
+            phi_k = cost_of(ii, min(k, int(ii.k_valid.max())))
+            ratios.append((phi_kp - phi_star) /
+                          max(phi_k - phi_star, 1e-9))
+        r = float(np.mean(ratios))
+        rows.append(row(f"fig2_{name}_kprime{kp}", us,
+                        f"cost_ratio={r:.3f}"))
+    return rows
+
+
+def run(full: bool = False):
+    rng = np.random.default_rng(1)
+    rows = []
+    Z = 60 if full else 24
+    xs, ys, _ = femnist_like(rng, Z=Z, d=32 if not full else 64,
+                             mean_n=40 if not full else 80)
+    rows += _run_dataset("femnist", xs, ys, k=10,
+                         k_primes=[1, 2, 3] if not full else [1, 2, 3, 5],
+                         Z=Z)
+    xs, ys, _ = shakespeare_like(rng, Z=Z, n_per_dev=60)
+    rows += _run_dataset("shakespeare", xs, ys, k=8, k_primes=[1, 2],
+                         Z=Z)
+    return rows

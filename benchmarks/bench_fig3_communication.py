@@ -1,0 +1,61 @@
+"""Figure 3: communication efficiency. k-FED (ONE round: each device ships
+O(d k') floats once) vs naive distributed k-means (T rounds, each
+all-reducing (k, d) sums + (k,) counts), at matched clustering quality
+(k-means cost). We report both the cost ratio and the exact bytes each
+protocol moves."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core.kfed import kfed, kmeans_cost_of_labels
+from repro.core.lloyd import assign_points, kmeans_pp_init, update_centers
+from repro.data.gaussian import structured_devices
+
+
+def _central_lloyd_sim(key, data, k, iters):
+    """Numerically identical to distributed Lloyd (assignment is
+    embarrassingly parallel; the update is one all-reduce per round)."""
+    X = data.reshape(-1, data.shape[-1])
+    sub = X[:: max(1, X.shape[0] // (32 * k))][: 32 * k]
+    c, _ = kmeans_pp_init(key, sub, k)
+    for _ in range(iters):
+        a, _ = assign_points(X, c)
+        c, _ = update_centers(X, a, k, c)
+    a, _ = assign_points(X, c)
+    return a
+
+
+def run(full: bool = False):
+    k, d, kp, m0 = (36, 60, 6, 4) if full else (16, 40, 4, 3)
+    n_per = 40
+    lloyd_rounds = 25
+    rows = []
+    for s, kp_i in enumerate([1, kp // 2, kp][:(3 if full else 3)]):
+        kp_eff = max(1, kp_i)
+        fm = structured_devices(jax.random.PRNGKey(s), k=k, d=d,
+                                k_prime=kp_eff, m0=m0 * (kp // kp_eff),
+                                n_per_comp_dev=n_per, sep=25.0)
+        Z = fm.data.shape[0]
+        fn = jax.jit(lambda data: kfed(jax.random.PRNGKey(7 + s), data,
+                                       k=k, k_prime=kp_eff))
+        us, out = time_call(fn, fm.data, repeats=1)
+        phi_kfed = float(kmeans_cost_of_labels(fm.data.reshape(-1, d),
+                                               out.labels.reshape(-1), k))
+        bl = _central_lloyd_sim(jax.random.PRNGKey(17 + s), fm.data, k,
+                                lloyd_rounds)
+        phi_lloyd = float(kmeans_cost_of_labels(
+            fm.data.reshape(-1, d), bl, k))
+        # Exact protocol bytes (f32): k-FED = one upload of k^(z) centers
+        # per device (+ k broadcast); distributed = T rounds of (k,d)+k
+        # all-reduce contributions per device.
+        kfed_bytes = Z * kp_eff * d * 4 + k * d * 4
+        lloyd_bytes = lloyd_rounds * Z * (k * d + k) * 4
+        rows.append(row(
+            f"fig3_kprime{kp_eff}", us,
+            f"cost_ratio_kfed_vs_lloyd={phi_kfed / max(phi_lloyd, 1e-9):.3f};"
+            f"bytes_kfed={kfed_bytes};bytes_lloyd={lloyd_bytes};"
+            f"comm_reduction={lloyd_bytes / kfed_bytes:.1f}x"))
+    return rows

@@ -1,0 +1,85 @@
+"""Figure 4: client selection. Random vs pow-d (Cho et al., 2020) vs
+k-FED-filtered pow-d on a FEMNIST-like synthetic federation (power-law
+device sizes, 2 classes/device). Reports rounds-to-target-accuracy and
+final variance across devices (the paper's fairness note)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._models import init_mlp, mlp_accuracy, mlp_loss
+from benchmarks.common import row
+from repro.core.kfed import kfed
+from repro.data.partition import _pack
+from repro.data.synthetic_tasks import femnist_like
+from repro.fed.client import local_sgd
+from repro.fed.fedavg import weighted_average
+from repro.fed.selection import kfed_pow_d, pow_d, random_selection
+
+
+def run(full: bool = False):
+    rng = np.random.default_rng(3)
+    Z = 100 if full else 40
+    d = 32
+    n_classes = 10
+    xs, ys, _ = femnist_like(rng, Z=Z, d=d, n_classes=n_classes,
+                             mean_n=60 if full else 30)
+    part = _pack(xs, ys, n_classes)
+    X = jnp.asarray(part.data)
+    Y = jnp.asarray(part.labels)
+    M = jnp.asarray(part.point_mask)
+    rounds = 30 if full else 15
+    m, dd = (10, 30) if full else (6, 18)
+    hidden = 64 if full else 32
+
+    # One-shot k-FED clustering of devices by mean feature (k' = 1).
+    feats = (X * M[..., None]).sum(1) / jnp.maximum(
+        M.sum(1), 1)[:, None]
+    res = kfed(jax.random.PRNGKey(5), feats[:, None, :], k=8, k_prime=1)
+    clusters = np.asarray(res.labels[:, 0])
+
+    def run_strategy(strategy):
+        params = init_mlp(jax.random.PRNGKey(0), d, hidden, n_classes)
+        rng_s = np.random.default_rng(11)
+        accs = []
+        for r in range(rounds):
+            losses = np.array([float(mlp_loss(
+                params, {"x": X[z], "y": Y[z], "mask": M[z]}))
+                for z in range(Z)])
+            if strategy == "random":
+                sel = random_selection(rng_s, Z, m)
+            elif strategy == "pow_d":
+                sel = pow_d(rng_s, losses, m, dd)
+            else:
+                sel = kfed_pow_d(rng_s, losses, clusters, m, dd)
+            upds, ws = [], []
+            for z in sel:
+                u = local_sgd(mlp_loss, params,
+                              {"x": X[z], "y": Y[z], "mask": M[z]},
+                              lr=0.1, epochs=3)
+                upds.append(u.params)
+                ws.append(float(M[z].sum()))
+            stack = jax.tree.map(lambda *xs: jnp.stack(xs), *upds)
+            params = weighted_average(stack, jnp.asarray(ws))
+            acc = np.array([float(mlp_accuracy(params, X[z], Y[z], M[z]))
+                            for z in range(Z)])
+            accs.append(acc)
+        return np.stack(accs)   # (rounds, Z)
+
+    rows = []
+    for strat in ("random", "pow_d", "kfed_pow_d"):
+        t0 = time.perf_counter()
+        accs = run_strategy(strat)
+        us = (time.perf_counter() - t0) * 1e6
+        mean_final = 100 * accs[-1].mean()
+        var_final = float(np.var(100 * accs[-1]))
+        target = 0.75 if full else 0.6
+        hit = np.where(accs.mean(1) >= target)[0]
+        t2t = int(hit[0]) + 1 if len(hit) else -1
+        rows.append(row(f"fig4_{strat}", us,
+                        f"final_acc={mean_final:.1f};var={var_final:.1f};"
+                        f"rounds_to_{int(target*100)}pct={t2t}"))
+    return rows

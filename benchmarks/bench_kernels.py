@@ -1,0 +1,32 @@
+"""Kernel micro-bench: Pallas (interpret; TPU target) numerics already
+validated in tests — here we time the jnp oracle paths that the CPU
+actually executes, sized like the paper's workloads (distance+argmin is
+the k-means hot-spot k-FED optimizes on-device)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.kernels import ref
+
+
+def run(full: bool = False):
+    rows = []
+    shapes = [(4096, 64, 64), (16384, 128, 100)] if not full else \
+        [(4096, 64, 64), (16384, 128, 100), (65536, 256, 256)]
+    for (n, d, k) in shapes:
+        kx, kc = jax.random.split(jax.random.PRNGKey(n))
+        x = jax.random.normal(kx, (n, d))
+        c = jax.random.normal(kc, (k, d))
+        fn = jax.jit(lambda x, c: ref.assign_argmin(x, c))
+        us, _ = time_call(fn, x, c)
+        gflops = (2 * n * k * d) / (us * 1e-6) / 1e9
+        rows.append(row(f"pdist_argmin_n{n}_d{d}_k{k}", us,
+                        f"gflops={gflops:.1f}"))
+        a = jax.random.randint(jax.random.PRNGKey(1), (n,), 0, k)
+        fn2 = jax.jit(lambda x, a: ref.kmeans_update(x, a, k))
+        us2, _ = time_call(fn2, x, a)
+        rows.append(row(f"kmeans_update_n{n}_d{d}_k{k}", us2,
+                        f"gbps={(n * d * 4) / (us2 * 1e-6) / 1e9:.2f}"))
+    return rows

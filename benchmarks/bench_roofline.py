@@ -1,0 +1,47 @@
+"""Roofline report: reads the dry-run JSONL artifacts (produced by
+``python -m repro.launch.dryrun --all --out results_single.jsonl``) and
+emits one row per (arch x shape) with the three terms + bottleneck."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import row
+
+ARTIFACTS = ["results_single.jsonl", "results_multipod.jsonl",
+             "results_kfed.jsonl", "results_perf.jsonl"]
+
+
+def run(full: bool = False):
+    rows = []
+    for path in ARTIFACTS:
+        if not os.path.exists(path):
+            continue
+        best = {}
+        for line in open(path):
+            r = json.loads(line)
+            best[(r["arch"], r["shape"], r["mesh"])] = r
+        for (arch, shape, mesh), r in sorted(best.items()):
+            if r["status"] == "skipped":
+                rows.append(row(f"roofline_{arch}_{shape}_{mesh}", 0,
+                                "SKIPPED_BY_DESIGN"))
+                continue
+            if r["status"] != "ok":
+                rows.append(row(f"roofline_{arch}_{shape}_{mesh}", 0,
+                                f"ERROR"))
+                continue
+            derived = (f"compute={r['compute_s']:.4f};"
+                       f"memory={r['memory_s']:.4f};"
+                       f"collective={r['collective_s']:.4f};"
+                       f"bottleneck={r['bottleneck']}")
+            if "useful_flops_ratio" in r:
+                derived += (";useful_flops_ratio="
+                            f"{r['useful_flops_ratio']:.3f}")
+            if "variant" in r:
+                derived += f";variant={r['variant']}"
+            rows.append(row(
+                f"roofline_{arch}_{shape}_{mesh}",
+                r.get("t_compile_s", 0) * 1e6, derived))
+    if not rows:
+        rows.append(row("roofline", 0, "no_artifacts_found_run_dryrun"))
+    return rows

@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing + CSV row contract.
+
+Every bench returns rows (name, us_per_call, derived) where ``derived``
+is the paper-comparable number (accuracy, cost ratio, ...).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall time of fn(*args) in microseconds (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6, out
+
+
+def row(name: str, us: float, derived) -> str:
+    return f"{name},{us:.1f},{derived}"

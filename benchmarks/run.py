@@ -1,0 +1,50 @@
+"""Benchmark harness — one bench per paper table/figure (+ kernels +
+roofline). Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick mode
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale
+  PYTHONPATH=src python -m benchmarks.run --only table1,fig3
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = {
+    "table1": "benchmarks.bench_table1_gaussian",
+    "fig1": "benchmarks.bench_fig1_separation",
+    "fig2": "benchmarks.bench_fig2_heterogeneity",
+    "fig3": "benchmarks.bench_fig3_communication",
+    "table2": "benchmarks.bench_table2_personalization",
+    "fig4": "benchmarks.bench_fig4_selection",
+    "kernels": "benchmarks.bench_kernels",
+    "ablation_moe": "benchmarks.bench_ablation_moe",
+    "roofline": "benchmarks.bench_roofline",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench keys")
+    args = ap.parse_args()
+    keys = list(BENCHES) if not args.only else args.only.split(",")
+
+    import importlib
+    print("name,us_per_call,derived")
+    for key in keys:
+        mod = importlib.import_module(BENCHES[key])
+        t0 = time.time()
+        try:
+            rows = mod.run(full=args.full)
+        except Exception as e:  # keep the harness running
+            rows = [f"{key},0,ERROR:{e!r}"]
+        for r in rows:
+            print(r)
+        print(f"# {key} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Client-selection demo (Figure 4 pipeline): k-FED cluster ids as a
+de-duplication prior on top of power-of-choice selection.
+
+  PYTHONPATH=src python examples/client_selection.py
+"""
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_fig4_selection import run
+
+
+def main():
+    print("strategy comparison (quick mode):")
+    for r in run(full=False):
+        print(" ", r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""End-to-end personalized federated learning driver (Table 2 pipeline):
+
+  1. every device computes a summary vector of its local data;
+  2. k-FED clusters devices in ONE round;
+  3. one model per cluster is trained with FedAvg over its members;
+  4. compare against a single global FedAvg model and IFCA.
+
+  PYTHONPATH=src python examples/personalized_fl.py
+"""
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._models import init_mlp, mlp_accuracy, mlp_loss
+from repro.data.synthetic_tasks import rotation_tasks
+from repro.fed.fedavg import FedAvgConfig, fedavg_round
+from repro.fed.ifca import ifca_round
+from repro.fed.personalize import kfed_personalize
+
+
+def main():
+    rng = np.random.default_rng(0)
+    Z, k = 32, 4
+    data = rotation_tasks(rng, Z=Z, n_per_dev=48, d=32, k=k, k_prime=1)
+    dev = {"x": jnp.asarray(data.x), "y": jnp.asarray(data.y),
+           "mask": jnp.asarray(data.point_mask)}
+    cfg = FedAvgConfig(lr=0.1, local_epochs=3, rounds=8)
+    init = init_mlp(jax.random.PRNGKey(0), 32, 64, 10)
+
+    # global baseline
+    gp = init
+    for r in range(cfg.rounds):
+        gp, loss = fedavg_round(mlp_loss, gp, dev, cfg,
+                                point_mask=dev["mask"])
+    acc_g = np.mean([float(mlp_accuracy(gp, dev["x"][z], dev["y"][z]))
+                     for z in range(Z)])
+    print(f"global FedAvg: {100 * acc_g:.1f}%")
+
+    # IFCA baseline (k models broadcast every round)
+    keys = jax.random.split(jax.random.PRNGKey(1), k)
+    models = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[init_mlp(kk, 32, 64, 10) for kk in keys])
+    for r in range(cfg.rounds):
+        models, choice, _ = ifca_round(mlp_loss, models, dev, cfg,
+                                       point_mask=dev["mask"])
+    acc_i = np.mean([float(mlp_accuracy(
+        jax.tree.map(lambda l: l[int(choice[z])], models),
+        dev["x"][z], dev["y"][z])) for z in range(Z)])
+    print(f"IFCA:          {100 * acc_i:.1f}%  "
+          f"(ships {k} models/device/round)")
+
+    # k-FED + per-cluster FedAvg (one model/device/round after clustering)
+    feats = jnp.asarray(data.x.mean(axis=1, keepdims=True))  # (Z, 1, d)
+    models_kf, assign, _ = kfed_personalize(
+        jax.random.PRNGKey(2), mlp_loss, init, dev, feats, k, cfg,
+        point_mask=dev["mask"])
+    acc_k = np.mean([float(mlp_accuracy(
+        jax.tree.map(lambda l: l[int(assign[z])], models_kf),
+        dev["x"][z], dev["y"][z])) for z in range(Z)])
+    match = np.mean(np.asarray(assign) >= 0)
+    print(f"k-FED+FedAvg:  {100 * acc_k:.1f}%  "
+          f"(one-shot clustering, 1 model/device/round)")
+
+
+if __name__ == "__main__":
+    main()

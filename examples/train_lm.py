@@ -1,0 +1,61 @@
+"""End-to-end driver: train a ~small LM (reduced granite config) for a few
+hundred steps on synthetic token streams, then serve it with batched
+requests — exercising the same train_step / serve_step the production
+dry-run lowers.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.serve import generate
+from repro.launch.train import train_loop
+from repro.models import DistCtx, build_model
+
+
+def synthetic_batches(key, vocab, B, S, steps):
+    """Order-2 synthetic language: next token = (3 * tok + 7) % vocab with
+    occasional noise — learnable, so loss should drop fast."""
+    for i in range(steps):
+        key, k1, k2 = jax.random.split(key, 3)
+        first = jax.random.randint(k1, (B, 1), 0, vocab)
+        toks = [first]
+        for _ in range(S - 1):
+            toks.append((3 * toks[-1] + 7) % vocab)
+        toks = jnp.concatenate(toks, axis=1)
+        noise = jax.random.bernoulli(k2, 0.02, (B, S))
+        toks = jnp.where(noise, (toks + 1) % vocab, toks)
+        yield {"tokens": toks[:, :-1],
+               "labels": toks[:, 1:].astype(jnp.int32)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="granite-3-2b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True).replace(microbatch=1)
+    model = build_model(cfg)
+    print(f"training reduced {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab_size}")
+    batches = synthetic_batches(jax.random.PRNGKey(0), cfg.vocab_size,
+                                B=8, S=65, steps=args.steps)
+    state, history = train_loop(model, batches, steps=args.steps, lr=3e-3,
+                                log_every=20)
+    for step, loss in history:
+        print(f"  step {step:4d}  loss {loss:.4f}")
+    assert history[-1][1] < history[0][1], "loss did not improve"
+
+    # Serve a batch of requests.
+    prompt = {"tokens": jnp.arange(16, dtype=jnp.int32)[None].repeat(4, 0)}
+    out = generate(model, state.params, prompt, steps=8,
+                   ctx=DistCtx.local())
+    print("generated continuations:", out.tolist())
+
+
+if __name__ == "__main__":
+    main()

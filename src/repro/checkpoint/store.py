@@ -1,0 +1,77 @@
+"""Pytree checkpointing (npz, flattened key paths, sharding-aware gather).
+
+Small and dependency-free: leaves are fetched to host (fully replicated
+form) and stored under their tree paths; restore rebuilds the exact tree
+structure and re-places onto the target sharding if given.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+# npz cannot faithfully round-trip extended dtypes (bfloat16, fp8 …): they
+# save as raw void bytes with no cast back. Store such leaves as a uint8
+# byte view plus a "<key>__dtype__" marker and reconstruct on load.
+_NATIVE_KINDS = set("biufc")
+
+
+def _is_native(dtype: np.dtype) -> bool:
+    return np.dtype(dtype).kind in _NATIVE_KINDS
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if not _is_native(arr.dtype):
+            flat[key + "__dtype__"] = np.asarray(str(arr.dtype))
+            arr = arr.view(np.uint8)
+        flat[key] = arr
+    return flat
+
+
+def save_pytree(path: str, tree, step: Optional[int] = None) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+    return path
+
+
+def load_pytree(path: str, like, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional matching pytree of
+    jax.sharding.Sharding for placement."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_keys, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_keys)
+        arr = data[key]
+        if key + "__dtype__" in data:  # stored as a uint8 byte view
+            import ml_dtypes  # noqa: F401  (registers extended dtypes)
+            arr = arr.view(np.dtype(str(data[key + "__dtype__"])))
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        target = np.dtype(leaf.dtype)
+        if arr.dtype != target and not (_is_native(arr.dtype)
+                                        and _is_native(target)):
+            # cross-family cast (e.g. bf16 -> f32) goes via float32
+            arr = arr.astype(np.float32)
+        leaves.append(arr.astype(target))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree
+
+
+def checkpoint_step(path: str) -> Optional[int]:
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    return int(data["__step__"]) if "__step__" in data else None

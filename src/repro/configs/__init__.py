@@ -1,0 +1,3 @@
+from repro.configs.base import (SHAPES, InputShape, ModelConfig,  # noqa
+                                get_config, list_archs)
+from repro.configs.shapes import cache_specs, dummy_inputs, input_specs  # noqa

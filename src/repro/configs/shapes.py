@@ -1,0 +1,75 @@
+"""The four assigned input shapes and per-family ShapeDtypeStruct input
+specs (the weak-type-correct, shardable, no-allocation stand-ins the
+dry-run lowers against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, InputShape, ModelConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *, with_labels=None):
+    """Model inputs for one (arch, shape) pair.
+
+    train/prefill: token (and stub-frontend embedding) batches.
+    decode: ONE new token; the KV cache spec comes from
+    ``cache_specs`` (it is an explicit input to serve_step).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    want_labels = shape.mode == "train" if with_labels is None else with_labels
+
+    if shape.mode == "decode":
+        return {"tokens": _sds((B,), jnp.int32)}
+
+    if cfg.family == "encdec":
+        # Stub conv/mel frontend: precomputed frame embeddings. The encoder
+        # window is the architecture's fixed n_ctx (1500 frames for
+        # whisper); the remaining seq budget is decoder tokens (DESIGN §5).
+        Se = cfg.encoder.n_ctx
+        Sd = max(S - Se, 1)
+        spec = {"enc_embeds": _sds((B, Se, cfg.d_model), dt),
+                "tokens": _sds((B, Sd), jnp.int32)}
+        if want_labels:
+            spec["labels"] = _sds((B, Sd), jnp.int32)
+        return spec
+    if cfg.family == "vlm":
+        # Stub ViT/projector frontend: precomputed patch embeddings.
+        P = cfg.encoder.n_prefix
+        spec = {"patch_embeds": _sds((B, P, cfg.d_model), dt),
+                "tokens": _sds((B, S - P), jnp.int32)}
+        if want_labels:
+            spec["labels"] = _sds((B, S - P), jnp.int32)
+        return spec
+    spec = {"tokens": _sds((B, S), jnp.int32)}
+    if want_labels:
+        spec["labels"] = _sds((B, S), jnp.int32)
+    return spec
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape):
+    """ShapeDtypeStruct pytree of the decode cache (seq_len of context)."""
+    from repro.models.model import build_model
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def dummy_inputs(key, cfg: ModelConfig, shape: InputShape, **kw):
+    """Concrete random inputs matching input_specs (smoke tests)."""
+    specs = input_specs(cfg, shape, **kw)
+    out = {}
+    for name, s in specs.items():
+        key, k = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0,
+                                           max(2, cfg.vocab_size - 1),
+                                           s.dtype)
+        else:
+            out[name] = (jax.random.normal(k, s.shape) * 0.02).astype(s.dtype)
+    return out

@@ -1,0 +1,15 @@
+"""k-FED core: the paper's primary contribution as a composable JAX module.
+
+  lloyd          masked k-means primitives (assignment / update / ++ / maxmin)
+  local_kmeans   Algorithm 1 (Awasthi-Sheffet local solve)
+  kfed           Algorithm 2 (one-shot server aggregation, induced clustering)
+  separation     Definitions 3.1/3.4/3.5, eq. 2/4 analysis quantities
+  distributed    shard_map production path and multi-round Lloyd baseline
+"""
+from repro.core import distributed, kfed, local_kmeans, lloyd, separation  # noqa
+from repro.core.kfed import (KFedResult, aggregate, assign_new_device,  # noqa
+                             induced_labels)
+from repro.core.kfed import kfed as run_kfed  # noqa: F401
+from repro.core.local_kmeans import local_kmeans as run_local_kmeans  # noqa
+from repro.core.local_kmeans import batched_local_kmeans  # noqa: F401
+from repro.core.lloyd import kmeans_cost, kmeans_pp_init, maxmin_seed  # noqa

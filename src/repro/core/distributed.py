@@ -1,0 +1,241 @@
+"""Distributed k-FED: shard_map production path + vmap simulation path.
+
+The paper's protocol maps onto the mesh as follows (DESIGN.md §4):
+
+  * each shard of the ``data`` axis hosts a cohort of federated devices
+    (vmapped Algorithm 1 — devices never exchange raw data);
+  * the ONE round of communication is literally one ``all_gather`` of the
+    (Z, k', d) device-center tensor over the data axis;
+  * the server aggregation (steps 2-8 of Algorithm 2, O(Z k' k^2) distance
+    computations — Theorem 3.2) is replicated on every shard, which is
+    cheaper than any dedicated-server emulation and keeps SPMD semantics.
+
+For comparison benchmarks we also provide ``distributed_lloyd`` — the naive
+multi-round parallel Lloyd baseline (one all-reduce of (k, d) sums + (k,)
+counts per iteration), whose collective schedule shows T rounds vs k-FED's
+single gather.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import kfed as K
+from repro.core import lloyd as L
+from repro.core.local_kmeans import batched_local_kmeans
+
+
+def _axes(axis):
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def _flat_axis_index(axes, mesh):
+    """Linear shard index for a PartitionSpec((*axes,)) sharding — axes
+    listed major-to-minor, matching tiled all_gather ordering."""
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _sharded_server(centers_loc, mask_loc, kz_all, k, axes, mesh):
+    """Steps 2-8 of Algorithm 2 with the server itself sharded: each chip
+    owns its m_loc = Z_loc*k' slice of the device centers; the greedy
+    max-min runs as (local argmax -> two scalar all-reduces -> (d,) psum
+    of the winning center) per iteration, so per-chip HBM traffic is
+    m_loc*d per iteration instead of Z*k'*d (§Perf k-FED iteration 2).
+    Selection order matches the replicated server (first-occurrence
+    argmax = smallest global index among ties).
+
+    centers_loc: (Z_loc, k', d); mask_loc: (Z_loc, k'); kz_all: (Z,).
+    Returns (M (k, d), tau_centers (k, d), my_labels (Z_loc, k')).
+    """
+    Z_loc, kp, d = centers_loc.shape
+    m_loc = Z_loc * kp
+    pf = centers_loc.reshape(m_loc, d).astype(jnp.float32)
+    fm = mask_loc.reshape(m_loc)
+    shard = _flat_axis_index(axes, mesh)
+    base = shard * m_loc
+    BIG = jnp.int32(2 ** 30)
+
+    # "Pick any z": the device with most local clusters, first one wins.
+    z0 = jnp.argmax(kz_all).astype(jnp.int32)
+    own_rows = jnp.arange(m_loc) // kp == (z0 - shard * Z_loc)
+    init_loc = own_rows & fm                              # (m_loc,)
+    count0 = jax.lax.psum(jnp.sum(init_loc).astype(jnp.int32), axes)
+
+    # Initial chosen indices (global, ascending) and their coordinates.
+    cand = jnp.where(init_loc, base + jnp.arange(m_loc, dtype=jnp.int32),
+                     BIG)
+    cand = jnp.sort(cand)[:k] if m_loc >= k else jnp.sort(
+        jnp.pad(cand, (0, k - m_loc), constant_values=BIG))[:k]
+    chosen0 = jax.lax.pmin(cand, axes)                    # (k,) owner wins
+    # owner scatters its init rows into slot order; others contribute 0
+    slot_of = jnp.cumsum(init_loc.astype(jnp.int32)) - 1
+    M0 = jnp.zeros((k, d), jnp.float32).at[
+        jnp.clip(slot_of, 0, k - 1)].add(
+            jnp.where(init_loc[:, None], pf, 0.0))
+    M0 = jax.lax.psum(M0, axes)                           # (k, d)
+
+    from repro.kernels import ops
+    d2 = ops.pairwise_sq_dists(pf, M0)                    # (m_loc, k)
+    ok = jnp.arange(k) < count0
+    mind2 = jnp.min(jnp.where(ok[None, :], d2, jnp.inf), axis=1)
+    mind2 = jnp.where(fm, mind2, -jnp.inf)
+    p2 = jnp.sum(pf * pf, axis=1)
+    chosen = jnp.where(jnp.arange(k) < count0, chosen0, -1)
+
+    def body(t, carry):
+        chosen, mind2 = carry
+        grow = t >= count0
+        lmax = jnp.max(mind2)
+        larg = jnp.argmax(mind2).astype(jnp.int32)
+        gmax = jax.lax.pmax(lmax, axes)
+        cand_g = jax.lax.pmin(
+            jnp.where(lmax >= gmax, base + larg, BIG), axes)
+        chosen = jnp.where(grow, chosen.at[t].set(cand_g), chosen)
+        mine = (cand_g >= base) & (cand_g < base + m_loc)
+        row = jnp.clip(cand_g - base, 0, m_loc - 1)
+        c = jax.lax.psum(jnp.where(mine, pf[row], 0.0), axes)   # (d,)
+        nd = jnp.maximum(p2 - 2.0 * (pf @ c) + jnp.sum(c * c), 0.0)
+        nd = jnp.where(fm, nd, -jnp.inf)
+        mind2 = jnp.where(grow, jnp.minimum(mind2, nd), mind2)
+        return chosen, mind2
+
+    chosen, _ = jax.lax.fori_loop(0, k, body, (chosen, mind2))
+
+    # Assemble M from owners; one local Lloyd assignment + global update.
+    mine_t = (chosen >= base) & (chosen < base + m_loc)
+    rows = jnp.clip(chosen - base, 0, m_loc - 1)
+    M = jax.lax.psum(jnp.where(mine_t[:, None], pf[rows], 0.0), axes)
+    labels, _ = L.assign_points(pf, M, center_mask=chosen >= 0,
+                                point_mask=fm)
+    sums, cnt = ops.kmeans_update(pf, labels, k)
+    sums = jax.lax.psum(sums, axes)
+    cnt = jax.lax.psum(cnt, axes)
+    tau = jnp.where((cnt > 0)[:, None],
+                    sums / jnp.maximum(cnt, 1.0)[:, None], M)
+    return M, tau.astype(centers_loc.dtype), labels.reshape(Z_loc, kp)
+
+
+def kfed_shard_map(mesh, data: jax.Array, k: int, k_prime: int, *,
+                   key: jax.Array, axis="data", server: str = "replicated",
+                   k_valid: Optional[jax.Array] = None,
+                   point_mask: Optional[jax.Array] = None,
+                   **local_kw):
+    """One-shot k-FED over a device mesh.
+
+    data: (Z, n, d) with Z divisible by the total shard count. ``axis``
+    may be one mesh axis name or a tuple (the federated-device dimension
+    is sharded jointly over all of them — e.g. ("data", "model") uses the
+    full production pod). ``server``: "replicated" (paper-faithful: ONE
+    all-gather of the (Z, k', d) centers, steps 2-8 replicated on every
+    chip) or "sharded" (beyond-paper: the server aggregation itself is
+    sharded — per-chip traffic drops by the shard count for ~2 MB of tiny
+    scalar/(d,) reductions; bitwise-identical output). Returns
+    (labels (Z, n), tau_centers (k, d) replicated).
+    """
+    Z, n, d = data.shape
+    axes = _axes(axis)
+    nshards = 1
+    for a in axes:
+        nshards *= mesh.shape[a]
+    assert Z % nshards == 0, (Z, nshards)
+    if k_valid is None:
+        k_valid = jnp.full((Z,), k_prime, jnp.int32)
+    if point_mask is None:
+        point_mask = jnp.ones((Z, n), bool)
+    keys = jax.random.split(key, Z)
+
+    def shard_fn(keys_b, data_b, kv_b, pm_b):
+        # -- Stage 1: local solves for this shard's cohort of devices.
+        loc = batched_local_kmeans(keys_b, data_b, k_max=k_prime,
+                                   k_valid=kv_b, point_mask=pm_b, **local_kw)
+        if server == "sharded":
+            # -- Stage 2': sharded server — only tiny reductions cross
+            # chips (k scalar pairs + k (d,) psums + one (k, d) psum).
+            kz_all = jax.lax.all_gather(
+                jnp.sum(loc.center_mask, axis=1).astype(jnp.int32),
+                axes, axis=0, tiled=True)                  # (Z,)
+            _, tau, my = _sharded_server(loc.centers, loc.center_mask,
+                                         kz_all, k, axes, mesh)
+            labels_b = K.induced_labels(my, loc.assign)
+            return labels_b, tau
+        # -- The one-shot communication: gather device centers + masks.
+        all_centers = jax.lax.all_gather(loc.centers, axes, axis=0,
+                                         tiled=True)       # (Z, k', d)
+        all_mask = jax.lax.all_gather(loc.center_mask, axes, axis=0,
+                                      tiled=True)           # (Z, k')
+        # -- Stage 2: replicated server aggregation.
+        agg = K.aggregate(all_centers, all_mask, k)
+        zloc = data_b.shape[0]
+        my = jax.lax.dynamic_slice_in_dim(
+            agg.center_labels, _flat_axis_index(axes, mesh) * zloc, zloc, 0)
+        labels_b = K.induced_labels(my, loc.assign)
+        return labels_b, agg.tau_centers
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axes), P(axes), P(axes), P(axes)),
+        out_specs=(P(axes), P()),
+        check_vma=False)
+    return fn(keys, data, k_valid, point_mask)
+
+
+def assign_new_device_shard(mesh, new_data: jax.Array, tau_centers: jax.Array,
+                            k_prime: int, *, key: jax.Array, **local_kw):
+    """A device joining after the fact (Theorem 3.2): local solve + O(k'k)
+    nearest-center matching against the retained server centers. No
+    communication with any other device."""
+    from repro.core.local_kmeans import local_kmeans
+    loc = local_kmeans(key, new_data, k_max=k_prime, **local_kw)
+    lbl = K.assign_new_device(loc.centers, loc.center_mask, tau_centers)
+    return K.induced_labels(lbl[None], loc.assign[None])[0]
+
+
+def distributed_lloyd(mesh, data: jax.Array, k: int, *, key: jax.Array,
+                      iters: int = 25, axis="data", init_sub: int = 64):
+    """Naive multi-round distributed k-means baseline (Section 4.2.1,
+    "Communication-Efficiency"): parallel assignment + one all-reduce of
+    per-cluster (sums, counts) per Lloyd round. data: (Z, n, d)."""
+    Z, n, d = data.shape
+    axes = _axes(axis)
+
+    def shard_fn(data_b):
+        x = data_b.reshape(-1, d).astype(jnp.float32)
+        xg = jax.lax.all_gather(x, axes, axis=0, tiled=True)
+        # Replicated deterministic init: k-means++ on a fixed subsample.
+        sub = xg[:: max(1, xg.shape[0] // (init_sub * k))][: init_sub * k]
+        c0, _ = L.kmeans_pp_init(key, sub, k)
+
+        def body(c, _):
+            a, _ = L.assign_points(x, c)
+            sums, cnt = _sums(x, a, k)
+            sums = jax.lax.psum(sums, axes)      # the per-round collective
+            cnt = jax.lax.psum(cnt, axes)
+            new = sums / jnp.maximum(cnt, 1.0)[:, None]
+            c = jnp.where((cnt > 0)[:, None], new, c)
+            return c, None
+
+        c, _ = jax.lax.scan(body, c0, None, length=iters)
+        a, _ = L.assign_points(x, c)
+        return a.reshape(data_b.shape[:2]), c
+
+    fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=(P(axes),),
+                       out_specs=(P(axes), P()), check_vma=False)
+    return fn(data)
+
+
+def _sums(x, a, k):
+    from repro.kernels import ops
+    return ops.kmeans_update(x, a, k)
+
+
+def simulate_kfed(key, device_data, k, k_prime, **kw):
+    """Single-host simulation alias (vmap path) — same numerics as the
+    shard_map path (see tests/test_distributed.py)."""
+    return K.kfed(key, device_data, k, k_prime, **kw)

@@ -1,0 +1,114 @@
+"""Algorithm 2 — the one-shot k-FED aggregation at the central server,
+plus the induced clustering (Definition 3.3) and the new-device assignment
+rule (Theorem 3.2).
+
+The server receives only the device cluster centers Theta^(z) (one message
+of size O(d k^(z)) per device — the one-shot property), seeds k centers by
+max-min selection starting from one device's centers, runs ONE round of
+Lloyd's heuristic on the ~Z*k' device centers, and returns the partition
+tau_1..tau_k of device centers. Every data point inherits the tau-label of
+its local cluster center.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lloyd as L
+from repro.core.local_kmeans import batched_local_kmeans
+
+
+class KFedAggregate(NamedTuple):
+    seeds_idx: jax.Array       # (k,) indices into flattened (Z*k') centers
+    seed_centers: jax.Array    # (k, d) the set M
+    tau_centers: jax.Array     # (k, d) mu(tau_r) after the one Lloyd round
+    center_labels: jax.Array   # (Z, k') tau-label of each device center, -1 pad
+    z0: jax.Array              # () the device whose centers seeded M
+
+
+def aggregate(device_centers: jax.Array, center_mask: jax.Array,
+              k: int) -> KFedAggregate:
+    """Steps 2-8 of Algorithm 2. device_centers: (Z, k', d)."""
+    Z, kp, d = device_centers.shape
+    flat = device_centers.reshape(Z * kp, d)
+    fm = center_mask.reshape(Z * kp)
+
+    # "Pick any z": deterministically pick the device with most local
+    # clusters (maximizes the seeded set, minimizes max-min iterations).
+    kz = jnp.sum(center_mask, axis=1)
+    z0 = jnp.argmax(kz).astype(jnp.int32)
+    init_sel = ((jnp.arange(Z) == z0)[:, None] & center_mask).reshape(-1)
+
+    seeds_idx = L.maxmin_seed(flat, fm, init_sel, k)
+    M = flat[seeds_idx]
+
+    # One round of Lloyd's heuristic over the device centers.
+    labels, _ = L.assign_points(flat, M, point_mask=fm)
+    tau_centers, _ = L.update_centers(flat.astype(jnp.float32), labels, k,
+                                      M.astype(jnp.float32))
+    return KFedAggregate(seeds_idx, M, tau_centers.astype(device_centers.dtype),
+                         labels.reshape(Z, kp), z0)
+
+
+def induced_labels(center_labels: jax.Array,
+                   local_assign: jax.Array) -> jax.Array:
+    """Definition 3.3: point i on device z with local cluster s gets label
+    tau(theta_s^(z)). center_labels: (Z, k'), local_assign: (Z, n)."""
+    safe = jnp.clip(local_assign, 0, center_labels.shape[1] - 1)
+    lbl = jnp.take_along_axis(center_labels, safe, axis=1)
+    return jnp.where(local_assign >= 0, lbl, -1)
+
+
+def assign_new_device(new_centers: jax.Array, new_mask: jax.Array,
+                      ref_centers: jax.Array) -> jax.Array:
+    """Theorem 3.2: a device joining after clustering is assigned by
+    nearest-neighbor matching of its local centers against the k retained
+    server centers — O(k' * k) distance computations, no other device
+    involved. new_centers: (k', d); ref_centers: (k, d)."""
+    labels, _ = L.assign_points(new_centers, ref_centers,
+                                point_mask=new_mask)
+    return labels
+
+
+class KFedResult(NamedTuple):
+    agg: KFedAggregate
+    device_centers: jax.Array   # (Z, k', d)
+    center_mask: jax.Array      # (Z, k')
+    local_assign: jax.Array     # (Z, n)
+    labels: jax.Array           # (Z, n) induced clustering, -1 padded
+
+
+def kfed(key: jax.Array, device_data: jax.Array, k: int, k_prime: int, *,
+         k_valid: Optional[jax.Array] = None,
+         point_mask: Optional[jax.Array] = None,
+         **local_kw) -> KFedResult:
+    """End-to-end k-FED (simulation path): vmapped Algorithm 1 over the
+    device axis followed by the server aggregation.
+
+    device_data: (Z, n, d) padded per-device data.
+    """
+    Z = device_data.shape[0]
+    keys = jax.random.split(key, Z)
+    loc = batched_local_kmeans(keys, device_data, k_max=k_prime,
+                               k_valid=k_valid, point_mask=point_mask,
+                               **local_kw)
+    agg = aggregate(loc.centers, loc.center_mask, k)
+    labels = induced_labels(agg.center_labels, loc.assign)
+    return KFedResult(agg, loc.centers, loc.center_mask, loc.assign, labels)
+
+
+def kmeans_cost_of_labels(data: jax.Array, labels: jax.Array,
+                          k: int) -> jax.Array:
+    """phi(T) (eq. 1) of an arbitrary labeling. data: (..., n, d) flattened
+    internally; labels -1 entries ignored."""
+    from repro.kernels import ops
+    x = data.reshape(-1, data.shape[-1]).astype(jnp.float32)
+    lb = labels.reshape(-1)
+    sums, cnt = ops.kmeans_update(x, lb, k)
+    mu = sums / jnp.maximum(cnt, 1.0)[:, None]
+    safe = jnp.clip(lb, 0, k - 1)
+    diff = x - mu[safe]
+    per = jnp.sum(diff * diff, axis=1)
+    return jnp.sum(jnp.where(lb >= 0, per, 0.0))

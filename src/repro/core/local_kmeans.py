@@ -1,0 +1,130 @@
+"""Algorithm 1 — the local (per-device) k-means solve of k-FED.
+
+Faithful to Awasthi & Sheffet (2012) as stated in the paper:
+
+  1. Project the device data A^(z) onto the span of its top-k^(z) right
+     singular vectors.
+  2. Run a standard approximation algorithm on the projected data
+     (k-means++ seeding + a few Lloyd polish steps — any O(1)-approx
+     qualifies for the paper's "10-approximation" role).
+  3. Form the 1/3-margin core sets
+        S_r = { i : ||Ahat_i - nu_r|| <= (1/3) ||Ahat_i - nu_s||  forall s }
+     and re-center on their means theta_r = mu(S_r).
+  4. Run Lloyd steps on the ORIGINAL data until convergence.
+
+Fixed-shape + masked so it vmaps over devices with heterogeneous k^(z)
+(k_valid) and n^(z) (point_mask).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lloyd import kmeans_pp_init, lloyd, update_centers
+from repro.kernels import ops
+from repro.kernels.ref import MASKED_DIST
+
+
+def project_top_k(A: jax.Array, k_valid, k_max: int,
+                  point_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Projection of rows of A onto the top-k_valid right singular subspace.
+
+    Exact SVD path; see ``subspace_project`` for the iterative TPU-friendly
+    variant used at large n*d.
+    """
+    n, d = A.shape
+    Af = A.astype(jnp.float32)
+    Am = Af if point_mask is None else Af * point_mask[:, None]
+    Vt = jnp.linalg.svd(Am, full_matrices=False)[2]  # (min(n,d), d)
+    rows = min(k_max, Vt.shape[0])
+    V = jnp.zeros((k_max, d), jnp.float32).at[:rows].set(Vt[:rows])
+    rmask = jnp.arange(k_max) < jnp.asarray(k_valid, jnp.int32)
+    V = V * rmask[:, None]
+    return ((Af @ V.T) @ V).astype(A.dtype)
+
+
+def subspace_project(A: jax.Array, k_valid, k_max: int,
+                     point_mask: Optional[jax.Array] = None,
+                     iters: int = 12) -> jax.Array:
+    """Block power (subspace) iteration on A^T A — the TPU-native variant
+    of the SVD projection (matmul-only; no LAPACK on-device)."""
+    n, d = A.shape
+    Af = A.astype(jnp.float32)
+    Am = Af if point_mask is None else Af * point_mask[:, None]
+
+    # Deterministic full-rank start.
+    i = jnp.arange(d, dtype=jnp.float32)[:, None]
+    j = jnp.arange(k_max, dtype=jnp.float32)[None, :]
+    V = jnp.cos(0.37 * (i + 1.0) * (j + 1.0)) + 1e-3 * (i - j)
+
+    def body(_, V):
+        W = Am.T @ (Am @ V)
+        Q, _ = jnp.linalg.qr(W)
+        return Q
+
+    V = jax.lax.fori_loop(0, iters, body, jnp.linalg.qr(V)[0])  # (d, k_max)
+    rmask = (jnp.arange(k_max) < jnp.asarray(k_valid, jnp.int32))
+    V = V * rmask[None, :]
+    return ((Af @ V) @ V.T).astype(A.dtype)
+
+
+class LocalKMeansResult(NamedTuple):
+    centers: jax.Array       # (k_max, d)  Theta^(z)
+    center_mask: jax.Array   # (k_max,) bool
+    assign: jax.Array        # (n,) int32 local cluster ids, -1 masked
+    core_counts: jax.Array   # (k_max,) |S_r| from the 1/3-margin step
+
+
+def local_kmeans(key: jax.Array, A: jax.Array, *, k_max: int,
+                 k_valid: Optional[jax.Array] = None,
+                 point_mask: Optional[jax.Array] = None,
+                 approx_iters: int = 8, max_iters: int = 100,
+                 use_subspace_iteration: bool = False) -> LocalKMeansResult:
+    """Algorithm 1 on one device. ``k_max`` static; ``k_valid`` may be a
+    traced per-device k^(z) <= k_max."""
+    n, d = A.shape
+    kv = jnp.asarray(k_max if k_valid is None else k_valid, jnp.int32)
+    pm = jnp.ones((n,), bool) if point_mask is None else point_mask
+
+    # -- Step 1: spectral projection.
+    proj = subspace_project if use_subspace_iteration else project_top_k
+    Ahat = proj(A, kv, k_max, point_mask=pm)
+
+    # -- Step 2: approximation algorithm on projected data.
+    nu, cmask = kmeans_pp_init(key, Ahat, k_max, point_mask=pm, k_valid=kv)
+    nu = lloyd(Ahat, nu, center_mask=cmask, point_mask=pm,
+               max_iters=approx_iters).centers
+
+    # -- Step 3: 1/3-margin core sets (distances, not squared distances).
+    d2 = ops.pairwise_sq_dists(Ahat, nu)
+    d2 = jnp.where(cmask[None, :], d2, MASKED_DIST)
+    dd = jnp.sqrt(d2)
+    r = jnp.argmin(dd, axis=1)
+    dmin = jnp.min(dd, axis=1)
+    second = jnp.min(
+        jnp.where(jax.nn.one_hot(r, k_max, dtype=bool), jnp.inf, dd), axis=1)
+    in_core = (dmin <= second / 3.0) & pm
+    core_assign = jnp.where(in_core, r, -1)
+    theta, core_counts = update_centers(A.astype(jnp.float32), core_assign,
+                                        k_max, nu.astype(jnp.float32))
+
+    # -- Step 4: Lloyd on the original data until convergence.
+    res = lloyd(A.astype(jnp.float32), theta, center_mask=cmask,
+                point_mask=pm, max_iters=max_iters)
+    return LocalKMeansResult(res.centers.astype(A.dtype), cmask,
+                             res.assign, core_counts)
+
+
+def batched_local_kmeans(keys, data, *, k_max: int, k_valid=None,
+                         point_mask=None, **kw):
+    """vmap of Algorithm 1 over the device axis: data (Z, n, d)."""
+    fn = lambda key, A, kv, pm: local_kmeans(
+        key, A, k_max=k_max, k_valid=kv, point_mask=pm, **kw)
+    Z = data.shape[0]
+    if k_valid is None:
+        k_valid = jnp.full((Z,), k_max, jnp.int32)
+    if point_mask is None:
+        point_mask = jnp.ones(data.shape[:2], bool)
+    return jax.vmap(fn)(keys, data, k_valid, point_mask)

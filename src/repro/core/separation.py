@@ -1,0 +1,140 @@
+"""Separation / heterogeneity analysis utilities (Section 3 of the paper).
+
+Implements the deterministic quantities the theory is stated in:
+
+  ||A - C||                  spectral norm of the data-minus-means matrix
+  tilde_Delta_r = sqrt(k) ||A-C|| / sqrt(n_r)      (eq. 2, centralized)
+  Delta_r       = k'      ||A-C|| / sqrt(n_r)      (eq. 4)
+  lambda        = sqrt(k')||A-C|| / sqrt(n_min)    (eq. 4)
+
+plus active/inactive pair detection (Definition 3.4), the active/inactive
+separation requirements (Definition 3.5 / Theorem 3.1), the proximity
+condition (Definition 3.1), and the c_rs spectra used for the paper's
+oracle-clustering construction (Appendix B.2, Figure 5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def spectral_norm(M: jax.Array, iters: int = 100) -> jax.Array:
+    """||M|| by power iteration on M^T M (deterministic start vector)."""
+    Mf = M.astype(jnp.float32)
+    d = Mf.shape[1]
+    v = jnp.ones((d,)) + 1e-3 * jnp.arange(d, dtype=jnp.float32)
+    v = v / jnp.linalg.norm(v)
+
+    def body(_, v):
+        w = Mf.T @ (Mf @ v)
+        return w / jnp.maximum(jnp.linalg.norm(w), 1e-30)
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    return jnp.linalg.norm(Mf @ v)
+
+
+def cluster_means(A: jax.Array, labels: jax.Array, k: int):
+    """Returns (means (k, d), sizes (k,)); labels -1 ignored."""
+    sums, cnt = ops.kmeans_update(A.astype(jnp.float32), labels, k)
+    return sums / jnp.maximum(cnt, 1.0)[:, None], cnt
+
+
+def a_minus_c_norm(A: jax.Array, labels: jax.Array, k: int) -> jax.Array:
+    """||A - C|| where C_i = mu(T_{c(A_i)})."""
+    mu, _ = cluster_means(A, labels, k)
+    safe = jnp.clip(labels, 0, k - 1)
+    C = mu[safe]
+    diff = (A.astype(jnp.float32) - C) * (labels >= 0)[:, None]
+    return spectral_norm(diff)
+
+
+def deltas(norm_ac: jax.Array, sizes: jax.Array, k_prime: int):
+    """Delta_r (eq. 4) for every cluster."""
+    return k_prime * norm_ac / jnp.sqrt(jnp.maximum(sizes, 1.0))
+
+
+def tilde_deltas(norm_ac: jax.Array, sizes: jax.Array, k: int):
+    """tilde_Delta_r (eq. 2), the centralized analogue."""
+    return jnp.sqrt(float(k)) * norm_ac / jnp.sqrt(jnp.maximum(sizes, 1.0))
+
+
+def lam(norm_ac: jax.Array, n_min_device, k_prime: int):
+    """lambda (eq. 4); n_min_device = min_z n^(z)."""
+    return jnp.sqrt(float(k_prime)) * norm_ac / jnp.sqrt(
+        jnp.maximum(jnp.asarray(n_min_device, jnp.float32), 1.0))
+
+
+def active_pairs(presence: jax.Array) -> jax.Array:
+    """Definition 3.4. presence: (Z, k) bool — cluster r has points on z.
+    Returns (k, k) bool, True where some device holds both r and s."""
+    co = jnp.einsum("zr,zs->rs", presence.astype(jnp.float32),
+                    presence.astype(jnp.float32))
+    act = co > 0
+    return act & ~jnp.eye(presence.shape[1], dtype=bool)
+
+
+class SeparationReport(NamedTuple):
+    norm_ac: jax.Array          # ||A - C||
+    sizes: jax.Array            # (k,) n_r
+    means: jax.Array            # (k, d)
+    delta: jax.Array            # (k,) Delta_r
+    lam: jax.Array              # () lambda
+    c_rs: jax.Array             # (k, k) ||mu_r-mu_s|| / (sqrt(m0)(D_r+D_s))
+    active: jax.Array           # (k, k) bool
+    active_satisfied: jax.Array     # fraction of active pairs with c_rs >= c
+    inactive_satisfied: jax.Array   # fraction of inactive pairs meeting
+                                    # ||mu_r-mu_s|| >= 10 sqrt(m0) lambda
+
+
+def separation_report(A: jax.Array, labels: jax.Array, k: int,
+                      presence: jax.Array, n_min_device, *,
+                      k_prime: int, m0: float, c: float) -> SeparationReport:
+    mu, sizes = cluster_means(A, labels, k)
+    norm_ac = a_minus_c_norm(A, labels, k)
+    D = deltas(norm_ac, sizes, k_prime)
+    lm = lam(norm_ac, n_min_device, k_prime)
+
+    dmu = jnp.sqrt(jnp.maximum(ops.pairwise_sq_dists(mu, mu), 0.0))
+    denom = jnp.sqrt(m0) * (D[:, None] + D[None, :])
+    c_rs = dmu / jnp.maximum(denom, 1e-30)
+    act = active_pairs(presence)
+    off = ~jnp.eye(k, dtype=bool)
+    inact = off & ~act
+
+    act_ok = jnp.sum((c_rs >= c) & act) / jnp.maximum(jnp.sum(act), 1)
+    inact_ok = jnp.sum((dmu >= 10.0 * jnp.sqrt(m0) * lm) & inact) / \
+        jnp.maximum(jnp.sum(inact), 1)
+    return SeparationReport(norm_ac, sizes, mu, D, lm, c_rs, act,
+                            act_ok, inact_ok)
+
+
+def proximity_satisfied(A: jax.Array, labels: jax.Array, k: int,
+                        norm_ac=None) -> jax.Array:
+    """Definition 3.1 per point: for i in T_s and every r != s the scalar
+    projection of A_i on the mu_r -> mu_s line must favor mu_s by
+    (1/sqrt(n_r) + 1/sqrt(n_s)) ||A - C||. Returns (n,) bool."""
+    n, d = A.shape
+    Af = A.astype(jnp.float32)
+    mu, sizes = cluster_means(A, labels, k)
+    if norm_ac is None:
+        norm_ac = a_minus_c_norm(A, labels, k)
+    inv_sqrt = 1.0 / jnp.sqrt(jnp.maximum(sizes, 1.0))
+
+    s = jnp.clip(labels, 0, k - 1)                     # (n,)
+    mu_s = mu[s]                                       # (n, d)
+    # For every r: unit vector u = (mu_r - mu_s)/||.||, t = (A_i - mu_s).u
+    diff_centers = mu[None, :, :] - mu_s[:, None, :]   # (n, k, d)
+    sep = jnp.linalg.norm(diff_centers, axis=-1)       # (n, k)
+    u = diff_centers / jnp.maximum(sep, 1e-30)[..., None]
+    t = jnp.einsum("nd,nkd->nk", Af - mu_s, u)         # proj coordinate
+    # ||bar A - mu_s|| = |t|; ||bar A - mu_r|| = |t - sep|
+    margin = jnp.abs(t - sep) - jnp.abs(t)             # >= thresh required
+    thresh = (inv_sqrt[None, :] + inv_sqrt[s][:, None]) * norm_ac
+    same = jax.nn.one_hot(s, k, dtype=bool)
+    ok_rs = (margin >= thresh) | same | (sizes[None, :] == 0)
+    ok = jnp.all(ok_rs, axis=1) & (labels >= 0)
+    return ok

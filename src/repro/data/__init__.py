@@ -1,0 +1,3 @@
+from repro.data.gaussian import (make_mixture_means, structured_devices,  # noqa
+                                 iid_devices)
+from repro.data.partition import partition_structured, partition_iid  # noqa

@@ -1,0 +1,53 @@
+"""Client-side computation: local SGD steps on a device's data, plus the
+summary vectors k-FED clusters (mean embeddings / update sketches)."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ClientUpdate(NamedTuple):
+    params: dict          # updated local params
+    n: jax.Array          # local example count (weight for averaging)
+    loss: jax.Array
+
+
+def local_sgd(loss_fn: Callable, params, data, *, lr: float,
+              epochs: int, point_mask=None) -> ClientUpdate:
+    """``epochs`` full-batch gradient steps on this client's data."""
+    n = (jnp.sum(point_mask) if point_mask is not None
+         else jnp.asarray(data["x"].shape[0], jnp.float32))
+
+    def step(p, _):
+        loss, g = jax.value_and_grad(loss_fn)(p, data)
+        p = jax.tree.map(lambda w, gw: w - lr * gw, p, g)
+        return p, loss
+
+    params, losses = jax.lax.scan(step, params, None, length=epochs)
+    return ClientUpdate(params, n, losses[-1])
+
+
+def summary_vector(embed_fn: Callable, params, data, point_mask=None):
+    """Mean embedding of a client's data — the vector Algorithm 1 runs on
+    when k-FED clusters clients (rather than raw points)."""
+    e = embed_fn(params, data)                       # (n, d)
+    if point_mask is None:
+        return jnp.mean(e, axis=0)
+    w = point_mask.astype(e.dtype)[:, None]
+    return jnp.sum(e * w, axis=0) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def delta_sketch(old_params, new_params, dim: int = 256):
+    """Deterministic low-dim sketch of a model delta (client update
+    direction) — an alternative clustering feature for k-FED."""
+    leaves = [((a - b).astype(jnp.float32)).ravel()
+              for a, b in zip(jax.tree.leaves(new_params),
+                              jax.tree.leaves(old_params))]
+    v = jnp.concatenate(leaves)
+    n = v.shape[0]
+    # Strided bucket sums: cheap, deterministic, linear in the delta.
+    pad = (-n) % dim
+    vb = jnp.pad(v, (0, pad)).reshape(-1, dim)
+    return jnp.sum(vb, axis=0) / jnp.sqrt(jnp.maximum(n, 1))

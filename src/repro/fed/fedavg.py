@@ -1,0 +1,64 @@
+"""FedAvg (McMahan et al., 2017): the aggregation substrate the paper's
+personalization experiment builds on (k-FED clusters first, FedAvg trains
+one model per cluster)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.fed.client import ClientUpdate, local_sgd
+
+
+@dataclass(frozen=True)
+class FedAvgConfig:
+    lr: float = 0.05
+    local_epochs: int = 5
+    rounds: int = 20
+
+
+def make_local_step(loss_fn: Callable, cfg: FedAvgConfig):
+    def run(params, data, point_mask=None):
+        return local_sgd(loss_fn, params, data, lr=cfg.lr,
+                         epochs=cfg.local_epochs, point_mask=point_mask)
+    return run
+
+
+def weighted_average(params_stack, weights):
+    """params_stack: pytree with leading client axis; weights: (Z,)."""
+    w = weights / jnp.maximum(jnp.sum(weights), 1e-9)
+
+    def avg(leaf):
+        return jnp.tensordot(w, leaf.astype(jnp.float32), axes=1).astype(
+            leaf.dtype)
+
+    return jax.tree.map(avg, params_stack)
+
+
+def fedavg_round(loss_fn: Callable, global_params, device_data, cfg:
+                 FedAvgConfig, *, point_mask=None, member_mask=None):
+    """One synchronous round over the (vmapped) client cohort.
+
+    device_data: pytree with leading (Z, ...) client axis.
+    member_mask: (Z,) weights 0/1 — which clients participate (used by the
+    per-cluster FedAvg of the personalization pipeline).
+    Returns (new_global_params, mean_loss).
+    """
+    Z = jax.tree.leaves(device_data)[0].shape[0]
+    local = make_local_step(loss_fn, cfg)
+
+    def per_client(data, pm):
+        return local(global_params, data, pm)
+
+    pm = point_mask if point_mask is not None else \
+        jnp.ones(jax.tree.leaves(device_data)[0].shape[:2], bool)
+    upd: ClientUpdate = jax.vmap(per_client)(device_data, pm)
+    weights = upd.n
+    if member_mask is not None:
+        weights = weights * member_mask
+    new_params = weighted_average(upd.params, weights)
+    mean_loss = jnp.sum(upd.loss * weights) / jnp.maximum(
+        jnp.sum(weights), 1e-9)
+    return new_params, mean_loss

@@ -1,0 +1,86 @@
+"""k-FED + FedAvg personalization (Section 4.2.2, Table 2).
+
+One-shot clustering of client summary vectors assigns every device a
+cluster id; one model per cluster is then trained with FedAvg restricted
+to that cluster's members. After the initial clustering the server only
+ever ships ONE model per device per round (vs IFCA's k)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kfed import kfed
+from repro.fed.fedavg import FedAvgConfig, fedavg_round
+
+
+def cluster_devices(key, features, k: int, k_prime: int = 1):
+    """Cluster devices by their summary vectors. features: (Z, n_feat, d)
+    — with n_feat == 1 this is exactly device-level clustering (k' = 1 per
+    the Table 2 setup); larger n_feat clusters per-device feature sets and
+    majority-votes the device's cluster (the k' = 2 rows)."""
+    res = kfed(key, features, k=k, k_prime=k_prime)
+    lbl = res.labels                      # (Z, n_feat)
+    Z, k_ = lbl.shape[0], k
+    counts = jax.vmap(lambda row: jnp.bincount(
+        jnp.maximum(row, 0), weights=(row >= 0).astype(jnp.float32),
+        length=k_))(lbl)
+    return jnp.argmax(counts, axis=1), res
+
+
+def kfed_personalize(key, loss_fn: Callable, init_params, device_data,
+                     features, k: int, cfg: FedAvgConfig, *,
+                     k_prime: int = 1, point_mask=None,
+                     per_chunk: bool = False):
+    """Full pipeline: one-shot cluster -> per-cluster FedAvg.
+
+    ``per_chunk=False``: majority-vote one cluster per device (the k'=1
+    Table 2 setup). ``per_chunk=True``: the k'>1 advantage the paper
+    highlights — k-FED clusters DATA, so a mixed device trains each of
+    its feature chunks with that chunk's own cluster model (IFCA can only
+    assign whole devices). Chunks are contiguous ``array_split`` shards
+    of the device's points, matching the (Z, n_feat, ·) feature layout.
+
+    Returns (models stacked over k, assignment, history) where
+    assignment is (Z,) for per-device mode and (Z, n_feat) per-chunk.
+    """
+    device_cluster, res = cluster_devices(key, features, k, k_prime)
+    Z = features.shape[0]
+    n_feat = features.shape[1]
+    n = jax.tree.leaves(device_data)[0].shape[1]
+    base_pm = (jnp.ones((Z, n), bool) if point_mask is None
+               else point_mask)
+
+    if per_chunk and n_feat > 1:
+        lbl = res.labels                              # (Z, n_feat)
+        # chunk c covers rows [bounds[c], bounds[c+1]) (array_split)
+        sizes = [(n // n_feat) + (1 if c < n % n_feat else 0)
+                 for c in range(n_feat)]
+        edges = [0]
+        for s in sizes:
+            edges.append(edges[-1] + s)
+        chunk_of = jnp.concatenate([
+            jnp.full((sizes[c],), c, jnp.int32) for c in range(n_feat)])
+        point_lbl = lbl[:, :][jnp.arange(Z)[:, None], chunk_of[None, :]]
+        assignment = lbl
+    else:
+        point_lbl = jnp.broadcast_to(device_cluster[:, None], (Z, n))
+        assignment = device_cluster
+
+    models = []
+    history = []
+    for j in range(k):
+        pm_j = base_pm & (point_lbl == j)
+        member = (pm_j.any(axis=1)).astype(jnp.float32)
+        params = init_params
+        losses = []
+        for _ in range(cfg.rounds):
+            params, l = fedavg_round(loss_fn, params, device_data, cfg,
+                                     point_mask=pm_j,
+                                     member_mask=member)
+            losses.append(float(l))
+        models.append(params)
+        history.append(losses)
+    models = jax.tree.map(lambda *xs: jnp.stack(xs), *models)
+    return models, assignment, history

@@ -1,0 +1,75 @@
+"""Center-update (segment sum) Pallas TPU kernel.
+
+Computes per-cluster sums and counts from an assignment vector by turning
+the scatter into a one-hot matmul per (bn, d) tile, accumulated across the
+sequential TPU grid directly into the (k, d) output block. Padded / invalid
+points carry ``assign == -1`` and match no one-hot column.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def _make_kernel(bn: int, kp: int):
+    def kernel(x_ref, a_ref, sums_ref, cnt_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            sums_ref[...] = jnp.zeros_like(sums_ref)
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+        x = x_ref[...].astype(jnp.float32)
+        a = a_ref[...]
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bn, kp), 1)
+        oh = (a[:, None] == cols).astype(jnp.float32)
+        # one-hot^T @ x on the MXU: (kp, bn) x (bn, d) -> (kp, d)
+        sums_ref[...] += jax.lax.dot_general(
+            oh, x, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        cnt_ref[...] += jnp.sum(oh, axis=0)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn", "interpret"))
+def kmeans_update(x: jax.Array, assign: jax.Array, k: int,
+                  *, bn: int = 256, interpret: bool = True):
+    """Per-cluster sums/counts. x: (n, d), assign: (n,) int32 in [-1, k).
+
+    Returns (sums (k, d) f32, counts (k,) f32). Matches
+    ``ref.kmeans_update`` (without the optional weights argument).
+    """
+    n, d = x.shape
+    np_ = _round_up(n, bn)
+    kp = _round_up(k, 128)
+
+    xp = jnp.zeros((np_, d), x.dtype).at[:n].set(x)
+    ap = jnp.full((np_,), -1, jnp.int32).at[:n].set(assign.astype(jnp.int32))
+
+    sums, cnt = pl.pallas_call(
+        _make_kernel(bn, kp),
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((kp, d), lambda i: (0, 0)),
+            pl.BlockSpec((kp,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kp, d), jnp.float32),
+            jax.ShapeDtypeStruct((kp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, ap)
+    return sums[:k], cnt[:k]

@@ -1,0 +1,75 @@
+"""Jit'd dispatch layer over the Pallas kernels and their jnp oracles.
+
+The framework's numerical code calls these entry points; the backend is
+selected globally (``set_backend``) or per-call. On this CPU container the
+Pallas path runs in interpret mode (the kernels target TPU; interpret mode
+executes the kernel body in Python for correctness validation).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+
+_STATE = {
+    "impl": os.environ.get("REPRO_KERNEL_IMPL", "ref"),  # "ref" | "pallas"
+    "interpret": True,
+}
+
+
+def set_backend(impl: str, interpret: bool = True) -> None:
+    assert impl in ("ref", "pallas"), impl
+    _STATE["impl"] = impl
+    _STATE["interpret"] = interpret
+
+
+def get_backend() -> str:
+    return _STATE["impl"]
+
+
+def pairwise_sq_dists(x: jax.Array, c: jax.Array) -> jax.Array:
+    # Full distance matrix is only used by analysis paths; always jnp.
+    return _ref.pairwise_sq_dists(x, c)
+
+
+def assign_argmin(x: jax.Array, c: jax.Array,
+                  c_mask: Optional[jax.Array] = None):
+    if _STATE["impl"] == "pallas":
+        from repro.kernels.pdist_argmin import pairwise_argmin
+        return pairwise_argmin(x, c, c_mask, interpret=_STATE["interpret"])
+    return _ref.assign_argmin(x, c, c_mask)
+
+
+def kmeans_update(x: jax.Array, assign: jax.Array, k: int,
+                  weights: Optional[jax.Array] = None):
+    if _STATE["impl"] == "pallas" and weights is None:
+        from repro.kernels.kmeans_update import kmeans_update as _pk
+        return _pk(x, assign, k, interpret=_STATE["interpret"])
+    return _ref.kmeans_update(x, assign, k, weights)
+
+
+def swa_decode_attention(q, kw, vw, bias, scale):
+    if _STATE["impl"] == "pallas":
+        from repro.kernels.swa_decode import swa_decode_attention as _pk
+        return _pk(q, kw, vw, bias, scale, interpret=_STATE["interpret"])
+    return _ref.swa_decode_attention(q, kw, vw, bias, scale)
+
+
+def moe_dispatch(x, src, valid):
+    """Queue-order token gather for MoE dispatch (scalar-prefetch DMA
+    gather on TPU)."""
+    if _STATE["impl"] == "pallas":
+        from repro.kernels.moe_dispatch import moe_dispatch as _pd
+        return _pd(x, src, valid, interpret=_STATE["interpret"])
+    return _ref.moe_dispatch(x, src, valid)
+
+
+def moe_combine(ybuf, slot, gates, top_k: int):
+    if _STATE["impl"] == "pallas":
+        from repro.kernels.moe_dispatch import moe_combine as _pc
+        return _pc(ybuf, slot, gates, top_k=top_k,
+                   interpret=_STATE["interpret"])
+    return _ref.moe_combine(ybuf, slot, gates, top_k)

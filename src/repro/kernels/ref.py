@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *reference semantics*: each Pallas kernel in
+``pdist_argmin.py`` / ``kmeans_update.py`` / ``swa_decode.py`` must match
+the corresponding function here (see tests/test_kernels.py, which sweeps
+shapes and dtypes and asserts allclose in interpret mode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MASKED_DIST = 1e30  # additive "infinity" that survives f32 matmul paths
+
+
+def pairwise_sq_dists(x: jax.Array, c: jax.Array) -> jax.Array:
+    """Squared euclidean distances. x: (n, d), c: (k, d) -> (n, k)."""
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)
+    d = x2 - 2.0 * (x @ c.T) + c2[None, :]
+    return jnp.maximum(d, 0.0)
+
+
+def assign_argmin(x: jax.Array, c: jax.Array, c_mask: jax.Array | None = None):
+    """Nearest-center assignment. Returns (idx (n,) int32, min_sq_dist (n,))."""
+    d = pairwise_sq_dists(x, c)
+    if c_mask is not None:
+        d = jnp.where(c_mask[None, :], d, MASKED_DIST)
+    return jnp.argmin(d, axis=1).astype(jnp.int32), jnp.min(d, axis=1)
+
+
+def kmeans_update(x: jax.Array, assign: jax.Array, k: int,
+                  weights: jax.Array | None = None):
+    """Per-cluster sums and counts.
+
+    ``assign`` entries equal to -1 (padded / invalid points) contribute
+    nothing. Returns (sums (k, d) f32, counts (k,) f32).
+    """
+    oh = jax.nn.one_hot(assign, k, dtype=jnp.float32)  # -1 rows are all-zero
+    if weights is not None:
+        oh = oh * weights[:, None].astype(jnp.float32)
+    sums = oh.T @ x.astype(jnp.float32)
+    counts = jnp.sum(oh, axis=0)
+    return sums, counts
+
+
+def swa_decode_attention(q: jax.Array, kw: jax.Array, vw: jax.Array,
+                         bias: jax.Array, scale: float) -> jax.Array:
+    """Sliding-window decode attention (one query token per sequence).
+
+    q: (b, h, dh); kw/vw: (b, W, kvh, dh) -- the *windowed* KV slice;
+    bias: (b, W) additive mask (0 valid / -inf invalid).
+    Returns (b, h, dh).
+    """
+    b, h, dh = q.shape
+    kvh = kw.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, dh).astype(jnp.float32)
+    kf = kw.astype(jnp.float32)
+    vf = vw.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg, kf) * scale
+    s = s + bias[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bwkd->bkgd", p, vf)
+    return o.reshape(b, h, dh).astype(q.dtype)
+
+
+def moe_dispatch(x: jax.Array, src: jax.Array, valid: jax.Array):
+    """Oracle for kernels/moe_dispatch.moe_dispatch: queue slot s pulls
+    token row src[s] (zeroed when invalid). x: (T, d); src/valid: (S,)."""
+    rows = x[jnp.clip(src, 0, x.shape[0] - 1)]
+    return jnp.where(valid[:, None], rows, 0).astype(x.dtype)
+
+
+def moe_combine(ybuf: jax.Array, slot: jax.Array, gates: jax.Array,
+                top_k: int):
+    """Oracle for kernels/moe_dispatch.moe_combine. ybuf: (S, d);
+    slot/gates: (T*top_k,). Returns (T, d) f32."""
+    rows = ybuf[jnp.clip(slot, 0, ybuf.shape[0] - 1)].astype(jnp.float32)
+    w = gates.astype(jnp.float32)[:, None]
+    T = slot.shape[0] // top_k
+    return jnp.sum((rows * w).reshape(T, top_k, -1), axis=1)

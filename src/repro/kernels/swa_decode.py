@@ -1,0 +1,101 @@
+"""Sliding-window flash-decode attention Pallas TPU kernel.
+
+Serving fast path for the long-context decode shapes: one query token per
+sequence attends to a W-token window of the KV cache with GQA head
+grouping. The window is provided pre-sliced (the caller performs the cheap
+``lax.dynamic_slice`` of the ring-buffer cache); the kernel runs an online
+softmax over window blocks so the (h, W) score matrix never materializes in
+HBM. Grid: (batch, kv_head, window_block); scratch keeps the running max,
+denominator and weighted-value accumulator per (group, head_dim) tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def _make_kernel(scale: float):
+    def kernel(q_ref, k_ref, v_ref, b_ref, o_ref, m_ref, l_ref, acc_ref):
+        w = pl.program_id(2)
+        nw = pl.num_programs(2)
+
+        @pl.when(w == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, -1e30)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        q = q_ref[0, 0].astype(jnp.float32)           # (g, dh)
+        kk = k_ref[0, :, 0].astype(jnp.float32)       # (bw, dh)
+        vv = v_ref[0, :, 0].astype(jnp.float32)       # (bw, dh)
+        bias = b_ref[0].astype(jnp.float32)           # (bw,)
+
+        s = jax.lax.dot_general(
+            q, kk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale + bias[None, :]
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])               # (g, bw)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, vv, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+        @pl.when(w == nw - 1)
+        def _finalize():
+            o_ref[0, 0] = (acc_ref[...] /
+                           jnp.maximum(l_ref[...], 1e-30)[:, None]
+                           ).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bw", "interpret"))
+def swa_decode_attention(q: jax.Array, kw: jax.Array, vw: jax.Array,
+                         bias: jax.Array, scale: float,
+                         *, bw: int = 128, interpret: bool = True):
+    """q: (b, h, dh); kw/vw: (b, W, kvh, dh); bias: (b, W) additive mask.
+
+    Returns (b, h, dh). Matches ``ref.swa_decode_attention``.
+    """
+    b, h, dh = q.shape
+    W, kvh = kw.shape[1], kw.shape[2]
+    g = h // kvh
+    wp = _round_up(W, bw)
+
+    qg = q.reshape(b, kvh, g, dh)
+    kp = jnp.zeros((b, wp, kvh, dh), kw.dtype).at[:, :W].set(kw)
+    vp = jnp.zeros((b, wp, kvh, dh), vw.dtype).at[:, :W].set(vw)
+    bp = jnp.full((b, wp), -1e30, jnp.float32).at[:, :W].set(
+        bias.astype(jnp.float32))
+
+    out = pl.pallas_call(
+        _make_kernel(scale),
+        grid=(b, kvh, wp // bw),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda i, hh, w: (i, hh, 0, 0)),
+            pl.BlockSpec((1, bw, 1, dh), lambda i, hh, w: (i, w, hh, 0)),
+            pl.BlockSpec((1, bw, 1, dh), lambda i, hh, w: (i, w, hh, 0)),
+            pl.BlockSpec((1, bw), lambda i, hh, w: (i, w)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda i, hh, w: (i, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kp, vp, bp)
+    return out.reshape(b, h, dh)

@@ -1,0 +1,491 @@
+"""Compiled-HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE — a
+scan-over-layers program reports ~1/L of its true FLOPs (verified on this
+jax/XLA build; see EXPERIMENTS.md §Dry-run methodology). This module
+parses the post-SPMD-partitioning HLO text and computes, per device:
+
+  * flops            — dot ops: 2 * prod(result dims) * prod(contraction
+                       dims), recursively through call/fusion/while with
+                       while TRIP COUNTS extracted from the loop condition
+                       (lax.scan lowers to `compare(iv, constant(L)), LT`).
+                       ``flops_f32`` separately tracks dots with f32(+)
+                       output — the MXU runs those at ~half rate, so the
+                       roofline compute term charges them twice.
+  * bytes accessed   — per top-level instruction: operand + result bytes,
+                       an HBM traffic estimate. Fusions are NOT opaque:
+                       a fused parameter whose only users are
+                       dynamic-slice/gather is charged the slice bytes
+                       (a scan stash read per trip is one layer slice,
+                       not the whole stacked array), an in-place
+                       dynamic-update-slice root aliases its buffer
+                       (charged update-region bytes only).
+  * collective bytes — operand bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute,
+                       trip-multiplied like everything else.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+                "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+                "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+                "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, shape in _shape_list(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    line: str
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instr] = field(default_factory=dict)
+    root: Optional[str] = None
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_INSTR = re.compile(r"^\s*(ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _split_type_op(rest: str) -> Tuple[str, str, str]:
+    """'bf16[2,3]{1,0} dot(%a, %b), attrs' -> (type, opcode, tail)."""
+    rest = rest.strip()
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        type_str, rest2 = rest[:i + 1], rest[i + 1:].strip()
+    else:
+        sp = rest.find(" ")
+        type_str, rest2 = rest[:sp], rest[sp + 1:].strip()
+    m = re.match(r"([\w\-]+)\((.*)$", rest2)
+    if not m:
+        return type_str, "", ""
+    return type_str, m.group(1), m.group(2)
+
+
+def _operands(tail: str) -> List[str]:
+    """Names of %operands in the top-level argument list of ``tail``
+    (which starts right after the opcode's '(')."""
+    depth = 1
+    args = []
+    cur = []
+    for ch in tail:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args.append("".join(cur))
+                break
+        if depth >= 1 and (ch != "," or depth > 1):
+            cur.append(ch)
+        elif ch == "," and depth == 1:
+            args.append("".join(cur))
+            cur = []
+    names = []
+    for a in args:
+        m = re.search(r"%([\w.\-]+)", a)
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(2))
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        is_root, name, rest = bool(m.group(1)), m.group(2), m.group(3)
+        type_str, opcode, tail = _split_type_op(rest)
+        if not opcode:
+            continue
+        ins = Instr(name, type_str, opcode, _operands(tail), line, is_root)
+        cur.instrs[name] = ins
+        if is_root:
+            cur.root = name
+    return comps, entry
+
+
+def _while_parts(line: str) -> Tuple[Optional[str], Optional[str]]:
+    mc = re.search(r"condition=%([\w.\-]+)", line)
+    mb = re.search(r"body=%([\w.\-]+)", line)
+    return (mc.group(1) if mc else None, mb.group(1) if mb else None)
+
+
+def _attr_computations(line: str) -> List[str]:
+    """Names referenced via calls= / branch_computations= attributes."""
+    out = []
+    for m in re.finditer(r"calls=%([\w.\-]+)", line):
+        out.append(m.group(1))
+    for m in re.finditer(r"branch_computations=\{([^}]*)\}", line):
+        out.extend(re.findall(r"%([\w.\-]+)", m.group(1)))
+    return out
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """Extract the scan trip count from a while condition computation:
+    walk from the ROOT compare to its constant operand."""
+    comp = comps.get(cond_name)
+    if comp is None or comp.root is None:
+        return 1
+    consts = []
+
+    def walk(name, depth=0):
+        ins = comp.instrs.get(name)
+        if ins is None or depth > 6:
+            return
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.line)
+            if m:
+                consts.append(int(m.group(1)))
+        if ins.opcode == "fusion":
+            # compare may live in the fused computation; constants are the
+            # fusion's operands in this computation.
+            pass
+        for op in ins.operands:
+            walk(op, depth + 1)
+
+    walk(comp.root)
+    if consts:
+        return max(max(consts), 1)
+    # fallback: any integer constant in the computation
+    for ins in comp.instrs.values():
+        m = re.search(r"s(?:32|64)\[\] constant\((\d+)\)", ins.line)
+        if m:
+            return max(int(m.group(1)), 1)
+    return 1
+
+
+def _dot_flops(ins: Instr, comp: Computation,
+               comps: Dict[str, Computation]) -> float:
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    if not m:
+        return 0.0
+    cdims = [int(d) for d in m.group(1).split(",") if d]
+    lhs = comp.instrs.get(ins.operands[0]) if ins.operands else None
+    if lhs is None:
+        return 0.0
+    shapes = _shape_list(lhs.type_str)
+    if not shapes:
+        return 0.0
+    lhs_shape = shapes[0][1]
+    csize = 1
+    for d in cdims:
+        if d < len(lhs_shape):
+            csize *= lhs_shape[d]
+    out = 1
+    for _, shape in _shape_list(ins.type_str):
+        for d in shape:
+            out *= d
+        break
+    return 2.0 * out * csize
+
+
+def _fusion_call_ref(line: str) -> Optional[str]:
+    m = re.search(r"calls=%([\w.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _fusion_bytes(ins: Instr, comp: Computation,
+                  comps: Dict[str, Computation]) -> float:
+    """HBM bytes for one fusion call: reads of each fused parameter
+    (slice-only parameters charged at slice size; the aliased buffer of an
+    in-place DUS root charged at the update region) + result writes (DUS
+    roots write their update region, everything else its full result)."""
+    fname = _fusion_call_ref(ins.line)
+    fcomp = comps.get(fname) if fname else None
+    if fcomp is None:
+        opnds = sum(_bytes_of(comp.instrs[o].type_str)
+                    for o in ins.operands if o in comp.instrs)
+        return opnds + _bytes_of(ins.type_str)
+
+    # Map parameter index -> Instr inside the fused computation.
+    params: Dict[int, Instr] = {}
+    for fi in fcomp.instrs.values():
+        if fi.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", fi.line)
+            if m:
+                params[int(m.group(1))] = fi
+    users: Dict[str, List[Instr]] = {}
+    for fi in fcomp.instrs.values():
+        for op in fi.operands:
+            users.setdefault(op, []).append(fi)
+
+    def _through_converts(name: str, depth: int = 0) -> List[Instr]:
+        """Users of ``name``, looking through dtype converts/bitcasts (the
+        CPU backend wraps every bf16 value feeding a dot in a convert; the
+        TPU program has no such op, so slice-pattern detection must see
+        through them)."""
+        out: List[Instr] = []
+        for u in users.get(name, []):
+            if u.opcode in ("convert", "bitcast", "copy") and depth < 3:
+                out.extend(_through_converts(u.name, depth + 1))
+            else:
+                out.append(u)
+        return out
+
+    def _unwrap(name: str, depth: int = 0) -> Optional[Instr]:
+        """The instruction behind a chain of converts/bitcasts."""
+        ins2 = fcomp.instrs.get(name)
+        if ins2 is None:
+            return None
+        if ins2.opcode in ("convert", "bitcast", "copy") and depth < 3 \
+                and ins2.operands:
+            return _unwrap(ins2.operands[0], depth + 1)
+        return ins2
+
+    # Which fused values are DUS roots (possibly through a root tuple)?
+    dus_aliased: set = set()   # parameter names aliased in-place by a DUS
+    write_bytes = 0.0
+    root = fcomp.instrs.get(fcomp.root) if fcomp.root else None
+    root_elems: List[Instr] = []
+    if root is not None:
+        if root.opcode == "tuple":
+            root_elems = [fcomp.instrs[o] for o in root.operands
+                          if o in fcomp.instrs]
+        else:
+            root_elems = [root]
+    for re_ins in root_elems:
+        re_base = re_ins
+        if re_ins.opcode in ("convert", "bitcast", "copy") and re_ins.operands:
+            u = _unwrap(re_ins.name)
+            if u is not None:
+                re_base = u
+        if re_base.opcode == "dynamic-update-slice" and re_base.operands:
+            buf = re_base.operands[0]
+            upd = (fcomp.instrs[re_base.operands[1]].type_str
+                   if len(re_base.operands) > 1
+                   and re_base.operands[1] in fcomp.instrs else None)
+            ub = _bytes_of(upd) if upd else _bytes_of(re_base.type_str)
+            write_bytes += ub
+            # In-place if the buffer is a parameter, possibly behind a
+            # convert (a CPU-backend dtype promotion the TPU program
+            # doesn't have — there the DUS aliases its buffer).
+            b = _unwrap(buf)
+            if b is not None and b.opcode == "parameter":
+                dus_aliased.add(b.name)
+        else:
+            write_bytes += _bytes_of(re_base.type_str)
+
+    read_bytes = 0.0
+    for idx, p in params.items():
+        if p.name in dus_aliased:
+            continue                      # aliased in-place buffer
+        pu = _through_converts(p.name)
+        if pu and all(u.opcode in ("dynamic-slice", "gather",
+                                   "dynamic-update-slice")
+                      for u in pu):
+            # slice-reads at slice size; a DUS user means this param is
+            # the update value (full size) or offset (scalar) — charge
+            # its own size capped by the DUS update
+            total = 0.0
+            for u in pu:
+                if u.opcode == "dynamic-update-slice":
+                    total += min(_bytes_of(p.type_str),
+                                 _bytes_of(u.type_str))
+                else:
+                    total += _bytes_of(u.type_str)
+            read_bytes += min(total, _bytes_of(p.type_str))
+        else:
+            read_bytes += _bytes_of(p.type_str)
+    return read_bytes + write_bytes
+
+
+class CostResult(dict):
+    pass
+
+
+def analyze(hlo: str) -> CostResult:
+    comps, entry = parse_module(hlo)
+    if entry is None:
+        # entry is usually the last computation in scheduled modules
+        entry = list(comps)[-1] if comps else None
+    memo: Dict[str, dict] = {}
+
+    def comp_cost(name: str, stack=()) -> dict:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {"flops": 0.0, "flops_f32": 0.0, "bytes": 0.0,
+                    "coll": {}, "coll_bytes": 0.0}
+        comp = comps[name]
+        total = {"flops": 0.0, "flops_f32": 0.0, "bytes": 0.0, "coll": {},
+                 "coll_bytes": 0.0}
+
+        def add(sub, mult=1.0):
+            total["flops"] += mult * sub["flops"]
+            total["flops_f32"] += mult * sub["flops_f32"]
+            total["bytes"] += mult * sub["bytes"]
+            total["coll_bytes"] += mult * sub["coll_bytes"]
+            for k, v in sub["coll"].items():
+                e = total["coll"].setdefault(k, {"count": 0.0, "bytes": 0.0})
+                e["count"] += mult * v["count"]
+                e["bytes"] += mult * v["bytes"]
+
+        for ins in comp.instrs.values():
+            op = ins.opcode
+            # instruction-local bytes: operands + result, with in-place /
+            # slice-op corrections (a dynamic-update-slice writes only the
+            # update region; counting the whole aliased buffer would
+            # inflate scan-stash traffic by the trip count).
+            opnds = [_bytes_of(comp.instrs[o].type_str)
+                     for o in ins.operands if o in comp.instrs]
+            opnd_bytes = sum(opnds)
+            res_bytes = _bytes_of(ins.type_str)
+            tag = ins.name + " " + op
+            if op in ("parameter", "constant", "get-tuple-element",
+                      "tuple", "bitcast"):
+                pass
+            elif op == "fusion":
+                total["bytes"] += _fusion_bytes(ins, comp, comps)
+            elif "dynamic-update-slice" in tag or "scatter" in tag:
+                total["bytes"] += 2.0 * (opnd_bytes - max(opnds, default=0))
+            elif "dynamic-slice" in tag or "gather" in tag:
+                total["bytes"] += 2.0 * res_bytes
+            elif op == "copy":
+                total["bytes"] += res_bytes
+            else:
+                total["bytes"] += opnd_bytes + res_bytes
+            if op == "dot":
+                f = _dot_flops(ins, comp, comps)
+                total["flops"] += f
+                if ins.type_str.split("[")[0] in ("f32", "f64"):
+                    total["flops_f32"] += f
+            base = op.replace("-start", "")
+            if base in COLLECTIVES:
+                e = total["coll"].setdefault(
+                    base, {"count": 0.0, "bytes": 0.0})
+                e["count"] += 1
+                e["bytes"] += opnd_bytes
+                total["coll_bytes"] += opnd_bytes
+            if op == "while":
+                cond, body = _while_parts(ins.line)
+                trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    add(comp_cost(body, stack + (name,)), trips)
+            elif op in ("fusion", "call", "conditional", "async-start"):
+                for ref in _attr_computations(ins.line):
+                    if ref in comps:
+                        sub = comp_cost(ref, stack + (name,))
+                        # fusions: only flops descend (bytes counted at the
+                        # call site above)
+                        add({"flops": sub["flops"],
+                             "flops_f32": sub["flops_f32"], "bytes": 0.0,
+                             "coll": sub["coll"],
+                             "coll_bytes": sub["coll_bytes"]})
+        memo[name] = total
+        return total
+
+    res = comp_cost(entry) if entry else {
+        "flops": 0.0, "flops_f32": 0.0, "bytes": 0.0, "coll": {},
+        "coll_bytes": 0.0}
+    out = CostResult(res)
+    out["n_computations"] = len(comps)
+    return out
+
+
+def top_contributors(hlo: str, n: int = 20, metric: str = "bytes"):
+    """The §Perf profiling view: largest per-instruction contributions to
+    the trip-multiplied byte (or flop) total, with their loop multiplier.
+    Returns [(contribution, multiplier, computation, opcode, name), ...]."""
+    comps, entry = parse_module(hlo)
+    if entry is None:
+        entry = list(comps)[-1] if comps else None
+    items = []
+
+    def walk(name: str, mult: float, stack=()):
+        if name not in comps or name in stack:
+            return
+        comp = comps[name]
+        for ins in comp.instrs.values():
+            op = ins.opcode
+            opnds = [_bytes_of(comp.instrs[o].type_str)
+                     for o in ins.operands if o in comp.instrs]
+            res_bytes = _bytes_of(ins.type_str)
+            tag = ins.name + " " + op
+            if op in ("parameter", "constant", "get-tuple-element",
+                      "tuple", "bitcast"):
+                contrib = 0.0
+            elif op == "fusion":
+                contrib = _fusion_bytes(ins, comp, comps)
+            elif "dynamic-update-slice" in tag or "scatter" in tag:
+                contrib = 2.0 * (sum(opnds) - max(opnds, default=0))
+            elif "dynamic-slice" in tag or "gather" in tag:
+                contrib = 2.0 * res_bytes
+            elif op == "copy":
+                contrib = res_bytes
+            else:
+                contrib = sum(opnds) + res_bytes
+            if metric == "flops":
+                contrib = _dot_flops(ins, comp, comps) if op == "dot" else 0.0
+            if contrib > 0:
+                items.append((contrib * mult, mult, name, op, ins.name))
+            if op == "while":
+                cond, body = _while_parts(ins.line)
+                trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    walk(body, mult * trips, stack + (name,))
+            elif op in ("fusion", "call", "conditional"):
+                if metric == "flops":
+                    for ref in _attr_computations(ins.line):
+                        walk(ref, mult, stack + (name,))
+
+    if entry:
+        walk(entry, 1.0)
+    items.sort(reverse=True)
+    return items[:n]

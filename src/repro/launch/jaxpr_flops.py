@@ -1,0 +1,118 @@
+"""Dtype-aware matmul FLOP counting at the JAXPR level.
+
+Why not from the compiled HLO: the CPU backend (the only one in this
+container) rewrites every bf16 dot to f32, so compiled-HLO dot dtypes say
+nothing about what the TPU would run. The jaxpr preserves the program's
+own dtypes and scan trip counts exactly, so
+
+    compute_term = (flops_bf16 / peak_bf16 + flops_f32 / (peak_bf16 / 2))
+                   / chips
+
+charges genuinely-f32 matmuls (which the MXU runs at ~half rate) twice,
+without being fooled by backend promotion.
+
+Counts are GLOBAL (whole-program): a shard_map body is multiplied by the
+mesh size (SPMD runs it on every device). Divide by chips for per-chip.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _prod(xs) -> float:
+    out = 1.0
+    for x in xs:
+        out *= x
+    return out
+
+
+def _dot_flops(eqn):
+    lhs = eqn.invars[0].aval
+    rhs = eqn.invars[1].aval
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    batch = _prod(lhs.shape[i] for i in lb)
+    contract = _prod(lhs.shape[i] for i in lc)
+    lfree = _prod(lhs.shape[i] for i in range(len(lhs.shape))
+                  if i not in lc and i not in lb)
+    rfree = _prod(rhs.shape[i] for i in range(len(rhs.shape))
+                  if i not in rc and i not in rb)
+    return 2.0 * batch * contract * lfree * rfree, lhs.dtype
+
+
+def _conv_flops(eqn):
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval          # kernel (O, I/g, *spatial) in HLO order
+    groups = eqn.params.get("feature_group_count", 1)
+    k_spatial = _prod(rhs.shape[2:])
+    in_ch = rhs.shape[1]
+    return 2.0 * _prod(out.shape) * in_ch * k_spatial / max(groups, 1), \
+        eqn.invars[0].aval.dtype
+
+
+def _dtype_key(dt) -> str:
+    return "f32" if np.dtype(dt) in (np.dtype("float32"),
+                                     np.dtype("float64")) else "bf16"
+
+
+def _sub_jaxprs(eqn):
+    """(jaxpr, extra_multiplier) pairs for one higher-order eqn."""
+    name = eqn.primitive.name
+    p = eqn.params
+    if name == "scan":
+        return [(p["jaxpr"].jaxpr, float(p["length"]))]
+    if name == "while":
+        # trip count unknown at jaxpr level; fori_loop carries no static
+        # bound here — callers that care pass bounded loops as scan.
+        return [(p["body_jaxpr"].jaxpr, 1.0)]
+    if name == "cond":
+        subs = [(b.jaxpr, 1.0) for b in p["branches"]]
+        return subs[-1:]  # branches are alternatives; take one
+    if name == "shard_map":
+        mesh = p.get("mesh")
+        size = 1.0
+        if mesh is not None:
+            size = float(_prod(mesh.shape.values()))
+        j = p["jaxpr"]
+        return [(getattr(j, "jaxpr", j), size)]
+    for k in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if k in p:
+            j = p[k]
+            return [(getattr(j, "jaxpr", j), 1.0)]
+    return []
+
+
+def flops_by_dtype(closed_jaxpr) -> Dict[str, float]:
+    """{"bf16": ..., "f32": ...} global matmul+conv flops."""
+    out = {"bf16": 0.0, "f32": 0.0}
+
+    def walk(j, mult):
+        for eqn in j.eqns:
+            name = eqn.primitive.name
+            if name == "dot_general":
+                f, dt = _dot_flops(eqn)
+                out[_dtype_key(dt)] += mult * f
+            elif name == "conv_general_dilated":
+                f, dt = _conv_flops(eqn)
+                out[_dtype_key(dt)] += mult * f
+            else:
+                for sub, extra in _sub_jaxprs(eqn):
+                    walk(sub, mult * extra)
+
+    walk(closed_jaxpr.jaxpr, 1.0)
+    return out
+
+
+def trace_flops(fn, *args) -> Dict[str, float]:
+    """flops_by_dtype of fn traced against ShapeDtypeStruct args."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return flops_by_dtype(jaxpr)
+
+
+def effective_flops(fl: Dict[str, float]) -> float:
+    """bf16-equivalent flops: f32 matmuls charged twice (half MXU rate)."""
+    return fl.get("bf16", 0.0) + 2.0 * fl.get("f32", 0.0)

@@ -1,0 +1,114 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Terms per (arch, shape, mesh), all in seconds per step, per chip:
+
+  compute    = HLO_FLOPs            / peak_FLOPs          (197 TF bf16)
+  memory     = HLO_bytes_accessed   / HBM_bandwidth       (819 GB/s)
+  collective = collective_bytes     / ICI_link_bandwidth  (~50 GB/s/link)
+
+``cost_analysis()`` on the compiled executable is already per-device
+(post-SPMD-partitioning). Collective bytes are NOT in cost_analysis: we
+parse the partitioned HLO and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+import numpy as np
+
+HW = {
+    "peak_flops": 197e12,   # TPU v5e bf16 per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "link_bw": 50e9,        # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+                "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+                "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_OP_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|[a-z0-9_]+\[[^\]]*\]\S*)\s+"
+    r"((?:all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?)\(")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: op count and summed operand bytes (per
+    device)."""
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1).replace("-start", "")
+        operand_str = line[m.end():]
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(operand_str):
+            total += _shape_bytes(dt, dims)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += total
+    return dict(stats)
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float) -> Dict[str, float]:
+    compute = flops / HW["peak_flops"]
+    memory = bytes_accessed / HW["hbm_bw"]
+    collective = collective_bytes / HW["link_bw"]
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    terms["total_s"] = max(compute, memory, collective)
+    return terms
+
+
+def model_flops(cfg, shape, n_params: int, active_params: int) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) for training;
+    2 N D for inference steps. D = tokens processed globally."""
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mult = 2.0
+    n = active_params if cfg.moe else n_params
+    return mult * n * tokens
+
+
+def active_param_count(cfg, params_shape) -> int:
+    """Active params = total minus the (1 - top_k/E) share of routed
+    expert weights."""
+    import jax
+    total = sum(int(np.prod(l.shape))
+                for l in jax.tree.leaves(params_shape))
+    if not cfg.moe:
+        return total
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        names = [str(getattr(p, "key", "")) for p in path]
+        if "moe" in names and names[-1] in ("w1", "w2", "w3"):
+            expert += int(np.prod(leaf.shape))
+    frac = cfg.moe.top_k / cfg.moe.n_experts
+    return total - int(expert * (1.0 - frac))

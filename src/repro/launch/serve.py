@@ -1,0 +1,45 @@
+"""Serving entry points: batched prefill + decode step (what the decode
+dry-run shapes lower) and a tiny batched request loop for examples."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import DistCtx
+from repro.models.model import Model
+
+
+def make_serve_step(model: Model, ctx: DistCtx):
+    def serve_step(params, cache, tokens):
+        return model.serve_step(params, cache, tokens, ctx)
+    return serve_step
+
+
+def make_prefill(model: Model, ctx: DistCtx):
+    def prefill(params, batch):
+        return model.prefill(params, batch, ctx)
+    return prefill
+
+
+def generate(model: Model, params, batch, *, steps: int,
+             ctx: DistCtx = None, greedy: bool = True,
+             key=None):
+    """Prefill then decode ``steps`` tokens (single-host examples)."""
+    ctx = ctx or DistCtx.local()
+    model.decode_room = steps + 1
+    prefill = jax.jit(make_prefill(model, ctx))
+    step = jax.jit(make_serve_step(model, ctx))
+    logits, cache = prefill(params, batch)
+    toks = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for i in range(steps):
+        toks.append(tok)
+        logits, cache = step(params, cache, tok)
+        if greedy:
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        else:
+            key, k = jax.random.split(key)
+            tok = jax.random.categorical(k, logits).astype(jnp.int32)
+    return jnp.stack(toks, axis=1)

@@ -1,0 +1,216 @@
+"""Sharding rules: parameter, batch, cache and optimizer-state
+PartitionSpecs for the production mesh.
+
+Conventions (DESIGN.md §6):
+  * "tp"   -> the ``model`` axis on a weight's natural dimension
+              (heads / ffn hidden / experts / vocab).
+  * "fsdp" -> the data axes ("pod","data") on a non-model dimension, for
+              configs with cfg.fsdp (>= ~12B params).
+  * Scanned segment leaves carry a leading layer axis (always unsharded).
+  * Every rule is divisibility-checked against the mesh; a dimension that
+    does not divide falls back to replication (never a lowering error).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import DistCtx
+
+TP = "tp"
+FSDP = "fsdp"
+
+# (path-suffix match) -> per-dim template over the leaf's LAST dims.
+_RULES = [
+    (("attn", "wq"), (FSDP, TP)), (("attn", "wk"), (FSDP, TP)),
+    (("attn", "wv"), (FSDP, TP)), (("attn", "wo"), (TP, FSDP)),
+    (("attn", "bq"), (TP,)), (("attn", "bk"), (TP,)), (("attn", "bv"), (TP,)),
+    (("xattn", "wq"), (FSDP, TP)), (("xattn", "wk"), (FSDP, TP)),
+    (("xattn", "wv"), (FSDP, TP)), (("xattn", "wo"), (TP, FSDP)),
+    (("attn", "wq_a"), (FSDP, None)), (("attn", "wq_b"), (None, TP)),
+    (("attn", "wkv_a"), (FSDP, None)), (("attn", "wk_b"), (None, TP)),
+    (("attn", "wv_b"), (None, TP)),
+    (("ffn", "w1"), (FSDP, TP)), (("ffn", "w3"), (FSDP, TP)),
+    (("ffn", "w2"), (TP, FSDP)), (("ffn", "b1"), (TP,)),
+    (("moe", "router"), (FSDP, None)),
+    (("shared", "w1"), (FSDP, TP)), (("shared", "w3"), (FSDP, TP)),
+    (("shared", "w2"), (TP, FSDP)),
+    (("tm", "wr"), (FSDP, TP)), (("tm", "wk"), (FSDP, TP)),
+    (("tm", "wv"), (FSDP, TP)), (("tm", "wg"), (FSDP, TP)),
+    (("tm", "wo"), (TP, FSDP)), (("tm", "wA"), (FSDP, None)),
+    (("tm", "wB"), (None, TP)), (("tm", "u"), (TP, None)),
+    (("cm", "wk"), (FSDP, TP)), (("cm", "wv"), (TP, FSDP)),
+    (("mix", "in_proj"), (FSDP, None)), (("mix", "out_proj"), (None, FSDP)),
+    # embed: vocab on model only — FSDP'ing the d dim makes the token
+    # gather unpartitionable (XLA falls back to full rematerialization /
+    # replication of the (B,S,d) gather output; observed on deepseek-v3).
+    (("embed",), (TP, None)),
+    (("unembed",), (FSDP, TP)),
+    (("vis_proj",), (FSDP, TP)),
+    (("mtp_proj",), (FSDP, TP)),
+]
+
+
+def _moe_expert_template(cfg, name: str):
+    if cfg.moe and cfg.moe.impl == "alltoall":
+        return (TP, FSDP, None)          # experts on model, d on fsdp
+    if name in ("w1", "w3"):
+        return (None, FSDP, TP)          # (E, d, ff): ff on model
+    return (None, TP, FSDP)              # (E, ff, d)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _resolve(template, shape, mesh, dp_axes, use_fsdp):
+    """Template -> PartitionSpec with divisibility fallbacks, prepending
+    None for any extra leading (scan) dims."""
+    extra = len(shape) - len(template)
+    spec = [None] * extra
+    used_model = False
+    used_dp = False
+    for t, n in zip(template, shape[extra:]):
+        if t == TP and not used_model and n % mesh.shape["model"] == 0:
+            spec.append("model")
+            used_model = True
+        elif (t == FSDP and use_fsdp and not used_dp
+              and n % int(np.prod([mesh.shape[a] for a in dp_axes])) == 0):
+            spec.append(dp_axes)
+            used_dp = True
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def param_specs(params_shape, cfg, mesh, dp_axes: Tuple[str, ...]):
+    """Pytree of PartitionSpec matching an eval_shape(model.init) tree."""
+    def per_leaf(path, leaf):
+        names = _path_names(path)
+        if "moe" in names and names[-1] in ("w1", "w2", "w3"):
+            if (cfg.moe and cfg.moe.impl == "alltoall"
+                    and cfg.moe.ep == "2d"):
+                # 2-D EP: experts sharded over the same minor-first axis
+                # prefix apply_moe selects (model, then data axes inward,
+                # product dividing E) — chip-resident experts, no FSDP
+                # gather, local grads; replicated over any leftover axis.
+                E = leaf.shape[len(leaf.shape) - 3]
+                axes = ["model"]
+                nsh = mesh.shape["model"]
+                for a in reversed(dp_axes):
+                    s = mesh.shape[a]
+                    if nsh * s <= E and E % (nsh * s) == 0:
+                        axes.append(a)
+                        nsh *= s
+                    else:
+                        break
+                axes = tuple(reversed(axes))
+                extra = len(leaf.shape) - 3
+                if E % nsh == 0:
+                    return P(*([None] * extra), axes, None, None)
+                # not divisible even by the model axis alone: fall back.
+            tpl = _moe_expert_template(cfg, names[-1])
+            return _resolve(tpl, leaf.shape, mesh, dp_axes, cfg.fsdp)
+        for suffix, tpl in _RULES:
+            if names[-len(suffix):] == suffix:
+                return _resolve(tpl, leaf.shape, mesh, dp_axes, cfg.fsdp)
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params_shape)
+
+
+def _dp_size(mesh, dp_axes):
+    return int(np.prod([mesh.shape[a] for a in dp_axes]))
+
+
+def batch_specs(batch_shape, mesh, dp_axes):
+    """Inputs: shard the batch dim over the data axes when divisible."""
+    dp = _dp_size(mesh, dp_axes)
+
+    def per_leaf(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % dp == 0 and leaf.shape[0] > 0:
+            return P(*((dp_axes,) + (None,) * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(per_leaf, batch_shape)
+
+
+def cache_specs_tree(cache_shape, mesh, dp_axes):
+    """Decode cache: batch on data axes; if batch doesn't divide (the
+    long_500k B=1 case) the SEQUENCE dim shards over data instead (context
+    parallelism); kv-heads / rwkv heads on ``model`` when divisible."""
+    dp = _dp_size(mesh, dp_axes)
+    tp = mesh.shape["model"]
+
+    def per_leaf(path, leaf):
+        names = _path_names(path)
+        key = names[-1]
+        shape = leaf.shape
+        if key == "len":
+            return P(dp_axes) if shape[0] % dp == 0 else P(None)
+        spec = [None] * len(shape)
+        if key in ("k", "v", "ck", "cv"):          # (L, B, S, KVH, hd)
+            if shape[1] % dp == 0:
+                spec[1] = dp_axes
+            elif shape[2] % dp == 0:
+                spec[2] = dp_axes
+            if shape[3] % tp == 0:
+                spec[3] = "model"
+        elif key in ("latent", "rope"):            # (L, B, S, r)
+            if shape[1] % dp == 0:
+                spec[1] = dp_axes
+            elif shape[2] % dp == 0:
+                spec[2] = dp_axes
+        elif key in ("pos", "cvalid", "shift", "shift2", "conv"):
+            if shape[1] % dp == 0:
+                spec[1] = dp_axes
+        elif key in ("s", "h"):                    # (L, B, H, ...)
+            if shape[1] % dp == 0:
+                spec[1] = dp_axes
+            if shape[2] % tp == 0:
+                spec[2] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, cache_shape)
+
+
+def opt_specs(opt_shape, pspecs):
+    """Optimizer-state specs derived from the parameter specs: adamw m/v
+    mirror the param; adafactor r drops the last dim, c the second-last."""
+    def build(sub, key):
+        def per_leaf(path, leaf):
+            names = _path_names(path)
+            # Walk the param spec tree by the same path minus state keys.
+            node = pspecs
+            for nm in names:
+                if nm in ("m", "v", "f", "r", "c"):
+                    continue
+                node = node[nm] if isinstance(node, dict) else node[int(nm)]
+            spec = tuple(node)
+            last = names[-1]
+            if last == "r":
+                spec = spec[:-1]
+            elif last == "c":
+                spec = spec[:-2] + spec[-1:]
+            if len(spec) != leaf.ndim:
+                spec = (None,) * leaf.ndim
+            return P(*spec)
+
+        return jax.tree_util.tree_map_with_path(per_leaf, sub)
+
+    return build(opt_shape, None)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_ctx(mesh) -> DistCtx:
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    return DistCtx(mesh=mesh, dp=dp, tp="model")

@@ -1,0 +1,90 @@
+"""Training step factory: microbatched grad accumulation + optimizer,
+plus a runnable single-host training driver (examples use it; the dry-run
+lowers the same train_step on the production mesh)."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import DistCtx
+from repro.models.model import Model
+from repro.optim import build_optimizer, clip_by_global_norm
+from repro.optim.optimizers import Optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array
+
+
+def init_state(model: Model, key, optimizer: Optimizer) -> TrainState:
+    params = model.init(key)
+    return TrainState(params, optimizer.init(params),
+                      jnp.zeros((), jnp.int32))
+
+
+def _split_microbatches(batch, n: int):
+    def per(leaf):
+        B = leaf.shape[0]
+        return leaf.reshape((n, B // n) + leaf.shape[1:])
+    return jax.tree.map(per, batch)
+
+
+def make_train_step(model: Model, ctx: DistCtx, optimizer: Optimizer, *,
+                    clip_norm: float = 1.0):
+    cfg = model.cfg
+    mb = max(1, cfg.microbatch)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, ctx)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch):
+        if mb == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            micro = _split_microbatches(batch, mb)
+
+            def acc_step(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mbatch)
+                g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            zeros = jax.tree.map(jnp.zeros_like, state.params)
+            (grads, loss), _ = jax.lax.scan(
+                acc_step, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss / mb
+            metrics = {}
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        params, opt = optimizer.update(grads, state.opt, state.params,
+                                       state.step)
+        out = TrainState(params, opt, state.step + 1)
+        return out, {"loss": loss, "grad_norm": gnorm, **metrics}
+
+    return train_step
+
+
+def train_loop(model: Model, batches, *, key=None, lr: float = 3e-4,
+               steps: int = 100, ctx: DistCtx = None, log_every: int = 10):
+    """Simple single-host loop used by examples/quickstart."""
+    ctx = ctx or DistCtx.local()
+    key = key if key is not None else jax.random.PRNGKey(0)
+    optimizer = build_optimizer(model.cfg.optimizer, lr)
+    state = init_state(model, key, optimizer)
+    step_fn = jax.jit(make_train_step(model, ctx, optimizer))
+    history = []
+    for i, batch in enumerate(batches):
+        if i >= steps:
+            break
+        state, metrics = step_fn(state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            history.append((i, float(metrics["loss"])))
+    return state, history

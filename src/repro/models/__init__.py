@@ -1,0 +1,2 @@
+from repro.models.common import DistCtx  # noqa: F401
+from repro.models.model import Model, build_model  # noqa: F401

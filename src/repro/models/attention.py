@@ -1,0 +1,323 @@
+"""Attention: chunked (flash-style) jnp softmax attention for train/prefill,
+direct cache attention for decode, GQA and MLA variants, full and
+sliding-window (ring-buffer) KV caches.
+
+The chunked path never materializes an (S, S) score matrix: it tiles
+queries in a static Python loop (bounding causal waste — later q-tiles see
+more kv-tiles) and scans kv-tiles with an online softmax, so peak memory is
+O(S * chunk) per head. This is what lets the 32k prefill and 4k train
+shapes fit the dry-run memory analysis; the Pallas ``swa_decode`` kernel is
+the TPU serving fast path validated separately.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import DistCtx, apply_rope, dense_init
+
+
+# --------------------------------------------------------------------------
+# chunked flash attention (train / prefill)
+# --------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    cq: int = 1024, ck: int = 1024,
+                    scale: Optional[float] = None):
+    """q: (B, S, H, Dk); k: (B, S, KVH, Dk); v: (B, S, KVH, Dv).
+
+    Self-attention over a fresh sequence (q and kv positions coincide).
+    Returns (B, S, H, Dv).
+    """
+    B, S, H, Dk = q.shape
+    KVH, Dv = k.shape[2], v.shape[-1]
+    g = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dk)
+
+    cq = min(cq, S)
+    ck = min(ck, S)
+    pad_s = (-S) % cq
+    if pad_s:
+        q = jnp.pad(q, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    Sp = q.shape[1]
+    pad_k = (-S) % ck
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Skp = k.shape[1]
+
+    qg = (q.reshape(B, Sp, KVH, g, Dk).astype(jnp.float32) * scale)
+    outs = []
+    for qi in range(Sp // cq):
+        qb = qg[:, qi * cq:(qi + 1) * cq]              # (B,cq,KVH,g,Dk)
+        q_pos = qi * cq + jnp.arange(cq)
+        # kv range this q-tile can see (static bounds).
+        hi = min(Skp, ((qi + 1) * cq + ck - 1) // ck * ck) if causal else Skp
+        lo = 0
+        if window is not None:
+            lo = max(0, (qi * cq - window) // ck * ck)
+        nk = (hi - lo) // ck
+        kb = k[:, lo:hi].reshape(B, nk, ck, KVH, Dk).transpose(1, 0, 2, 3, 4)
+        vb = v[:, lo:hi].reshape(B, nk, ck, KVH, Dv).transpose(1, 0, 2, 3, 4)
+        kv_base = lo + jnp.arange(nk) * ck
+
+        def step(carry, xs):
+            m, l, acc = carry
+            kc, vc, base = xs
+            s = jnp.einsum("bqhgd,bjhd->bqhgj", qb, kc.astype(jnp.float32))
+            j_pos = base + jnp.arange(ck)
+            allow = j_pos[None, :] < S                      # kv padding
+            if causal:
+                allow = allow & (j_pos[None, :] <= q_pos[:, None])
+            if window is not None:
+                allow = allow & (j_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(allow[None, :, None, None, :], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqhgj,bjhd->bqhgd", p, vc.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, cq, KVH, g), -1e30, jnp.float32),
+                jnp.zeros((B, cq, KVH, g), jnp.float32),
+                jnp.zeros((B, cq, KVH, g, Dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(step, init, (kb, vb, kv_base))
+        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+
+    out = jnp.concatenate(outs, axis=1)[:, :S]
+    return out.reshape(B, S, H, Dv).astype(q.dtype)
+
+
+def plain_attention(q, k, v, *, scale: Optional[float] = None,
+                    kv_mask: Optional[jax.Array] = None):
+    """Unmasked (cross-)attention; kv is short (encoder memory)."""
+    B, S, H, Dk = q.shape
+    KVH = k.shape[2]
+    g = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dk)
+    qg = q.reshape(B, S, KVH, g, Dk).astype(jnp.float32) * scale
+    s = jnp.einsum("bqhgd,bjhd->bqhgj", qg, k.astype(jnp.float32))
+    if kv_mask is not None:
+        s = jnp.where(kv_mask[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgj,bjhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, v.shape[-1]).astype(q.dtype)
+
+
+def decode_attention(q1, K, V, *, kv_valid, scale: Optional[float] = None):
+    """One-token decode against a cache. q1: (B, H, Dk); K/V: (B, S, KVH, D*);
+    kv_valid: (B, S) bool. Returns (B, H, Dv)."""
+    B, H, Dk = q1.shape
+    KVH = K.shape[2]
+    g = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dk)
+    qg = q1.reshape(B, KVH, g, Dk).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, K.astype(jnp.float32))
+    s = jnp.where(kv_valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, V.astype(jnp.float32))
+    return o.reshape(B, H, V.shape[-1]).astype(q1.dtype)
+
+
+# --------------------------------------------------------------------------
+# KV caches (pytrees of arrays; static shapes)
+# --------------------------------------------------------------------------
+
+def init_full_cache(B, S, KVH, hd, dtype, layers: int):
+    return {"k": jnp.zeros((layers, B, S, KVH, hd), dtype),
+            "v": jnp.zeros((layers, B, S, KVH, hd), dtype),
+            "len": jnp.zeros((B,), jnp.int32)}
+
+
+def init_ring_cache(B, W, KVH, hd, dtype, layers: int):
+    return {"k": jnp.zeros((layers, B, W, KVH, hd), dtype),
+            "v": jnp.zeros((layers, B, W, KVH, hd), dtype),
+            "pos": jnp.full((layers, B, W), -1, jnp.int32),
+            "len": jnp.zeros((B,), jnp.int32)}
+
+
+def init_mla_cache(B, S, lora, rope, dtype, layers: int):
+    return {"latent": jnp.zeros((layers, B, S, lora), dtype),
+            "rope": jnp.zeros((layers, B, S, rope), dtype),
+            "len": jnp.zeros((B,), jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# GQA attention block
+# --------------------------------------------------------------------------
+
+def init_gqa(key, cfg, dtype):
+    d, H, KVH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], (d, H * hd), dtype),
+         "wk": dense_init(ks[1], (d, KVH * hd), dtype),
+         "wv": dense_init(ks[2], (d, KVH * hd), dtype),
+         "wo": dense_init(ks[3], (H * hd, d), dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KVH * hd,), dtype)
+        p["bv"] = jnp.zeros((KVH * hd,), dtype)
+    return p
+
+
+def _qkv(p, x, cfg):
+    B, S, _ = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, S, H, hd), k.reshape(B, S, KVH, hd),
+            v.reshape(B, S, KVH, hd))
+
+
+def gqa_self(p, x, cfg, ctx: DistCtx, *, positions=None,
+             window=None, causal=True):
+    """Train/prefill self-attention. x: (B, S, d)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    pos = jnp.arange(S) if positions is None else positions
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    q = ctx.constrain(q, ctx.dp, None, ctx.tp, None)
+    k = ctx.constrain(k, ctx.dp, None, ctx.tp, None)
+    v = ctx.constrain(v, ctx.dp, None, ctx.tp, None)
+    w = window if window is not None else cfg.sliding_window
+    o = flash_attention(q, k, v, causal=causal, window=w,
+                        cq=cfg.attn_chunk, ck=cfg.attn_chunk)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def gqa_decode(p, x1, cache_layer, cfg, ctx: DistCtx, *, lengths):
+    """One-token decode. x1: (B, d); cache_layer holds this layer's k/v
+    (B, S, KVH, hd) (full) or ring buffers (B, W, ...). Returns
+    (out (B, d), updated cache_layer)."""
+    B, d = x1.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k, v = _qkv(p, x1[:, None, :], cfg)
+    pos = lengths  # (B,) absolute position of the new token
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)[:, 0]      # (B,H,hd)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)[:, 0]      # (B,KVH,hd)
+    v = v[:, 0]
+    bidx = jnp.arange(B)
+    if "pos" in cache_layer:  # ring (sliding-window) cache
+        W = cache_layer["k"].shape[1]
+        slot = pos % W
+        K = cache_layer["k"].at[bidx, slot].set(k)
+        V = cache_layer["v"].at[bidx, slot].set(v)
+        PS = cache_layer["pos"].at[bidx, slot].set(pos)
+        valid = PS >= 0
+        o = decode_attention(q, K, V, kv_valid=valid)
+        new_cache = {"k": K, "v": V, "pos": PS}
+    else:
+        K = cache_layer["k"].at[bidx, pos].set(k)
+        V = cache_layer["v"].at[bidx, pos].set(v)
+        S = K.shape[1]
+        valid = jnp.arange(S)[None, :] <= pos[:, None]
+        o = decode_attention(q, K, V, kv_valid=valid)
+        new_cache = {"k": K, "v": V}
+    return o.reshape(B, -1) @ p["wo"], new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA attention block (DeepSeek-V3)
+# --------------------------------------------------------------------------
+
+def init_mla(key, cfg, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, H * qk), dtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_dim), dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wk_b": dense_init(ks[3], (m.kv_lora_rank, H * m.qk_nope_dim), dtype),
+        "wv_b": dense_init(ks[4], (m.kv_lora_rank, H * m.v_dim), dtype),
+        "wo": dense_init(ks[5], (H * m.v_dim, d), dtype),
+    }
+
+
+def _mla_q(p, x, cfg):
+    from repro.models.common import rms_norm
+    B, S, _ = x.shape
+    m, H = cfg.mla, cfg.n_heads
+    q = rms_norm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    return jnp.split(q, [m.qk_nope_dim], axis=-1)  # (qn, qr)
+
+
+def _mla_latent(p, x, cfg):
+    from repro.models.common import rms_norm
+    m = cfg.mla
+    kv = x @ p["wkv_a"]
+    latent, krope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    return rms_norm(latent, p["kv_norm"]), krope
+
+
+def mla_self(p, x, cfg, ctx: DistCtx, *, positions=None):
+    """Train/prefill MLA: up-project latents to per-head K/V and run the
+    chunked flash path (naive form; the absorbed form is decode-only)."""
+    B, S, _ = x.shape
+    m, H = cfg.mla, cfg.n_heads
+    qn, qr = _mla_q(p, x, cfg)
+    latent, krope = _mla_latent(p, x, cfg)
+    pos = jnp.arange(S) if positions is None else positions
+    qr = apply_rope(qr, pos, cfg.rope_theta)
+    krope = apply_rope(krope[:, :, None, :], pos, cfg.rope_theta)
+    kn = (latent @ p["wk_b"]).reshape(B, S, H, m.qk_nope_dim)
+    v = (latent @ p["wv_b"]).reshape(B, S, H, m.v_dim)
+    q = jnp.concatenate([qn, qr], axis=-1)
+    k = jnp.concatenate([kn, jnp.broadcast_to(
+        krope, (B, S, H, m.qk_rope_dim))], axis=-1)
+    q = ctx.constrain(q, ctx.dp, None, ctx.tp, None)
+    k = ctx.constrain(k, ctx.dp, None, ctx.tp, None)
+    v = ctx.constrain(v, ctx.dp, None, ctx.tp, None)
+    o = flash_attention(q, k, v, causal=True,
+                        cq=cfg.attn_chunk, ck=cfg.attn_chunk)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def mla_decode(p, x1, cache_layer, cfg, ctx: DistCtx, *, lengths):
+    """Absorbed-form MLA decode: scores/context live in the compressed
+    latent space; the per-token cache is kv_lora + rope dims (576 for V3).
+    cache_layer: {"latent": (B, S, lora), "rope": (B, S, rope)}."""
+    B, _ = x1.shape
+    m, H = cfg.mla, cfg.n_heads
+    qn, qr = _mla_q(p, x1[:, None, :], cfg)
+    latent1, krope1 = _mla_latent(p, x1[:, None, :], cfg)
+    pos = lengths
+    qr = apply_rope(qr, pos[:, None], cfg.rope_theta)[:, 0]     # (B,H,rope)
+    krope1 = apply_rope(krope1[:, :, None, :], pos[:, None],
+                        cfg.rope_theta)[:, 0, 0]                # (B,rope)
+    qn = qn[:, 0]                                               # (B,H,nope)
+
+    bidx = jnp.arange(B)
+    LC = cache_layer["latent"].at[bidx, pos].set(latent1[:, 0])
+    RC = cache_layer["rope"].at[bidx, pos].set(krope1)
+    S = LC.shape[1]
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+
+    wk_b = p["wk_b"].reshape(m.kv_lora_rank, H, m.qk_nope_dim)
+    wv_b = p["wv_b"].reshape(m.kv_lora_rank, H, m.v_dim)
+    q_abs = jnp.einsum("bhn,lhn->bhl", qn.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    s = (jnp.einsum("bhl,bsl->bhs", q_abs, LC.astype(jnp.float32)) +
+         jnp.einsum("bhr,bsr->bhs", qr.astype(jnp.float32),
+                    RC.astype(jnp.float32))) * scale
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx_l = jnp.einsum("bhs,bsl->bhl", pr, LC.astype(jnp.float32))
+    o = jnp.einsum("bhl,lhv->bhv", ctx_l, wv_b.astype(jnp.float32))
+    o = o.reshape(B, -1).astype(x1.dtype)
+    return o @ p["wo"], {"latent": LC, "rope": RC}

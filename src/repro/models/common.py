@@ -1,0 +1,100 @@
+"""Shared model building blocks: norms, rotary embeddings, initializers,
+and the distribution context threaded through every layer."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class DistCtx:
+    """Distribution context. mesh=None => single-device (smoke tests)."""
+    mesh: Optional[object] = None
+    dp: Tuple[str, ...] = ("data",)   # data-parallel axes (incl. "pod")
+    tp: str = "model"                 # tensor/expert-parallel axis
+
+    @staticmethod
+    def local() -> "DistCtx":
+        return DistCtx()
+
+    def constrain(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    @property
+    def tp_size(self) -> int:
+        return 1 if self.mesh is None else self.mesh.shape[self.tp]
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.dp:
+            n *= self.mesh.shape[a]
+        return n
+
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w + b
+
+
+def apply_norm(kind: str, params, x):
+    if kind == "layernorm":
+        return layer_norm(x, params["w"], params["b"])
+    return rms_norm(x, params["w"])
+
+
+def init_norm(kind: str, d: int, dtype):
+    if kind == "layernorm":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype)}
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) rotated pairwise; positions: broadcastable to
+    x.shape[:-2] + (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                     # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean CE over valid tokens. logits (..., V) f32-upcast."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

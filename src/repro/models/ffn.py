@@ -1,0 +1,38 @@
+"""Feed-forward variants: SwiGLU (llama-family), GeLU (whisper), squared
+ReLU (nemotron-4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import DistCtx, dense_init
+
+
+def init_ffn(key, d: int, d_ff: int, activation: str, dtype):
+    ks = jax.random.split(key, 3)
+    if activation == "swiglu":
+        return {"w1": dense_init(ks[0], (d, d_ff), dtype),
+                "w3": dense_init(ks[1], (d, d_ff), dtype),
+                "w2": dense_init(ks[2], (d_ff, d), dtype)}
+    return {"w1": dense_init(ks[0], (d, d_ff), dtype),
+            "b1": jnp.zeros((d_ff,), dtype),
+            "w2": dense_init(ks[2], (d_ff, d), dtype),
+            "b2": jnp.zeros((d,), dtype)}
+
+
+def _constrain_hidden(ctx: DistCtx, h):
+    """(B, S, ff) or (B, ff): batch on data axes, hidden on model."""
+    spec = (ctx.dp,) + (None,) * (h.ndim - 2) + (ctx.tp,)
+    return ctx.constrain(h, *spec)
+
+
+def apply_ffn(p, x, activation: str, ctx: DistCtx):
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+        return _constrain_hidden(ctx, h) @ p["w2"]
+    h = x @ p["w1"] + p["b1"]
+    if activation == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:  # gelu
+        h = jax.nn.gelu(h)
+    return _constrain_hidden(ctx, h) @ p["w2"] + p["b2"]

@@ -1,0 +1,164 @@
+"""Mamba2 (SSD) blocks for the Zamba2 hybrid (arXiv:2411.15242 uses Mamba2
+backbone blocks + shared attention; SSD per arXiv:2405.21060).
+
+Recurrence per head (scalar decay a_t = exp(A * dt_t), state (P, N)):
+
+    h_t = a_t * h_{t-1} + dt_t * x_t (outer) B_t
+    y_t = C_t . h_t + D * x_t
+
+Paths:
+  * ``ssd_scan``    — exact step recurrence (decode + oracle).
+  * ``ssd_chunked`` — chunkwise parallel: intra-chunk decay matrix
+                      L[t,i] = exp(cum_t - cum_i) is a scalar per head, so
+                      it is computed directly (numerically safe) and the
+                      intra part is two batched matmuls.
+
+State per layer: {"h": (B, H, P, N), "conv": (B, conv_width-1, conv_dim)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import DistCtx, dense_init
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    d_inner = cfg.ssm.expand * d
+    P = cfg.ssm.head_dim
+    H = d_inner // P
+    N = cfg.ssm.state_dim
+    return d, d_inner, H, P, N
+
+
+def init_mamba2(key, cfg, dtype):
+    d, d_inner, H, P, N = _dims(cfg)
+    # xBC projection: x (d_inner) + B (N) + C (N); B/C shared across heads
+    # (mamba2 default n_groups=1).
+    conv_dim = d_inner + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_inner + 2 * N + H), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm.conv_width, conv_dim), dtype,
+                             scale=0.1),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),       # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -1.0, jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d), dtype),
+    }
+
+
+def _split_in(p, x, cfg):
+    d, d_inner, H, P, N = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N],
+                               axis=-1)
+    return z, xbc, dt_raw  # dt_raw: (..., H)
+
+
+def _causal_conv(xbc, conv_state, w, b):
+    """Depthwise causal conv over time. xbc: (B, S, C); conv_state:
+    (B, K-1, C) trailing context from the previous segment."""
+    K = w.shape[0]
+    full = jnp.concatenate([conv_state, xbc], axis=1)
+    out = sum(full[:, i:i + xbc.shape[1]] * w[i] for i in range(K))
+    new_state = full[:, -(K - 1):] if K > 1 else conv_state
+    return jax.nn.silu(out + b), new_state
+
+
+def _gates(p, dt_raw):
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    dt = jnp.clip(dt, 1e-4, 10.0)
+    A = -jnp.exp(jnp.clip(p["A_log"], -8.0, 4.0))
+    loga = jnp.clip(A * dt, -8.0, -1e-6)   # per-step log decay (B,S,H)
+    return dt, loga
+
+
+def ssd_scan(xh, Bv, Cv, dt, loga, D, h0):
+    """Exact recurrence. xh: (B,S,H,P); Bv/Cv: (B,S,N); dt/loga: (B,S,H);
+    h0: (B,H,P,N). Returns (y (B,S,H,P), h_final)."""
+    def step(h, xs):
+        xt, bt, ct, dtt, lat = xs
+        a = jnp.exp(lat)[..., None, None]                  # (B,H,1,1)
+        upd = (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        h = a * h + upd                                    # (B,H,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in
+               (xh.astype(jnp.float32), Bv.astype(jnp.float32),
+                Cv.astype(jnp.float32), dt, loga))
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    return y + D[None, None, :, None] * xh.astype(jnp.float32), h
+
+
+def ssd_chunked(xh, Bv, Cv, dt, loga, D, h0, chunk: int):
+    """Chunkwise-parallel SSD; same contract as ssd_scan."""
+    B, S, H, P = xh.shape
+    N = Bv.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    xf = (dt[..., None] * xh.astype(jnp.float32)).reshape(B, nc, chunk, H, P)
+    bf = Bv.astype(jnp.float32).reshape(B, nc, chunk, N)
+    cf = Cv.astype(jnp.float32).reshape(B, nc, chunk, N)
+    la = loga.reshape(B, nc, chunk, H)
+
+    def chunk_step(h, xs):
+        xc, bc, cc, lac = xs                    # (B,chunk,...)
+        cum = jnp.cumsum(lac, axis=1)           # inclusive (B,chunk,H)
+        ctot = cum[:, -1]                       # (B,H)
+        # Inter-chunk: y_t += e^{cum_t} C_t . h0
+        inter = jnp.einsum("bth,bthp->bthp", jnp.exp(cum),
+                           jnp.einsum("btn,bhpn->bthp", cc, h))
+        # Intra-chunk: L[t,i] = exp(cum_t - cum_i), i <= t (inclusive of i=t
+        # because the scan updates h before the output).
+        Lm = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,t,i,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        scores = jnp.einsum("btn,bin->bti", cc, bc)            # (B,t,i)
+        w = jnp.where(tri[None, :, :, None], Lm, 0.0) * scores[..., None]
+        intra = jnp.einsum("btih,bihp->bthp", w, xc)
+        y = inter + intra
+        # State update: h' = e^{ctot} h + sum_i e^{ctot - cum_i} x_i B_i^T
+        dec = jnp.exp(ctot[:, None] - cum)                     # (B,chunk,H)
+        upd = jnp.einsum("bih,bihp,bin->bhpn", dec, xc, bc)
+        h = jnp.exp(ctot)[..., None, None] * h + upd
+        return h, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xf, bf, cf, la))
+    h, ys = jax.lax.scan(chunk_step, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    return y + D[None, None, :, None] * xh.astype(jnp.float32), h
+
+
+def mamba2_block(p, x, state, cfg, ctx: DistCtx, *, use_chunked=True):
+    """x: (B, S, d); state {"h": (B,H,P,N), "conv": (B,K-1,convdim)}."""
+    from repro.models.common import rms_norm
+    B, S, d = x.shape
+    _, d_inner, H, P, N = _dims(cfg)
+    z, xbc, dt_raw = _split_in(p, x, cfg)
+    xbc, conv_state = _causal_conv(xbc, state["conv"], p["conv_w"],
+                                   p["conv_b"])
+    xin, Bv, Cv = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xh = xin.reshape(B, S, H, P)
+    xh = ctx.constrain(xh, ctx.dp, None, ctx.tp, None)
+    dt, loga = _gates(p, dt_raw)
+    if use_chunked and S % cfg.ssm_chunk == 0 and S > 1:
+        y, h = ssd_chunked(xh, Bv, Cv, dt, loga, p["D"], state["h"],
+                           cfg.ssm_chunk)
+    else:
+        y, h = ssd_scan(xh, Bv, Cv, dt, loga, p["D"], state["h"])
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["out_proj"], {"h": h, "conv": conv_state}
+
+
+def init_mamba_state(B, cfg, dtype, layers: int):
+    d, d_inner, H, P, N = _dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {"h": jnp.zeros((layers, B, H, P, N), jnp.float32),
+            "conv": jnp.zeros((layers, B, cfg.ssm.conv_width - 1, conv_dim),
+                              dtype)}

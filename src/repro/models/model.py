@@ -1,0 +1,324 @@
+"""Public model API: build_model(cfg) -> Model with init / loss / prefill /
+serve_step, uniform across all ten assigned architectures."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import mamba as M
+from repro.models import rwkv as R
+from repro.models.common import (DistCtx, apply_norm, cross_entropy,
+                                 dense_init, init_norm)
+from repro.models.transformer import (SegmentSpec, block_decode, block_seq,
+                                      init_layer, init_segment,
+                                      plan_segments, run_segment,
+                                      run_segment_decode)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.segments = plan_segments(cfg)
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------- init --
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        cfg, dtype = self.cfg, self.dtype
+        ks = jax.random.split(key, 8 + len(self.segments))
+        p: Dict[str, Any] = {
+            "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype),
+            "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+            "segments": tuple(
+                init_segment(ks[2 + i], cfg, spec, dtype)
+                for i, spec in enumerate(self.segments)),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                      dtype)
+        if cfg.family == "hybrid":
+            p["shared_block"] = init_layer(ks[-1], cfg,
+                                           SegmentSpec("attn_ffn", 1), dtype)
+        if cfg.family == "encdec":
+            enc_spec = SegmentSpec("attn_ffn", cfg.encoder.n_layers,
+                                   causal=False)
+            p["enc_segments"] = (init_segment(ks[-2], cfg, enc_spec, dtype),)
+            p["enc_norm"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        if cfg.family == "vlm":
+            p["vis_proj"] = dense_init(ks[-3], (cfg.d_model, cfg.d_model),
+                                       dtype)
+        if cfg.mtp:
+            p["mtp_proj"] = dense_init(ks[-4], (2 * cfg.d_model, cfg.d_model),
+                                       dtype)
+            p["mtp_block"] = init_layer(ks[-5], cfg,
+                                        SegmentSpec("attn_ffn", 1), dtype)
+            p["mtp_norm"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        return p
+
+    # ------------------------------------------------------- common bits --
+    def _unembed(self, p, x, ctx: DistCtx):
+        w = p["embed"].T if self.cfg.tie_embeddings else p["unembed"]
+        logits = x @ w
+        spec = (ctx.dp,) + (None,) * (logits.ndim - 2) + (ctx.tp,)
+        return ctx.constrain(logits, *spec)
+
+    def _encode(self, p, enc_embeds, ctx):
+        cfg = self.cfg
+        spec = SegmentSpec("attn_ffn", cfg.encoder.n_layers, causal=False)
+        x, _, _, _ = run_segment(p["enc_segments"][0], enc_embeds, cfg, ctx,
+                                 spec)
+        return apply_norm(cfg.norm, p["enc_norm"], x)
+
+    def _backbone(self, p, x, ctx, *, states=None, enc_out=None,
+                  want_cache=False):
+        """Runs all segments (+ hybrid shared blocks). Returns
+        (x, aux, new_states, caches, shared_caches)."""
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        if states is None and any(s.kind in ("rwkv", "mamba")
+                                  for s in self.segments):
+            states = self._fresh_states(x.shape[0])
+        new_states, caches, shared_caches = [], [], []
+        for i, spec in enumerate(self.segments):
+            st = states[i] if states is not None else None
+            x, a, ns, cache = run_segment(p["segments"][i], x, cfg, ctx,
+                                          spec, state=st, enc_out=enc_out,
+                                          want_cache=want_cache)
+            aux = aux + a
+            new_states.append(ns)
+            caches.append(cache)
+            if cfg.family == "hybrid":
+                sspec = SegmentSpec("attn_ffn", 1)
+                x, a2, _, scache = block_seq(p["shared_block"], x, cfg, ctx,
+                                             sspec, want_cache=want_cache)
+                aux = aux + a2
+                shared_caches.append(scache)
+        x = apply_norm(cfg.norm, p["final_norm"], x)
+        return x, aux, new_states, caches, shared_caches
+
+    def _embed_inputs(self, p, batch, ctx):
+        """Family-specific input embedding. Returns (x, label_offset)."""
+        cfg = self.cfg
+        tok = p["embed"][batch["tokens"]]
+        if cfg.family == "vlm":
+            vis = batch["patch_embeds"].astype(self.dtype) @ p["vis_proj"]
+            return jnp.concatenate([vis, tok], axis=1), vis.shape[1]
+        return tok, 0
+
+    # -------------------------------------------------------------- loss --
+    def loss(self, p, batch, ctx: DistCtx):
+        """Next-token CE (+ MoE aux, + MTP aux). batch carries "tokens",
+        "labels" (-1 = masked) and family extras ("enc_embeds",
+        "patch_embeds")."""
+        cfg = self.cfg
+        x, n_prefix = self._embed_inputs(p, batch, ctx)
+        x = ctx.constrain(x, ctx.dp, None, None)
+        enc_out = None
+        if cfg.family == "encdec":
+            enc_out = self._encode(p, batch["enc_embeds"].astype(self.dtype),
+                                   ctx)
+        h, aux, _, _, _ = self._backbone(p, x, ctx, enc_out=enc_out)
+        h_text = h[:, n_prefix:]
+        logits = self._unembed(p, h_text, ctx)
+        labels = batch["labels"]
+        mask = labels >= 0
+        ce = cross_entropy(logits, jnp.maximum(labels, 0), mask)
+        metrics = {"ce": ce, "aux": aux}
+        total = ce + aux
+        if cfg.mtp:
+            mtp_ce = self._mtp_loss(p, h_text, batch, ctx)
+            metrics["mtp_ce"] = mtp_ce
+            total = total + 0.3 * mtp_ce
+        return total, metrics
+
+    def _mtp_loss(self, p, h, batch, ctx):
+        """DeepSeek-V3 multi-token prediction: one extra block predicting
+        token t+2 from [h_t ; embed(token_{t+1})]."""
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        nxt = p["embed"][jnp.roll(tokens, -1, axis=1)]
+        z = jnp.concatenate([h, nxt], axis=-1) @ p["mtp_proj"]
+        spec = SegmentSpec("attn_ffn", 1)
+        z, _, _, _ = block_seq(p["mtp_block"], z, cfg, ctx, spec)
+        z = apply_norm(cfg.norm, p["mtp_norm"], z)
+        logits = self._unembed(p, z, ctx)
+        lbl2 = jnp.roll(labels, -1, axis=1)
+        mask = (lbl2 >= 0) & (jnp.arange(lbl2.shape[1]) <
+                              lbl2.shape[1] - 1)[None, :]
+        return cross_entropy(logits, jnp.maximum(lbl2, 0), mask)
+
+    # ----------------------------------------------------------- prefill --
+    def prefill(self, p, batch, ctx: DistCtx):
+        """Full forward building decode caches. Returns (last-token logits,
+        cache)."""
+        cfg = self.cfg
+        x, n_prefix = self._embed_inputs(p, batch, ctx)
+        x = ctx.constrain(x, ctx.dp, None, None)
+        enc_out = None
+        if cfg.family == "encdec":
+            enc_out = self._encode(p, batch["enc_embeds"].astype(self.dtype),
+                                   ctx)
+        h, _, new_states, caches, shared_caches = self._backbone(
+            p, x, ctx, enc_out=enc_out,
+            states=self._fresh_states(x.shape[0]), want_cache=True)
+        logits = self._unembed(p, h[:, -1, :], ctx)
+        cache = self._pack_cache(p, caches, new_states, shared_caches,
+                                 enc_out, x.shape[0], x.shape[1])
+        return logits, cache
+
+    def _fresh_states(self, B):
+        cfg = self.cfg
+        states = []
+        for spec in self.segments:
+            if spec.kind == "rwkv":
+                s = R.init_rwkv_state(B, cfg, self.dtype, spec.n_layers)
+            elif spec.kind == "mamba":
+                s = M.init_mamba_state(B, cfg, self.dtype, spec.n_layers)
+            else:
+                s = None
+            states.append(s)
+        return states
+
+    def _pack_cache(self, p, caches, new_states, shared_caches, enc_out,
+                    B, S):
+        """Convert prefill outputs into the decode cache layout (ring
+        conversion for sliding-window archs happens here)."""
+        cfg = self.cfg
+        out = {"len": jnp.full((B,), S, jnp.int32), "segments": []}
+        room = S + getattr(self, "decode_room", 1)
+        for spec, cache, st in zip(self.segments, caches, new_states):
+            if spec.kind in ("rwkv", "mamba"):
+                out["segments"].append(st)
+                continue
+            if cfg.attn == "mla":
+                lat, rp = cache["latent"], cache["rope"]
+                pad = room - S
+                out["segments"].append({
+                    "latent": jnp.pad(lat, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                    "rope": jnp.pad(rp, ((0, 0), (0, 0), (0, pad), (0, 0)))})
+            elif cfg.sliding_window and room > cfg.sliding_window:
+                W = cfg.sliding_window
+                k, v = cache["k"][:, :, -W:], cache["v"][:, :, -W:]
+                pos = jnp.arange(S - W, S)
+                entry = {"k": k, "v": v,
+                         "pos": jnp.broadcast_to(
+                             pos[None, None, :],
+                             (k.shape[0], B, W)).astype(jnp.int32)}
+                out["segments"].append(entry)
+            else:
+                pad = room - S
+                entry = {"k": jnp.pad(cache["k"],
+                                      ((0, 0), (0, 0), (0, pad), (0, 0),
+                                       (0, 0))),
+                         "v": jnp.pad(cache["v"],
+                                      ((0, 0), (0, 0), (0, pad), (0, 0),
+                                       (0, 0)))}
+                if spec.cross:
+                    entry.update(self._cross_cache(p, enc_out, spec))
+                out["segments"].append(entry)
+        if cfg.family == "hybrid":
+            pad = room - S
+            out["shared"] = [{
+                "k": jnp.pad(c["k"], ((0, 0), (0, pad), (0, 0), (0, 0)))[None],
+                "v": jnp.pad(c["v"], ((0, 0), (0, pad), (0, 0), (0, 0)))[None]}
+                for c in shared_caches]
+        return out
+
+    def _cross_cache(self, p, enc_out, spec):
+        cfg = self.cfg
+        seg = p["segments"][self.segments.index(spec)]
+
+        def per_layer(lp):
+            B, Se, _ = enc_out.shape
+            ck = (enc_out @ lp["xattn"]["wk"]).reshape(B, Se, cfg.n_kv_heads,
+                                                       cfg.hd)
+            cv = (enc_out @ lp["xattn"]["wv"]).reshape(B, Se, cfg.n_kv_heads,
+                                                       cfg.hd)
+            return ck, cv
+
+        ck, cv = jax.vmap(per_layer)(seg)
+        B, Se = enc_out.shape[0], enc_out.shape[1]
+        return {"ck": ck, "cv": cv,
+                "cvalid": jnp.ones((ck.shape[0], B, Se), bool)}
+
+    # -------------------------------------------------------- init_cache --
+    def init_cache(self, B: int, S: int):
+        """Zeroed decode cache with room for S (+1) tokens — this is what
+        the decode dry-run shapes lower against."""
+        cfg, dtype = self.cfg, self.dtype
+        room = S + 1
+        out = {"len": jnp.zeros((B,), jnp.int32), "segments": []}
+        for spec in self.segments:
+            L = spec.n_layers
+            if spec.kind == "rwkv":
+                out["segments"].append(R.init_rwkv_state(B, cfg, dtype, L))
+            elif spec.kind == "mamba":
+                out["segments"].append(M.init_mamba_state(B, cfg, dtype, L))
+            elif cfg.attn == "mla":
+                out["segments"].append(A.init_mla_cache(
+                    B, room, cfg.mla.kv_lora_rank, cfg.mla.qk_rope_dim,
+                    dtype, L))
+                out["segments"][-1].pop("len")
+            elif cfg.sliding_window and room > cfg.sliding_window:
+                c = A.init_ring_cache(B, cfg.sliding_window, cfg.n_kv_heads,
+                                      cfg.hd, dtype, L)
+                c.pop("len")
+                out["segments"].append(c)
+            else:
+                c = A.init_full_cache(B, room, cfg.n_kv_heads, cfg.hd,
+                                      dtype, L)
+                c.pop("len")
+                if spec.cross:
+                    Se = cfg.encoder.n_ctx
+                    c["ck"] = jnp.zeros((L, B, Se, cfg.n_kv_heads, cfg.hd),
+                                        dtype)
+                    c["cv"] = jnp.zeros((L, B, Se, cfg.n_kv_heads, cfg.hd),
+                                        dtype)
+                    c["cvalid"] = jnp.ones((L, B, Se), bool)
+                out["segments"].append(c)
+        if cfg.family == "hybrid":
+            n_groups = len(self.segments)
+            out["shared"] = [
+                {"k": jnp.zeros((1, B, room, cfg.n_kv_heads, cfg.hd), dtype),
+                 "v": jnp.zeros((1, B, room, cfg.n_kv_heads, cfg.hd), dtype)}
+                for _ in range(n_groups)]
+        return out
+
+    # --------------------------------------------------------- serve_step --
+    def serve_step(self, p, cache, tokens, ctx: DistCtx):
+        """One decode step. tokens: (B,). Returns (logits (B, V), cache)."""
+        cfg = self.cfg
+        lengths = cache["len"]
+        x1 = p["embed"][tokens]
+        new_segments = []
+        new_shared = list(cache.get("shared", []))
+        for i, spec in enumerate(self.segments):
+            cs = cache["segments"][i]
+            if spec.kind in ("rwkv", "mamba"):
+                x1, ns = run_segment_decode(p["segments"][i], x1, cfg, ctx,
+                                            spec, state=cs, lengths=lengths)
+            else:
+                x1, ns = run_segment_decode(p["segments"][i], x1, cfg, ctx,
+                                            spec, cache=cs, lengths=lengths)
+            new_segments.append(ns)
+            if cfg.family == "hybrid":
+                sc = cache["shared"][i]
+                x1, nsc = block_decode(p["shared_block"], x1, cfg, ctx,
+                                       SegmentSpec("attn_ffn", 1),
+                                       cache={k: v[0] for k, v in sc.items()},
+                                       lengths=lengths)
+                new_shared[i] = {k: v[None] for k, v in nsc.items()}
+        x1 = apply_norm(cfg.norm, p["final_norm"], x1)
+        logits = self._unembed(p, x1, ctx)
+        new_cache = {"len": lengths + 1, "segments": new_segments}
+        if cfg.family == "hybrid":
+            new_cache["shared"] = new_shared
+        return logits, new_cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

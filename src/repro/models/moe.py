@@ -1,0 +1,316 @@
+"""Mixture-of-Experts layer with top-k token-choice routing.
+
+Dispatch is sort-based and fixed-capacity in both implementations — tokens
+are scatter-packed into per-expert queues of capacity C = ceil(T*k/E*cf),
+processed as one batched matmul over experts, and gathered back (overflow
+tokens drop with zero contribution, standard dropped-token semantics):
+
+  "dense"     — the pack/compute/unpack happens locally under GSPMD (jit).
+                Right for small expert counts (Mixtral E=8), where each
+                expert's FFN hidden dim is tensor-sharded over ``model``.
+
+  "alltoall"  — expert parallelism over the ``model`` mesh axis inside a
+                nested shard_map: tokens are resharded over (data x model),
+                packed, exchanged with one all_to_all so each shard holds
+                only its resident E/tp experts' queues, processed, and
+                returned by the reverse all_to_all (+ a final all_gather
+                over ``model``). This is the DeepSeek-scale path (E=256);
+                the MoE collective bytes in the roofline are exactly these.
+
+Both paths return the switch-style load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import DistCtx, dense_init
+
+
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    d, E, dff = cfg.d_model, m.n_experts, m.d_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype, scale=0.006),
+        "w1": dense_init(ks[1], (E, d, dff), dtype),
+        "w3": dense_init(ks[2], (E, d, dff), dtype),
+        "w2": dense_init(ks[3], (E, dff, d), dtype),
+    }
+    if m.n_shared:
+        from repro.models.ffn import init_ffn
+        p["shared"] = init_ffn(ks[4], d, m.n_shared * dff, "swiglu", dtype)
+    return p
+
+
+def _route(router_w, x2d, m):
+    """Top-k routing. x2d: (T, d). Returns (ids (T,k) int32, gates (T,k)
+    f32 renormalized, aux_loss)."""
+    logits = (x2d @ router_w).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    E = logits.shape[-1]
+    me = jnp.mean(probs, axis=0)
+    choice = jax.nn.one_hot(ids, E, dtype=jnp.float32).sum(1)
+    fe = jnp.mean(choice, axis=0)
+    aux = E * jnp.sum(me * fe)                             # switch LB loss
+    return ids.astype(jnp.int32), gates, aux
+
+
+def _positions_in_expert(flat_e: jax.Array, E: int):
+    """Rank of each routed (token, choice) entry within its expert's queue
+    (deterministic flat order). flat_e: (N,) int32 in [0, E)."""
+    N = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_sorted = jnp.arange(N) - seg_start[sorted_e]
+    return jnp.zeros((N,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+
+
+def _capacity(T: int, m) -> int:
+    return max(1, int(math.ceil(T * m.top_k / m.n_experts *
+                                m.capacity_factor)))
+
+
+def _expert_ffn(w1, w3, w2, xe):
+    """Batched per-expert SwiGLU in the weights' own dtype (bf16 on the
+    production configs — MXU-rate matmuls; §Perf iteration 1 moved this
+    off an explicit f32 upcast that doubled compute and made every expert
+    gradient an f32 tensor)."""
+    xe = xe.astype(w1.dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w1)) * \
+        jnp.einsum("ecd,edf->ecf", xe, w3)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def _pack(x2d, ids, m, C: int):
+    """Gather tokens into (E, C, d) queues. Returns (buf, flat_e, pos_c,
+    keep).
+
+    Gather-based (queue slot (e, c) pulls its source token) rather than
+    scatter-based (token pushes itself into its slot): a d-wide gather
+    costs ~2x the queue bytes where the scatter-add read-modify-writes the
+    whole buffer (§Perf mixtral iteration 3). Only the (T*k,) int32
+    position map is still scattered."""
+    E = m.n_experts
+    flat_e = ids.reshape(-1)                               # (N = T*k,)
+    N = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    seg_end = jnp.searchsorted(sorted_e, jnp.arange(E), side="right")
+    pos_sorted = jnp.arange(N) - seg_start[sorted_e]
+    pos = jnp.zeros((N,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))                      # cheap: int32
+    keep = pos < C
+    pos_c = jnp.clip(pos, 0, C - 1)
+    # slot (e, c) <- token row order[seg_start[e] + c] / top_k
+    slot = seg_start[:, None] + jnp.arange(C)[None, :]     # (E, C)
+    valid = slot < seg_end[:, None]
+    src_entry = jnp.take(order, jnp.clip(slot, 0, N - 1).reshape(-1))
+    src_tok = src_entry // m.top_k                         # (E*C,)
+    from repro.kernels import ops
+    buf = ops.moe_dispatch(x2d, src_tok, valid.reshape(-1)) \
+        .reshape(E, C, x2d.shape[1])
+    return buf, flat_e, pos_c, keep
+
+
+def _unpack(ybuf, flat_e, pos_c, keep, gates, T: int, top_k: int):
+    from repro.kernels import ops
+    C = ybuf.shape[1]
+    slot = flat_e * C + pos_c                              # (T*k,)
+    w = jnp.where(keep, gates.reshape(-1), 0.0)
+    return ops.moe_combine(ybuf.reshape(-1, ybuf.shape[-1]), slot, w,
+                           top_k=top_k)
+
+
+def _local_moe(p, x2d, m):
+    """Pack/compute/unpack with all experts local (GSPMD shards the
+    per-expert FFN hidden dim)."""
+    T, d = x2d.shape
+    C = _capacity(T, m)
+    ids, gates, aux = _route(p["router"], x2d, m)
+    buf, flat_e, pos_c, keep = _pack(x2d, ids, m, C)
+    ye = _expert_ffn(p["w1"], p["w3"], p["w2"], buf)
+    y = _unpack(ye.astype(x2d.dtype), flat_e, pos_c, keep, gates, T, m.top_k)
+    return y.astype(x2d.dtype), aux
+
+
+def _pad_to(E: int, nsh: int) -> int:
+    return ((E + nsh - 1) // nsh) * nsh
+
+
+def _ep_axes_for(E: int, ctx: DistCtx):
+    """Largest minor-first mesh-axis prefix (model, then data axes inward)
+    whose size product divides E. Always includes the model axis."""
+    axes = [ctx.tp]
+    nsh = ctx.mesh.shape[ctx.tp]
+    for a in reversed(tuple(ctx.dp)):
+        s = ctx.mesh.shape[a]
+        if nsh * s <= E and E % (nsh * s) == 0:
+            axes.append(a)
+            nsh *= s
+        else:
+            break
+    return tuple(reversed(axes))   # major -> minor, matches P(...) order
+
+
+def _grid_a2a(send, ep_axes, sizes):
+    """Hierarchical all-to-all over an axis grid. send: (nsh, Q, d) in
+    target-major flat layout (shard s = grid index, axes major->minor).
+    One tiled single-axis a2a per mesh axis (minor/within-row first — the
+    TPU-torus-friendly 2-D dispatch; also avoids the degenerate loopy
+    lowering XLA produces for tuple-axis all_to_all). The block exchange
+    along each axis is an involution, so the return path calls this same
+    function."""
+    if len(ep_axes) == 1:
+        return jax.lax.all_to_all(send, ep_axes[0], split_axis=0,
+                                  concat_axis=0, tiled=True)
+    x = send.reshape(*sizes, *send.shape[1:])
+    for k in reversed(range(len(ep_axes))):
+        x = jax.lax.all_to_all(x, ep_axes[k], split_axis=k, concat_axis=k,
+                               tiled=True)
+    return x.reshape(send.shape)
+
+
+def _alltoall_local(p_local, x_my, m, sizes, ep_axes):
+    """Per-shard body inside shard_map. x_my: (T_my, d); p_local holds this
+    shard's E_pad/nsh resident experts. ``ep_axes``: mesh axis name(s) the
+    experts are sharded over — ("model",) for the baseline tp-EP,
+    (*dp, "model") for 2-D EP where every expert is chip-resident and its
+    gradient never crosses a device boundary. ``sizes``: mesh extent per
+    axis."""
+    T, d = x_my.shape
+    E = m.n_experts
+    nsh = 1
+    for s in sizes:
+        nsh *= s
+    E_pad = _pad_to(E, nsh)
+    E_loc = E_pad // nsh
+    C = _capacity(T, m)
+
+    ids, gates, aux = _route(p_local["router"], x_my, m)
+    buf, flat_e, pos_c, keep = _pack(x_my, ids, m, C)      # (E, C, d)
+    if E_pad > E:
+        buf = jnp.pad(buf, ((0, E_pad - E), (0, 0), (0, 0)))
+    send = buf.reshape(nsh, E_loc * C, d)
+    recv = _grid_a2a(send, ep_axes, sizes)
+    xe = recv.reshape(nsh, E_loc, C, d).transpose(1, 0, 2, 3)
+    xe = xe.reshape(E_loc, nsh * C, d)
+    ye = _expert_ffn(p_local["w1"], p_local["w3"], p_local["w2"], xe)
+    ye = ye.reshape(E_loc, nsh, C, d).transpose(1, 0, 2, 3)
+    back = _grid_a2a(
+        ye.reshape(nsh, E_loc * C, d).astype(x_my.dtype), ep_axes, sizes)
+    ybuf = back.reshape(E_pad, C, d)[:E]
+    y = _unpack(ybuf, flat_e, pos_c, keep, gates, T, m.top_k)
+    return y.astype(x_my.dtype), aux
+
+
+def _dense_shard_map(p, x, m, ctx: DistCtx):
+    """Expert tensor parallelism for small E (Mixtral-class): every data
+    shard dispatches ONLY its own tokens into a local (E, C_loc, d) queue
+    (no cross-shard dispatch exists — each expert's FFN hidden dim is
+    sharded over ``model`` like a dense FFN), and the single collective is
+    the Megatron-style psum of the bf16 layer output. Replaces the naive
+    GSPMD dense path whose global dispatch buffer all-reduced ~30 GB/layer
+    (§Perf mixtral iteration 1). Capacity is per data shard."""
+    B, S, d = x.shape
+
+    def block(xb, pb):
+        x2 = xb.reshape(-1, d)
+        ids, gates, aux = _route(pb["router"], x2, m)
+        C = _capacity(x2.shape[0], m)
+        buf, flat_e, pos_c, keep = _pack(x2, ids, m, C)
+        ye = _expert_ffn(pb["w1"], pb["w3"], pb["w2"], buf)  # partial (ff)
+        y = _unpack(ye, flat_e, pos_c, keep, gates, x2.shape[0], m.top_k)
+        y = jax.lax.psum(y.astype(xb.dtype), ctx.tp)
+        aux = jax.lax.pmean(aux, tuple(ctx.dp) + (ctx.tp,))
+        return y.reshape(xb.shape), aux
+
+    in_specs = (P(ctx.dp, None, None),
+                {"router": P(None, None),
+                 "w1": P(None, None, ctx.tp), "w3": P(None, None, ctx.tp),
+                 "w2": P(None, ctx.tp, None)})
+    y, aux = jax.shard_map(
+        block, mesh=ctx.mesh, in_specs=in_specs,
+        out_specs=(P(ctx.dp, None, None), P()), check_vma=False)(
+            x, {k: p[k] for k in ("router", "w1", "w3", "w2")})
+    return y, jnp.mean(aux)
+
+
+def apply_moe(p, x, cfg, ctx: DistCtx):
+    """x: (B, S, d) -> (y (B, S, d), weighted aux loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    tp = ctx.tp_size
+    dp = ctx.dp_size
+    T_shard = (B * S) // max(dp, 1)
+    use_a2a = (ctx.mesh is not None and m.impl == "alltoall"
+               and B % dp == 0 and T_shard % tp == 0 and T_shard >= tp)
+    use_etp = (ctx.mesh is not None and not use_a2a and B % dp == 0
+               and m.d_expert % max(tp, 1) == 0)
+    if use_etp:
+        y, aux = _dense_shard_map(p, x, m, ctx)
+    elif not use_a2a:
+        y, aux = _local_moe(p, x.reshape(-1, d), m)
+        y = y.reshape(B, S, d)
+    else:
+        if m.ep == "tp":
+            ep_axes = (ctx.tp,)
+        else:
+            # 2-D EP: grow the expert grid from the minor (model) axis
+            # outward, keeping only axes whose product divides E — on a
+            # 512-chip multi-pod mesh with E=256 this selects
+            # (data, model) and leaves experts replicated over "pod"
+            # (padding half the mesh with fake experts costs far more
+            # than a 2-way pod grad reduce; measured in §Perf).
+            ep_axes = _ep_axes_for(m.n_experts, ctx)
+        sizes = tuple(ctx.mesh.shape[a] for a in ep_axes)
+        nsh = 1
+        for s in sizes:
+            nsh *= s
+        E_pad = _pad_to(m.n_experts, nsh)
+
+        def pad_experts(w):
+            if E_pad == m.n_experts:
+                return w
+            return jnp.pad(w, ((0, E_pad - m.n_experts),) + ((0, 0),) *
+                           (w.ndim - 1))
+
+        ep = {"router": p["router"], "w1": pad_experts(p["w1"]),
+              "w3": pad_experts(p["w3"]), "w2": pad_experts(p["w2"])}
+
+        def block(xb, pb):
+            # xb: (B_loc, S, d), replicated across model shards. Slice this
+            # shard's token range (token resharding dp -> dp x tp).
+            Tb = xb.shape[0] * xb.shape[1]
+            T_my = Tb // tp
+            idx = jax.lax.axis_index(ctx.tp)
+            x2 = xb.reshape(Tb, d)
+            x_my = jax.lax.dynamic_slice_in_dim(x2, idx * T_my, T_my, 0)
+            y_my, aux = _alltoall_local(pb, x_my, m, sizes, ep_axes)
+            y_full = jax.lax.all_gather(y_my, ctx.tp, axis=0, tiled=True)
+            aux = jax.lax.pmean(aux, tuple(ctx.dp) + (ctx.tp,))
+            return y_full.reshape(xb.shape), aux
+
+        espec = P(ep_axes if m.ep == "2d" else ctx.tp, None, None)
+        in_specs = (P(ctx.dp, None, None),
+                    {"router": P(None, None), "w1": espec,
+                     "w3": espec, "w2": espec})
+        y, aux = jax.shard_map(
+            block, mesh=ctx.mesh, in_specs=in_specs,
+            out_specs=(P(ctx.dp, None, None), P()),
+            check_vma=False)(x, ep)
+        aux = jnp.mean(aux)
+
+    if m.n_shared:
+        from repro.models.ffn import apply_ffn
+        y = y + apply_ffn(p["shared"], x, "swiglu", ctx)
+    return y, aux * m.router_aux_weight

@@ -1,0 +1,193 @@
+"""RWKV6 ("Finch") blocks: time-mix with data-dependent per-channel decay
+and channel-mix FFN (arXiv:2404.05892).
+
+Two equivalent sequence paths:
+  * ``rwkv6_scan``    — the exact step recurrence (lax.scan over time);
+                        used for decode (O(1) state) and as the oracle.
+  * ``rwkv6_chunked`` — chunkwise-parallel form for training: within a
+                        chunk the decay products are applied via a masked
+                        attention-like matmul in log-space-normalized f32;
+                        across chunks a short scan carries the (H, dh, dh)
+                        state. Validated against the scan path in tests.
+
+State layout per layer: {"s": (B, H, dh, dh), "shift": (B, d), and for the
+channel-mix "shift2": (B, d)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import DistCtx, dense_init
+
+
+def init_rwkv6(key, cfg, dtype):
+    d = cfg.d_model
+    dh = cfg.ssm.head_dim
+    H = d // dh
+    r = cfg.ssm.decay_lora
+    ks = jax.random.split(key, 12)
+    return {
+        # time-mix interpolation vectors (token shift)
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "wr": dense_init(ks[0], (d, d), dtype),
+        "wk": dense_init(ks[1], (d, d), dtype),
+        "wv": dense_init(ks[2], (d, d), dtype),
+        "wg": dense_init(ks[3], (d, d), dtype),
+        "wo": dense_init(ks[4], (d, d), dtype),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -2.0, dtype),
+        "wA": dense_init(ks[5], (d, r), dtype),
+        "wB": dense_init(ks[6], (r, d), dtype, scale=0.01),
+        "u": dense_init(ks[7], (H, dh), dtype, scale=0.1),  # bonus
+        "ln_x": jnp.ones((d,), dtype),                      # group-norm-ish
+    }
+
+
+def init_rwkv_channel_mix(key, cfg, dtype):
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {"mu": jnp.full((d,), 0.5, dtype),
+            "wk": dense_init(ks[0], (d, dff), dtype),
+            "wv": dense_init(ks[1], (dff, d), dtype)}
+
+
+def _token_shift(x, shift_state):
+    """x: (B, S, d); shift_state: (B, d) = last token of previous segment.
+    Returns x shifted right by one along S."""
+    prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def _time_mix_inputs(p, x, shift_state, cfg):
+    B, S, d = x.shape
+    dh = cfg.ssm.head_dim
+    H = d // dh
+    xp = _token_shift(x, shift_state)
+
+    def mix(mu):
+        return x * mu + xp * (1.0 - mu)
+
+    r = (mix(p["mu_r"]) @ p["wr"]).reshape(B, S, H, dh)
+    k = (mix(p["mu_k"]) @ p["wk"]).reshape(B, S, H, dh)
+    v = (mix(p["mu_v"]) @ p["wv"]).reshape(B, S, H, dh)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["wg"])
+    logw = -jnp.exp(jnp.clip(
+        (p["w0"] + jnp.tanh(mix(p["mu_w"]) @ p["wA"]) @ p["wB"])
+        .astype(jnp.float32), -8.0, 1.5))                  # (B,S,d) in (-e^1.5,0)
+    # Clip per-step log-decay to [-4, -1e-4]: keeps the chunked form's
+    # exponent spread bounded (see rwkv6_chunked) and is shared with the
+    # scan oracle so both paths agree exactly.
+    logw = jnp.clip(logw, -4.0, -1e-4).reshape(B, S, H, dh)
+    return r, k, v, g, logw, x[:, -1, :]
+
+
+def rwkv6_scan(r, k, v, logw, u, s0):
+    """Exact recurrence. r/k/v/logw: (B, S, H, dh); u: (H, dh);
+    s0: (B, H, dh, dh). Returns (out (B,S,H,dh), s_final)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs  # (B,H,dh)
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,dh,dh)
+        out = jnp.einsum("bhi,bhij->bhj", rt, s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, w))
+    s, outs = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1), s
+
+
+def rwkv6_chunked(r, k, v, logw, u, s0, chunk: int):
+    """Chunkwise-parallel RWKV6. Same contract as rwkv6_scan."""
+    B, S, H, dh = r.shape
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rf = r.astype(jnp.float32).reshape(B, nc, chunk, H, dh)
+    kf = k.astype(jnp.float32).reshape(B, nc, chunk, H, dh)
+    vf = v.astype(jnp.float32).reshape(B, nc, chunk, H, dh)
+    lw = logw.reshape(B, nc, chunk, H, dh)
+
+    def chunk_step(s, xs):
+        rc, kc, vc, lwc = xs  # (B, chunk, H, dh)
+        # Inclusive / exclusive cumulative log-decay within the chunk.
+        cinc = jnp.cumsum(lwc, axis=1)                      # sum_{tau<=t}
+        cexc = cinc - lwc                                   # sum_{tau<t}
+        ctot = cinc[:, -1:]                                 # (B,1,H,dh)
+        # Inter-chunk: out_t += (r_t * exp(cexc_t)) . s   (exp <= 1)
+        inter = jnp.einsum("bthi,bhij->bthj", rc * jnp.exp(cexc), s)
+        # Intra-chunk strict-lower part:
+        #   score[t,i] = sum_d r_t[d] k_i[d] exp(cexc_t[d] - cinc_i[d]),  i<t.
+        # Factor through the chunk-midpoint decay c_mid so each factor's
+        # exponent is bounded by (chunk/2)*|logw|_max (f32-safe for the
+        # clipped logw and chunk <= 64).
+        c_mid = cinc[:, chunk // 2][:, None]                # (B,1,H,dh)
+        r_t = rc * jnp.exp(cexc - c_mid)
+        k_t = kc * jnp.exp(c_mid - cinc)
+        att = jnp.einsum("bthd,bihd->bhti", r_t, k_t)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        intra = jnp.einsum("bhti,bihd->bthd", att, vc)
+        # Bonus (diagonal) term: r_t . (u * k_t) v_t
+        diag = jnp.einsum("bthd,bthd->bth", rc, u[None, None] * kc)
+        out = inter + intra + diag[..., None] * vc
+        # State update: s' = diag(e^{ctot}) s + sum_i e^{ctot - cinc_i} k_i v_i
+        k_dec = kc * jnp.exp(ctot - cinc)                   # exp <= 1
+        s = jnp.exp(ctot[:, 0])[..., None] * s + jnp.einsum(
+            "bihd,bihe->bhde", k_dec, vc)
+        return s, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, lw))
+    s, outs = jax.lax.scan(chunk_step, s0.astype(jnp.float32), xs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, dh)
+    return out, s
+
+
+def _group_norm(x, w, dh):
+    """Per-head RMS normalization of the time-mix output."""
+    B, S, d = x.shape
+    xh = x.reshape(B, S, d // dh, dh).astype(jnp.float32)
+    var = jnp.mean(xh * xh, axis=-1, keepdims=True)
+    xh = xh * jax.lax.rsqrt(var + 1e-5)
+    return xh.reshape(B, S, d) * w
+
+
+def rwkv6_time_mix(p, x, state, cfg, ctx: DistCtx, *, use_chunked=True):
+    """x: (B, S, d); state: {"s": (B,H,dh,dh), "shift": (B,d)}.
+    Returns (out, new_state)."""
+    B, S, d = x.shape
+    dh = cfg.ssm.head_dim
+    r, k, v, g, logw, last = _time_mix_inputs(p, x, state["shift"], cfg)
+    r = ctx.constrain(r, ctx.dp, None, ctx.tp, None)
+    k = ctx.constrain(k, ctx.dp, None, ctx.tp, None)
+    v = ctx.constrain(v, ctx.dp, None, ctx.tp, None)
+    fn = rwkv6_chunked if (use_chunked and S % cfg.ssm_chunk == 0 and S > 1) \
+        else rwkv6_scan
+    if fn is rwkv6_chunked:
+        o, s = fn(r, k, v, logw, p["u"].astype(jnp.float32), state["s"],
+                  cfg.ssm_chunk)
+    else:
+        o, s = fn(r, k, v, logw, p["u"].astype(jnp.float32), state["s"])
+    o = _group_norm(o.reshape(B, S, d).astype(x.dtype), p["ln_x"], dh)
+    o = (o.astype(x.dtype) * g) @ p["wo"]
+    return o, {"s": s, "shift": last}
+
+
+def rwkv_channel_mix(p, x, shift_state, cfg):
+    xp = _token_shift(x, shift_state)
+    xk = x * p["mu"] + xp * (1.0 - p["mu"])
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return h @ p["wv"], x[:, -1, :]
+
+
+def init_rwkv_state(B, cfg, dtype, layers: int):
+    d = cfg.d_model
+    dh = cfg.ssm.head_dim
+    H = d // dh
+    return {"s": jnp.zeros((layers, B, H, dh, dh), jnp.float32),
+            "shift": jnp.zeros((layers, B, d), dtype),
+            "shift2": jnp.zeros((layers, B, d), dtype)}

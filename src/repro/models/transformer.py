@@ -1,0 +1,259 @@
+"""Model assembly: layer blocks -> scanned segments -> full architectures.
+
+A model is a sequence of homogeneous SEGMENTS; each segment's per-layer
+parameters are stacked along a leading axis and driven by ``lax.scan`` so
+HLO size is O(1) in depth (61-layer DeepSeek lowers as fast as 2 layers).
+Heterogeneous stacking (DeepSeek's dense-then-MoE, Zamba2's shared
+attention every N Mamba blocks, Whisper's encoder/decoder) is expressed as
+multiple segments joined by a static Python loop.
+
+Supported layer kinds:
+  attn_ffn   (gqa|mla attention) + (dense ffn | moe)
+  rwkv       RWKV6 time-mix + channel-mix
+  mamba      Mamba2 SSD block
+
+Modality frontends are STUBS per the assignment: whisper consumes
+precomputed audio-frame embeddings, internvl consumes projected patch
+embeddings (``input_specs`` provides them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import mamba as M
+from repro.models import moe as MoE
+from repro.models import rwkv as R
+from repro.models.common import (DistCtx, apply_norm, cross_entropy,
+                                 dense_init, init_norm)
+
+
+@dataclass(frozen=True)
+class SegmentSpec:
+    kind: str                 # attn_ffn | rwkv | mamba
+    n_layers: int
+    moe: bool = False
+    causal: bool = True
+    cross: bool = False       # decoder cross-attention (enc-dec)
+
+
+def plan_segments(cfg: ModelConfig):
+    if cfg.family == "ssm" and cfg.ssm.kind == "rwkv6":
+        return [SegmentSpec("rwkv", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        # Zamba2: groups of mamba blocks, a shared (weight-tied) attn block
+        # applied after each group (handled outside the segment scan).
+        g = cfg.hybrid_attn_every
+        segs = [SegmentSpec("mamba", g) for _ in range(cfg.n_layers // g)]
+        if cfg.n_layers % g:
+            segs.append(SegmentSpec("mamba", cfg.n_layers % g))
+        return segs
+    if cfg.family == "moe":
+        segs = []
+        if cfg.n_dense_layers:
+            segs.append(SegmentSpec("attn_ffn", cfg.n_dense_layers))
+        segs.append(SegmentSpec("attn_ffn", cfg.n_layers - cfg.n_dense_layers,
+                                moe=True))
+        return segs
+    if cfg.family == "encdec":
+        return [SegmentSpec("attn_ffn", cfg.n_layers, cross=True)]
+    return [SegmentSpec("attn_ffn", cfg.n_layers)]
+
+
+# --------------------------------------------------------------------------
+# per-layer init
+# --------------------------------------------------------------------------
+
+def _init_attn(key, cfg, dtype):
+    if cfg.attn == "mla":
+        return A.init_mla(key, cfg, dtype)
+    return A.init_gqa(key, cfg, dtype)
+
+
+def init_layer(key, cfg: ModelConfig, spec: SegmentSpec, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    if spec.kind == "rwkv":
+        return {"ln1": init_norm(cfg.norm, d, dtype),
+                "tm": R.init_rwkv6(ks[0], cfg, dtype),
+                "ln2": init_norm(cfg.norm, d, dtype),
+                "cm": R.init_rwkv_channel_mix(ks[1], cfg, dtype)}
+    if spec.kind == "mamba":
+        return {"ln1": init_norm(cfg.norm, d, dtype),
+                "mix": M.init_mamba2(ks[0], cfg, dtype)}
+    p = {"ln1": init_norm(cfg.norm, d, dtype),
+         "attn": _init_attn(ks[0], cfg, dtype),
+         "ln2": init_norm(cfg.norm, d, dtype)}
+    if spec.moe:
+        p["moe"] = MoE.init_moe(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = F.init_ffn(ks[1], d, cfg.d_ff, cfg.activation, dtype)
+    if spec.cross:
+        p["ln_x"] = init_norm(cfg.norm, d, dtype)
+        p["xattn"] = A.init_gqa(ks[2], cfg, dtype)
+    return p
+
+
+def init_segment(key, cfg, spec: SegmentSpec, dtype):
+    keys = jax.random.split(key, spec.n_layers)
+    return jax.vmap(lambda k: init_layer(k, cfg, spec, dtype))(keys)
+
+
+# --------------------------------------------------------------------------
+# per-layer forward (training / prefill: full sequences)
+# --------------------------------------------------------------------------
+
+def block_seq(lp, x, cfg, ctx, spec: SegmentSpec, *, state=None,
+              enc_out=None, want_cache=False):
+    """One layer over a full sequence. Returns (x, aux, new_state, cache)."""
+    if cfg.seq_shard and x.shape[1] % max(ctx.tp_size, 1) == 0:
+        # sequence parallelism: the residual stream (and with it every
+        # norm / residual-add / stash) lives sequence-sharded over the
+        # model axis; SPMD inserts all-gather on entry to attention and
+        # reduce-scatter after the output projections.
+        x = ctx.constrain(x, ctx.dp, ctx.tp, None)
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    new_state = None
+    if spec.kind == "rwkv":
+        h = apply_norm(cfg.norm, lp["ln1"], x)
+        o, s_tm = R.rwkv6_time_mix(lp["tm"], h, {"s": state["s"],
+                                                 "shift": state["shift"]},
+                                   cfg, ctx)
+        x = x + o
+        h = apply_norm(cfg.norm, lp["ln2"], x)
+        o, shift2 = R.rwkv_channel_mix(lp["cm"], h, state["shift2"], cfg)
+        x = x + o
+        new_state = {"s": s_tm["s"], "shift": s_tm["shift"],
+                     "shift2": shift2}
+        return x, aux, new_state, cache
+    if spec.kind == "mamba":
+        h = apply_norm(cfg.norm, lp["ln1"], x)
+        o, new_state = M.mamba2_block(lp["mix"], h, state, cfg, ctx)
+        return x + o, aux, new_state, cache
+    # attn_ffn
+    h = apply_norm(cfg.norm, lp["ln1"], x)
+    if cfg.attn == "mla":
+        o = A.mla_self(lp["attn"], h, cfg, ctx)
+        if want_cache:
+            latent, krope = A._mla_latent(lp["attn"], h, cfg)
+            pos = jnp.arange(h.shape[1])
+            krope = A.apply_rope(krope[:, :, None, :], pos,
+                                 cfg.rope_theta)[:, :, 0]
+            cache = {"latent": latent, "rope": krope}
+    else:
+        o = A.gqa_self(lp["attn"], h, cfg, ctx, causal=spec.causal)
+        if want_cache:
+            q, k, v = A._qkv(lp["attn"], h, cfg)
+            pos = jnp.arange(h.shape[1])
+            k = A.apply_rope(k, pos, cfg.rope_theta)
+            cache = {"k": k, "v": v}
+    x = x + o
+    if spec.cross and enc_out is not None:
+        h = apply_norm(cfg.norm, lp["ln_x"], x)
+        q, _, _ = A._qkv(lp["xattn"], h, cfg)
+        ek = (enc_out @ lp["xattn"]["wk"]).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, cfg.hd)
+        ev = (enc_out @ lp["xattn"]["wv"]).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, cfg.hd)
+        o = A.plain_attention(q, ek, ev).reshape(x.shape[0], x.shape[1], -1)
+        x = x + o @ lp["xattn"]["wo"]
+    h = apply_norm(cfg.norm, lp["ln2"], x)
+    if spec.moe:
+        y, aux = MoE.apply_moe(lp["moe"], h, cfg, ctx)
+    else:
+        y = F.apply_ffn(lp["ffn"], h, cfg.activation, ctx)
+    return x + y, aux, new_state, cache
+
+
+def run_segment(seg_params, x, cfg, ctx, spec: SegmentSpec, *, state=None,
+                enc_out=None, want_cache=False):
+    """Scan a segment over its stacked layers."""
+    def body(carry, inp):
+        x, aux = carry
+        lp, st = inp if state is not None else (inp, None)
+        x2, a, new_state, cache = block_seq(lp, x, cfg, ctx, spec,
+                                            state=st, enc_out=enc_out,
+                                            want_cache=want_cache)
+        ys = (new_state, cache)
+        return (x2, aux + a), ys
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    xs = (seg_params, state) if state is not None else seg_params
+    (x, aux), (new_states, caches) = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux, new_states, caches
+
+
+# --------------------------------------------------------------------------
+# per-layer forward (decode: one token)
+# --------------------------------------------------------------------------
+
+def block_decode(lp, x1, cfg, ctx, spec: SegmentSpec, *, cache=None,
+                 state=None, lengths=None):
+    """One layer, one token. Returns (x1, new_cache_or_state). Cross-attn
+    K/V ("ck"/"cv"/"cvalid", precomputed at prefill) ride along in the
+    per-layer cache."""
+    if spec.kind == "rwkv":
+        h = apply_norm(cfg.norm, lp["ln1"], x1[:, None, :])
+        o, s_tm = R.rwkv6_time_mix(lp["tm"], h, {"s": state["s"],
+                                                 "shift": state["shift"]},
+                                   cfg, ctx, use_chunked=False)
+        x1 = x1 + o[:, 0]
+        h = apply_norm(cfg.norm, lp["ln2"], x1[:, None, :])
+        o, shift2 = R.rwkv_channel_mix(lp["cm"], h, state["shift2"], cfg)
+        x1 = x1 + o[:, 0]
+        return x1, {"s": s_tm["s"], "shift": s_tm["shift"], "shift2": shift2}
+    if spec.kind == "mamba":
+        h = apply_norm(cfg.norm, lp["ln1"], x1[:, None, :])
+        o, ns = M.mamba2_block(lp["mix"], h, state, cfg, ctx,
+                               use_chunked=False)
+        return x1 + o[:, 0], ns
+    h = apply_norm(cfg.norm, lp["ln1"], x1)
+    self_cache = {k: v for k, v in cache.items()
+                  if k not in ("ck", "cv", "cvalid")}
+    if cfg.attn == "mla":
+        o, nc = A.mla_decode(lp["attn"], h, self_cache, cfg, ctx,
+                             lengths=lengths)
+    else:
+        o, nc = A.gqa_decode(lp["attn"], h, self_cache, cfg, ctx,
+                             lengths=lengths)
+    x1 = x1 + o
+    if spec.cross and "ck" in cache:
+        h = apply_norm(cfg.norm, lp["ln_x"], x1)
+        q = (h @ lp["xattn"]["wq"]).reshape(x1.shape[0], cfg.n_heads, cfg.hd)
+        o = A.decode_attention(q, cache["ck"], cache["cv"],
+                               kv_valid=cache["cvalid"])
+        x1 = x1 + o.reshape(x1.shape[0], -1) @ lp["xattn"]["wo"]
+        nc = {**nc, "ck": cache["ck"], "cv": cache["cv"],
+              "cvalid": cache["cvalid"]}
+    h = apply_norm(cfg.norm, lp["ln2"], x1)
+    if spec.moe:
+        y, _ = MoE.apply_moe(lp["moe"], h[:, None, :], cfg, ctx)
+        y = y[:, 0]
+    else:
+        y = F.apply_ffn(lp["ffn"], h, cfg.activation, ctx)
+    return x1 + y, nc
+
+
+def run_segment_decode(seg_params, x1, cfg, ctx, spec: SegmentSpec, *,
+                       cache=None, state=None, lengths=None):
+    def body(x1, inp):
+        lp, cs = inp
+        if spec.kind in ("rwkv", "mamba"):
+            x1, ns = block_decode(lp, x1, cfg, ctx, spec, state=cs,
+                                  lengths=lengths)
+        else:
+            x1, ns = block_decode(lp, x1, cfg, ctx, spec, cache=cs,
+                                  lengths=lengths)
+        return x1, ns
+
+    xs = cache if cache is not None else state
+    x1, new = jax.lax.scan(body, x1, (seg_params, xs))
+    return x1, new

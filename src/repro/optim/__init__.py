@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adamw,  # noqa
+                                    build_optimizer, clip_by_global_norm,
+                                    sgd)
+from repro.optim.schedules import (constant, cosine_decay,  # noqa
+                                   warmup_cosine)

@@ -1,0 +1,156 @@
+"""Optimizers (functional, optax-style, built from scratch — optax is not
+vendored here).
+
+Adafactor (factored second moment) is what makes the 671B config fit
+16 GB/chip: full-matrix Adam moments would add 8 bytes/param (5.4 TB for
+DeepSeek-V3); the factored row/col statistics add O(rows+cols).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable   # (grads, state, params, step) -> (new_params, state)
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [jnp.sum(g.astype(jnp.float32) ** 2)
+              for g in jax.tree.leaves(grads)]
+    gn = jnp.sqrt(sum(leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def sgd(lr: Schedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step):
+        lrt = _lr_at(lr, step)
+        if momentum == 0.0:
+            new = jax.tree.map(
+                lambda p, g: p - (lrt * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new, state
+        m = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                         state["m"], grads)
+        new = jax.tree.map(
+            lambda p, mm: p - (lrt * mm.astype(jnp.float32)).astype(p.dtype),
+            params, m)
+        return new, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lrt = _lr_at(lr, step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lrt * u).astype(p.dtype), m, v
+
+        lp, treedef = jax.tree.flatten(params)
+        lg = treedef.flatten_up_to(grads)
+        lm = treedef.flatten_up_to(state["m"])
+        lv = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(lp, lg, lm, lv)]
+        new = treedef.unflatten([o[0] for o in out])
+        m = treedef.unflatten([o[1] for o in out])
+        v = treedef.unflatten([o[2] for o in out])
+        return new, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: Schedule, eps: float = 1e-30,
+              decay: float = 0.8, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Shazeer & Stern (2018) factored second moment, no first moment."""
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def per(p):
+            if _factored(p):
+                r = jnp.zeros(p.shape[:-1], jnp.float32)       # row stats
+                c = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return {"r": r, "c": c}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(per, params)}
+
+    def update(grads, state, params, step):
+        lrt = _lr_at(lr, step)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def upd(p, g, s):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p):
+                r = beta * s["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * s["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rc = r / jnp.maximum(
+                    jnp.mean(r, axis=-1, keepdims=True), eps)
+                vhat = rc[..., None] * c[..., None, :]
+                u = gf * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+                ns = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(jnp.maximum(v, eps))
+                ns = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lrt * u).astype(p.dtype), ns
+
+        lp, treedef = jax.tree.flatten(params)
+        lg = treedef.flatten_up_to(grads)
+        ls = treedef.flatten_up_to(state["f"])   # per-param state dicts
+        out = [upd(p, g, s) for p, g, s in zip(lp, lg, ls)]
+        new = treedef.unflatten([o[0] for o in out])
+        ns = treedef.unflatten([o[1] for o in out])
+        return new, {"f": ns}
+
+    return Optimizer(init, update)
+
+
+def build_optimizer(name: str, lr: Schedule = 1e-4, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    if name == "sgd":
+        return sgd(lr, **kw)
+    raise ValueError(name)

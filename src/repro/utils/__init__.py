@@ -1,0 +1,2 @@
+from repro.utils.metrics import clustering_accuracy, confusion  # noqa: F401
+from repro.utils.tree import param_count, tree_bytes  # noqa: F401

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single real CPU device; the 512-device forced host
+# platform is confined to launch/dryrun.py (see the system design notes).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,69 @@
+"""Checkpoint round-trip + data partitioner tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.data.gaussian import iid_devices, structured_devices
+from repro.data.partition import partition_iid, partition_structured
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "seg": ({"w": jnp.ones((4,), jnp.bfloat16)},
+                    {"w": jnp.zeros((2, 2))})}
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree, step=7)
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    back = load_pytree(path, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+    from repro.checkpoint.store import checkpoint_step
+    assert checkpoint_step(path) == 7
+
+
+def test_structured_partition_respects_k_prime():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(400, 8)).astype(np.float32)
+    y = rng.integers(0, 10, 400)
+    part = partition_structured(rng, X, y, k=10, Z=12, k_prime=3)
+    assert part.k_valid.max() <= 3
+    # every cluster owned somewhere
+    assert part.presence.any(axis=0).all()
+    # masked data only
+    assert (part.labels[~part.point_mask] == -1).all()
+
+
+def test_iid_partition_covers_everything():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(100, 4)).astype(np.float32)
+    y = rng.integers(0, 5, 100)
+    part = partition_iid(rng, X, y, k=5, Z=7)
+    assert int(part.point_mask.sum()) == 100
+
+
+def test_structured_devices_presence():
+    fm = structured_devices(jax.random.PRNGKey(0), k=8, d=6, k_prime=2,
+                            m0=3, n_per_comp_dev=5, sep=10.0)
+    assert fm.data.shape == (12, 10, 6)
+    # each device sees exactly k'=2 clusters
+    assert (np.asarray(fm.presence).sum(1) == 2).all()
+    # devices in the same group see the same clusters; different groups
+    # see disjoint clusters (active/inactive structure of Section 4.1)
+    pres = np.asarray(fm.presence)
+    g = np.asarray(fm.group_of_device)
+    for z1 in range(12):
+        for z2 in range(12):
+            inter = (pres[z1] & pres[z2]).sum()
+            if g[z1] == g[z2]:
+                assert inter == 2
+            else:
+                assert inter == 0
+
+
+def test_iid_devices_spread():
+    fm = iid_devices(jax.random.PRNGKey(0), k=8, d=6, Z=4, n_per_dev=200,
+                     sep=10.0)
+    assert (np.asarray(fm.presence).sum(1) > 4).all()

@@ -1,0 +1,140 @@
+"""shard_map distributed k-FED vs the single-host vmap simulation.
+
+These run in a subprocess because the forced 8-device host platform must
+be configured before JAX initializes (the main test process keeps the
+single real CPU device).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType
+
+from repro.core import kfed as K
+from repro.core.distributed import distributed_lloyd, kfed_shard_map
+from repro.data.gaussian import structured_devices
+from repro.utils.metrics import clustering_accuracy
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+fm = structured_devices(jax.random.PRNGKey(0), k=16, d=24, k_prime=4,
+                        m0=4, n_per_comp_dev=20, sep=60.0)
+assert fm.data.shape[0] == 16  # 16 devices over 8 shards
+
+labels, tau = kfed_shard_map(mesh, fm.data, 16, 4,
+                             key=jax.random.PRNGKey(1))
+acc = clustering_accuracy(np.asarray(labels), np.asarray(fm.labels), 16)
+assert acc > 0.98, f"shard_map kfed accuracy {acc}"
+
+# Simulation path gives the same numerics (same key).
+sim = K.kfed(jax.random.PRNGKey(1), fm.data, k=16, k_prime=4)
+np.testing.assert_array_equal(np.asarray(labels), np.asarray(sim.labels))
+
+# Sharded-server variant (beyond-paper, §Perf k-FED iter 2): identical
+# clustering, same tau centers, no (Z, k', d) gather in its schedule.
+sh_labels, sh_tau = kfed_shard_map(mesh, fm.data, 16, 4,
+                                   key=jax.random.PRNGKey(1),
+                                   server="sharded")
+np.testing.assert_array_equal(np.asarray(sh_labels), np.asarray(labels))
+np.testing.assert_allclose(np.asarray(sh_tau), np.asarray(tau),
+                           rtol=1e-4, atol=1e-4)
+
+# The collective schedule really is one-shot: exactly one all-gather
+# (centers + masks fused or not), zero all-reduces in the lowered HLO.
+lowered = jax.jit(lambda d: kfed_shard_map(
+    mesh, d, 16, 4, key=jax.random.PRNGKey(1))).lower(fm.data)
+hlo = lowered.compile().as_text()
+n_ag = hlo.count("all-gather(") + hlo.count("all-gather-start(")
+assert n_ag >= 1, "expected an all-gather in the one-shot schedule"
+assert "all-to-all" not in hlo
+
+# Baseline: multi-round distributed Lloyd also clusters well but needs
+# per-iteration all-reduces.
+bl_labels, bl_centers = distributed_lloyd(mesh, fm.data, 16,
+                                          key=jax.random.PRNGKey(2))
+bl_acc = clustering_accuracy(np.asarray(bl_labels), np.asarray(fm.labels), 16)
+assert bl_acc > 0.9, f"baseline accuracy {bl_acc}"
+print("OK", acc, bl_acc)
+"""
+
+
+@pytest.mark.slow
+def test_distributed_kfed_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", CHILD], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "OK" in out.stdout
+
+
+MOE_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType
+
+from repro.configs.base import MoEConfig
+from repro.models import moe as MoE
+from repro.models.common import DistCtx
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+ctx = DistCtx(mesh=mesh, dp=("data",), tp="model")
+B, S, d, dff, E, k = 4, 16, 8, 12, 8, 2
+ks = jax.random.split(jax.random.PRNGKey(0), 6)
+p = {"router": jax.random.normal(ks[0], (d, E), jnp.float32) * .5,
+     "w1": jax.random.normal(ks[1], (E, d, dff), jnp.float32) * .2,
+     "w3": jax.random.normal(ks[2], (E, d, dff), jnp.float32) * .2,
+     "w2": jax.random.normal(ks[3], (E, dff, d), jnp.float32) * .2}
+x = jax.random.normal(ks[4], (B, S, d), jnp.float32)
+
+# dropless reference: every token through its experts, no mesh
+m_ref = MoEConfig(n_experts=E, top_k=k, d_expert=dff, capacity_factor=64.0,
+                  impl="dense")
+y_ref, _ = MoE._local_moe(p, x.reshape(-1, d), m_ref)
+y_ref = np.asarray(y_ref).reshape(B, S, d)
+
+for ep in ("tp", "2d"):
+    m = MoEConfig(n_experts=E, top_k=k, d_expert=dff, capacity_factor=64.0,
+                  impl="alltoall", ep=ep)
+    cfg = type("C", (), {"moe": m})()
+    with mesh:
+        y, aux = jax.jit(lambda p, x: MoE.apply_moe(p, x, cfg, ctx))(p, x)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    print("ep", ep, "matches dropless reference")
+
+# expert tensor-parallel path (impl=dense + mesh)
+m = MoEConfig(n_experts=E, top_k=k, d_expert=dff, capacity_factor=64.0,
+              impl="dense")
+cfg = type("C", (), {"moe": m})()
+with mesh:
+    y, aux = jax.jit(lambda p, x: MoE.apply_moe(p, x, cfg, ctx))(p, x)
+np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+print("OK etp matches dropless reference")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_moe_paths_subprocess():
+    """Numeric parity of the a2a (tp-EP and 2-D EP with hierarchical
+    all_to_all) and expert-TP MoE paths against the dropless local
+    reference, on a real 2-axis (data, model) mesh."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", MOE_CHILD], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "OK etp" in out.stdout

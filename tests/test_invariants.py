@@ -1,0 +1,76 @@
+"""Property tests for system invariants beyond the per-module suites:
+label-permutation invariance, the greedy max-min property, the one-shot
+message-size formula, and MoE capacity monotonicity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lloyd as L
+from repro.core.kfed import kfed
+from repro.data.gaussian import structured_devices
+from repro.utils.metrics import clustering_accuracy
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=8, deadline=None)
+def test_kfed_invariant_under_device_order(seed):
+    """k-FED recovers a well-separated target across random instances —
+    the Theorem 4.1 regime holds for every sampled seed, not just the
+    benchmark's fixed ones."""
+    fm = structured_devices(jax.random.PRNGKey(seed), k=9, d=12, k_prime=3,
+                            m0=3, n_per_comp_dev=15, sep=50.0)
+    out = kfed(jax.random.PRNGKey(1), fm.data, k=9, k_prime=3)
+    acc = clustering_accuracy(np.asarray(out.labels),
+                              np.asarray(fm.labels), 9)
+    assert acc > 0.95
+
+
+@given(n=st.integers(12, 60), d=st.integers(2, 10), k=st.integers(2, 8))
+@settings(max_examples=15, deadline=None)
+def test_maxmin_greedy_property(n, d, k):
+    """Every point chosen by maxmin_seed (after the seeded prefix) is a
+    farthest point from the previously chosen set."""
+    key = jax.random.PRNGKey(n * d + k)
+    pts = jax.random.normal(key, (n, d), jnp.float32)
+    valid = jnp.ones((n,), bool)
+    init = jnp.zeros((n,), bool).at[0].set(True)
+    chosen = np.asarray(L.maxmin_seed(pts, valid, init, k))
+    P = np.asarray(pts)
+    for t in range(1, k):
+        prev = P[chosen[:t]]
+        dmin = ((P[:, None] - prev[None]) ** 2).sum(-1).min(1)
+        assert dmin[chosen[t]] >= dmin.max() - 1e-4
+
+
+def test_one_shot_message_size():
+    """The uplink of device z is exactly one (k^(z), d) center matrix —
+    Section 1's O(d k^(z)) message."""
+    fm = structured_devices(jax.random.PRNGKey(0), k=16, d=24, k_prime=4,
+                            m0=2, n_per_comp_dev=20, sep=50.0)
+    out = kfed(jax.random.PRNGKey(1), fm.data, k=16, k_prime=4)
+    Z = fm.data.shape[0]
+    assert out.device_centers.shape == (Z, 4, 24)
+    per_dev_bytes = int(np.asarray(out.center_mask).sum(1).max()) * 24 * 4
+    assert per_dev_bytes == 4 * 24 * 4
+
+
+@given(cf=st.floats(0.25, 4.0))
+@settings(max_examples=10, deadline=None)
+def test_moe_kept_tokens_monotone_in_capacity(cf):
+    """Raising capacity_factor never drops more tokens."""
+    from repro.configs.base import MoEConfig
+    from repro.models import moe as MoE
+    key = jax.random.PRNGKey(3)
+    kx, kr = jax.random.split(key)
+    x = jax.random.normal(kx, (64, 8), jnp.float32)
+    router = jax.random.normal(kr, (8, 4), jnp.float32)
+    kept = []
+    for c in (cf, cf * 2):
+        m = MoEConfig(n_experts=4, top_k=2, d_expert=8, capacity_factor=c,
+                      impl="dense")
+        ids, _, _ = MoE._route(router, x, m)
+        C = MoE._capacity(64, m)
+        _, _, _, keep = MoE._pack(x, ids, m, C)
+        kept.append(int(np.asarray(keep).sum()))
+    assert kept[1] >= kept[0]

@@ -1,0 +1,101 @@
+"""Unit tests for the masked k-means primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lloyd as L
+from repro.kernels import ref
+
+
+def _blobs(key, k=4, d=8, n_per=50, sep=30.0):
+    km, kn = jax.random.split(key)
+    means = jax.random.normal(km, (k, d)) * sep
+    labels = jnp.repeat(jnp.arange(k), n_per)
+    x = means[labels] + jax.random.normal(kn, (k * n_per, d))
+    return x, labels, means
+
+
+def test_assign_points_matches_bruteforce(rng_key):
+    x = jax.random.normal(rng_key, (40, 5))
+    c = jax.random.normal(jax.random.PRNGKey(1), (7, 5))
+    idx, mind = L.assign_points(x, c)
+    d = np.asarray(ref.pairwise_sq_dists(x, c))
+    np.testing.assert_array_equal(np.asarray(idx), d.argmin(1))
+    np.testing.assert_allclose(np.asarray(mind), d.min(1), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_assign_points_respects_center_mask(rng_key):
+    x = jax.random.normal(rng_key, (20, 3))
+    c = jnp.stack([x[0] + 1e-3, x[0] + 100.0, x[0]])
+    cm = jnp.array([True, True, False])  # nearest center masked out
+    idx, _ = L.assign_points(x[:1], c, center_mask=cm)
+    assert int(idx[0]) == 0
+
+
+def test_assign_points_masks_points(rng_key):
+    x = jax.random.normal(rng_key, (10, 3))
+    c = jax.random.normal(jax.random.PRNGKey(2), (2, 3))
+    pm = jnp.arange(10) < 6
+    idx, mind = L.assign_points(x, c, point_mask=pm)
+    assert np.all(np.asarray(idx[6:]) == -1)
+    assert np.all(np.asarray(mind[6:]) == 0.0)
+
+
+def test_update_centers_empty_cluster_keeps_old(rng_key):
+    x = jax.random.normal(rng_key, (12, 4))
+    assign = jnp.zeros((12,), jnp.int32)  # everything to cluster 0
+    old = jnp.full((3, 4), 7.0)
+    new, cnt = L.update_centers(x, assign, 3, old)
+    np.testing.assert_allclose(np.asarray(new[0]), np.asarray(x.mean(0)),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(new[1:]), 7.0)
+    assert cnt[0] == 12 and cnt[1] == 0
+
+
+def test_lloyd_recovers_separated_blobs(rng_key):
+    x, labels, means = _blobs(rng_key)
+    init, cm = L.kmeans_pp_init(jax.random.PRNGKey(3), x, 4)
+    res = L.lloyd(x, init, center_mask=cm)
+    assert bool(res.converged)
+    # Every recovered center is near a true mean.
+    d = np.sqrt(np.asarray(ref.pairwise_sq_dists(res.centers, means)))
+    assert d.min(axis=1).max() < 1.0
+
+
+def test_lloyd_cost_monotone(rng_key):
+    x = jax.random.normal(rng_key, (200, 6))
+    init, cm = L.kmeans_pp_init(jax.random.PRNGKey(5), x, 5)
+    c_prev = init
+    prev_cost = float(L.kmeans_cost(x, c_prev, cm))
+    for _ in range(5):
+        res = L.lloyd(x, c_prev, center_mask=cm, max_iters=1)
+        cost = float(L.kmeans_cost(x, res.centers, cm))
+        assert cost <= prev_cost + 1e-3
+        prev_cost, c_prev = cost, res.centers
+
+
+def test_kmeans_pp_k_valid(rng_key):
+    x = jax.random.normal(rng_key, (50, 4))
+    centers, cm = L.kmeans_pp_init(rng_key, x, 8, k_valid=jnp.int32(3))
+    assert np.asarray(cm).sum() == 3
+    np.testing.assert_allclose(np.asarray(centers[3:]), 0.0)
+
+
+def test_maxmin_seed_picks_one_per_cluster(rng_key):
+    x, labels, _ = _blobs(rng_key, k=6, sep=50.0)
+    # Seed with a point of cluster 0 selected.
+    init_sel = jnp.zeros((x.shape[0],), bool).at[0].set(True)
+    valid = jnp.ones((x.shape[0],), bool)
+    chosen = L.maxmin_seed(x, valid, init_sel, 6)
+    picked_clusters = np.asarray(labels)[np.asarray(chosen)]
+    assert len(set(picked_clusters.tolist())) == 6
+
+
+def test_maxmin_seed_respects_validity(rng_key):
+    x, labels, _ = _blobs(rng_key, k=4, sep=50.0)
+    valid = labels != 3  # cluster 3 points are padding
+    init_sel = jnp.zeros((x.shape[0],), bool).at[0].set(True)
+    chosen = L.maxmin_seed(x, valid, init_sel, 3)
+    assert not np.any(np.asarray(labels)[np.asarray(chosen)] == 3)

@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: REDUCED variant of every assigned config
+(<=2 layers, d_model<=512, <=4 experts) runs one forward/train step and one
+prefill+decode step on CPU; asserts output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.configs.base import InputShape
+from repro.configs.shapes import dummy_inputs
+from repro.models import DistCtx, build_model
+from repro.utils.tree import check_finite, param_count
+
+ARCHS = list_archs()
+SMOKE_TRAIN = InputShape("smoke_train", 128, 2, "train")
+SMOKE_DECODE = InputShape("smoke_decode", 64, 2, "decode")
+CTX = DistCtx.local()
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for arch in ARCHS:
+        cfg = get_config(arch, reduced=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        out[arch] = (cfg, model, params)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_config_is_reduced(arch):
+    cfg = get_config(arch, reduced=True)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    full = get_config(arch)
+    assert full.family == cfg.family and full.cite
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_loss(arch, built):
+    cfg, model, params = built[arch]
+    assert param_count(params) > 0
+    batch = dummy_inputs(jax.random.PRNGKey(1), cfg, SMOKE_TRAIN)
+    loss, metrics = jax.jit(
+        lambda p, b: model.loss(p, b, CTX))(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), (arch, float(loss))
+    assert np.isfinite(float(metrics["ce"]))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_no_nans(arch, built):
+    cfg, model, params = built[arch]
+    batch = dummy_inputs(jax.random.PRNGKey(2), cfg, SMOKE_TRAIN)
+
+    @jax.jit
+    def step(p, b):
+        g = jax.grad(lambda p: model.loss(p, b, CTX)[0])(p)
+        return jax.tree.map(lambda w, gw: w - 1e-3 * gw.astype(w.dtype),
+                            p, g)
+
+    new_params = step(params, batch)
+    assert bool(check_finite(new_params)), arch
+    # Something actually moved.
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), params, new_params)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_and_decode(arch, built):
+    cfg, model, params = built[arch]
+    B, S = SMOKE_DECODE.global_batch, SMOKE_DECODE.seq_len
+    pre_shape = InputShape("p", S, B, "prefill")
+    batch = dummy_inputs(jax.random.PRNGKey(3), cfg, pre_shape,
+                         with_labels=False)
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, CTX))(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32))), arch
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache2 = jax.jit(
+        lambda p, c, t: model.serve_step(p, c, t, CTX))(params, cache, tok)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32))), arch
+    assert int(cache2["len"][0]) == int(cache["len"][0]) + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_init_cache_matches_prefill_cache_structure(arch, built):
+    cfg, model, params = built[arch]
+    B, S = 2, 32
+    # For enc-dec the decoder consumes S - n_ctx tokens at prefill.
+    S_cache = S - cfg.encoder.n_ctx if cfg.family == "encdec" else S
+    fresh = model.init_cache(B, S_cache)
+    batch = dummy_inputs(jax.random.PRNGKey(4), cfg,
+                         InputShape("p", S, B, "prefill"), with_labels=False)
+    # decode_room defaults to 1 → prefill cache has room S+1, same as
+    # init_cache(B, S).
+    _, cache = jax.jit(lambda p, b: model.prefill(p, b, CTX))(params, batch)
+    fs = jax.tree.structure(fresh)
+    cs = jax.tree.structure(cache)
+    assert fs == cs, (arch, fs, cs)
+    for a, b in zip(jax.tree.leaves(fresh), jax.tree.leaves(cache)):
+        assert a.shape == b.shape, (arch, a.shape, b.shape)

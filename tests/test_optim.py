@@ -1,0 +1,66 @@
+"""Optimizer unit tests (including factored Adafactor state shapes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adafactor, adamw, build_optimizer,
+                         clip_by_global_norm, sgd, warmup_cosine)
+
+
+def _quadratic_params():
+    return {"a": jnp.array([3.0, -2.0]),
+            "nested": {"b": jnp.full((2, 3), 1.5)}}
+
+
+def _loss(p):
+    return (jnp.sum(p["a"] ** 2) + jnp.sum(p["nested"]["b"] ** 2))
+
+
+@pytest.mark.parametrize("name,kw", [("sgd", {}),
+                                     ("sgd", {"momentum": 0.9}),
+                                     ("adamw", {}),
+                                     ("adafactor", {})])
+def test_optimizers_descend_quadratic(name, kw):
+    opt = build_optimizer(name, 0.1, **kw)
+    params = _quadratic_params()
+    state = opt.init(params)
+    loss0 = float(_loss(params))
+    for i in range(50):
+        g = jax.grad(_loss)(params)
+        params, state = opt.update(g, state, params, jnp.int32(i))
+    assert float(_loss(params)) < 0.2 * loss0
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(1e-2)
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((16,))}
+    st = opt.init(params)
+    assert st["f"]["w"]["r"].shape == (64,)
+    assert st["f"]["w"]["c"].shape == (32,)
+    assert st["f"]["b"]["v"].shape == (16,)
+
+
+def test_clip_by_global_norm():
+    g = {"x": jnp.full((4,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(gn), 20.0, rtol=1e-5)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["x"])), 1.0, rtol=1e-5)
+
+
+def test_warmup_cosine_shape():
+    sched = warmup_cosine(1.0, warmup=10, total_steps=110)
+    assert float(sched(jnp.int32(0))) == 0.0
+    np.testing.assert_allclose(float(sched(jnp.int32(10))), 1.0, atol=1e-5)
+    assert float(sched(jnp.int32(109))) < 0.01
+
+
+def test_tuple_containing_param_trees():
+    """Segments are tuples — optimizers must handle non-dict containers."""
+    opt = adamw(1e-2)
+    params = {"segments": ({"w": jnp.ones((3, 3))}, {"w": jnp.ones((3,))})}
+    st = opt.init(params)
+    g = jax.tree.map(jnp.ones_like, params)
+    new, st = opt.update(g, st, params, jnp.int32(0))
+    assert new["segments"][0]["w"].shape == (3, 3)

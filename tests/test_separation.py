@@ -1,0 +1,63 @@
+"""Tests for the Section 3 analysis quantities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import separation as S
+from repro.data.gaussian import structured_devices
+
+
+def test_spectral_norm_matches_svd(rng_key):
+    M = jax.random.normal(rng_key, (40, 25))
+    got = float(S.spectral_norm(M, iters=200))
+    want = float(np.linalg.svd(np.asarray(M), compute_uv=False)[0])
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_a_minus_c_norm_zero_for_degenerate_clusters():
+    A = jnp.concatenate([jnp.ones((10, 3)), -jnp.ones((10, 3))])
+    lb = jnp.concatenate([jnp.zeros(10, jnp.int32), jnp.ones(10, jnp.int32)])
+    assert float(S.a_minus_c_norm(A, lb, 2)) < 1e-4
+
+
+def test_active_pairs():
+    presence = jnp.array([[True, True, False],
+                          [False, True, True]])
+    act = np.asarray(S.active_pairs(presence))
+    assert act[0, 1] and act[1, 2]
+    assert not act[0, 2]
+    assert not act.diagonal().any()
+
+
+def test_separation_report_on_well_separated_mixture():
+    fm = structured_devices(jax.random.PRNGKey(0), k=16, d=32, k_prime=4,
+                            m0=3, n_per_comp_dev=40, sep=2000.0)
+    A = fm.data.reshape(-1, 32)
+    lb = fm.labels.reshape(-1)
+    n_min = fm.data.shape[1]
+    rep = S.separation_report(A, lb, 16, fm.presence, n_min,
+                              k_prime=4, m0=3.0, c=2.0)
+    # With sep=2000 everything is comfortably separated.
+    assert float(rep.active_satisfied) == 1.0
+    assert float(rep.inactive_satisfied) == 1.0
+    # Inactive pairs exist in the G_i construction.
+    act = np.asarray(rep.active)
+    off = ~np.eye(16, dtype=bool)
+    assert (~act & off).sum() > 0
+
+
+def test_proximity_all_satisfied_when_far():
+    fm = structured_devices(jax.random.PRNGKey(1), k=4, d=16, k_prime=2,
+                            m0=2, n_per_comp_dev=50, sep=500.0)
+    A = fm.data.reshape(-1, 16)
+    lb = fm.labels.reshape(-1)
+    ok = S.proximity_satisfied(A, lb, 4)
+    assert bool(jnp.all(ok))
+
+
+def test_proximity_violated_when_overlapping():
+    key = jax.random.PRNGKey(2)
+    A = jax.random.normal(key, (200, 8))  # one blob, split arbitrarily
+    lb = (jnp.arange(200) % 2).astype(jnp.int32)
+    ok = S.proximity_satisfied(A, lb, 2)
+    assert float(jnp.mean(ok)) < 0.9
