@@ -4,10 +4,17 @@ roofline). Prints ``name,us_per_call,derived`` CSV rows.
   PYTHONPATH=src python -m benchmarks.run            # quick mode
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale
   PYTHONPATH=src python -m benchmarks.run --only table1,fig3
+  PYTHONPATH=src python -m benchmarks.run --json .   # + BENCH_<ts>.json
+
+``--json OUT`` additionally writes a structured ``BENCH_<timestamp>.json``
+perf record (rows + per-bench wall time + environment) next to the
+unchanged CSV stdout; OUT may be a directory or an explicit .json path.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -24,15 +31,42 @@ BENCHES = {
 }
 
 
+def _parse_row(bench: str, row: str) -> dict:
+    """CSV row -> structured record (derived may itself contain commas)."""
+    parts = row.split(",", 2)
+    rec = {"bench": bench, "name": parts[0]}
+    try:
+        rec["us_per_call"] = float(parts[1]) if len(parts) > 1 else None
+    except ValueError:
+        rec["us_per_call"] = None
+    rec["derived"] = parts[2] if len(parts) > 2 else ""
+    return rec
+
+
+def _json_path(out: str, stamp: str) -> str:
+    if out.endswith(".json"):
+        parent = os.path.dirname(out)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        return out
+    os.makedirs(out, exist_ok=True)
+    return os.path.join(out, f"BENCH_{stamp}.json")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench keys")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write a BENCH_<timestamp>.json perf record to "
+                         "the OUT directory (or exact .json path)")
     args = ap.parse_args()
     keys = list(BENCHES) if not args.only else args.only.split(",")
 
     import importlib
+    t_start = time.time()
+    records, durations = [], {}
     print("name,us_per_call,derived")
     for key in keys:
         mod = importlib.import_module(BENCHES[key])
@@ -43,7 +77,30 @@ def main() -> None:
             rows = [f"{key},0,ERROR:{e!r}"]
         for r in rows:
             print(r)
-        print(f"# {key} done in {time.time() - t0:.1f}s", file=sys.stderr)
+            records.append(_parse_row(key, r))
+        durations[key] = round(time.time() - t0, 2)
+        print(f"# {key} done in {durations[key]:.1f}s", file=sys.stderr)
+
+    if args.json:
+        import jax
+        stamp = time.strftime("%Y%m%d_%H%M%S", time.gmtime(t_start))
+        record = {
+            "timestamp": stamp,
+            "full": args.full,
+            "benches": keys,
+            "rows": records,
+            "durations_s": durations,
+            "total_s": round(time.time() - t_start, 2),
+            "env": {
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+            },
+        }
+        path = _json_path(args.json, stamp)
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"# perf record -> {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -10,6 +10,14 @@ The paper's protocol maps onto the mesh as follows (DESIGN.md §4):
     computations — Theorem 3.2) is replicated on every shard, which is
     cheaper than any dedicated-server emulation and keeps SPMD semantics.
 
+Both the ``server="replicated"`` and ``server="sharded"`` branches route
+through the ONE shared server core in ``core/server.py`` — the sharded
+branch swaps in the collective ``ShardedReducer`` for the same greedy
+max-min loop and Lloyd round. ``participation`` and
+``weight_by_core_counts`` give the shard_map paths the same beyond-paper
+scenarios as ``fed/engine.py`` (partial participation with Theorem 3.2
+post-hoc attachment; core-set-weighted aggregation).
+
 For comparison benchmarks we also provide ``distributed_lloyd`` — the naive
 multi-round parallel Lloyd baseline (one all-reduce of (k, d) sums + (k,)
 counts per iteration), whose collective schedule shows T rounds vs k-FED's
@@ -17,7 +25,6 @@ single gather.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -26,7 +33,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import kfed as K
 from repro.core import lloyd as L
+from repro.core import server as S
 from repro.core.local_kmeans import batched_local_kmeans
+from repro.utils.compat import shard_map as _shard_map
 
 
 def _axes(axis):
@@ -42,88 +51,10 @@ def _flat_axis_index(axes, mesh):
     return idx
 
 
-def _sharded_server(centers_loc, mask_loc, kz_all, k, axes, mesh):
-    """Steps 2-8 of Algorithm 2 with the server itself sharded: each chip
-    owns its m_loc = Z_loc*k' slice of the device centers; the greedy
-    max-min runs as (local argmax -> two scalar all-reduces -> (d,) psum
-    of the winning center) per iteration, so per-chip HBM traffic is
-    m_loc*d per iteration instead of Z*k'*d (§Perf k-FED iteration 2).
-    Selection order matches the replicated server (first-occurrence
-    argmax = smallest global index among ties).
-
-    centers_loc: (Z_loc, k', d); mask_loc: (Z_loc, k'); kz_all: (Z,).
-    Returns (M (k, d), tau_centers (k, d), my_labels (Z_loc, k')).
-    """
-    Z_loc, kp, d = centers_loc.shape
-    m_loc = Z_loc * kp
-    pf = centers_loc.reshape(m_loc, d).astype(jnp.float32)
-    fm = mask_loc.reshape(m_loc)
-    shard = _flat_axis_index(axes, mesh)
-    base = shard * m_loc
-    BIG = jnp.int32(2 ** 30)
-
-    # "Pick any z": the device with most local clusters, first one wins.
-    z0 = jnp.argmax(kz_all).astype(jnp.int32)
-    own_rows = jnp.arange(m_loc) // kp == (z0 - shard * Z_loc)
-    init_loc = own_rows & fm                              # (m_loc,)
-    count0 = jax.lax.psum(jnp.sum(init_loc).astype(jnp.int32), axes)
-
-    # Initial chosen indices (global, ascending) and their coordinates.
-    cand = jnp.where(init_loc, base + jnp.arange(m_loc, dtype=jnp.int32),
-                     BIG)
-    cand = jnp.sort(cand)[:k] if m_loc >= k else jnp.sort(
-        jnp.pad(cand, (0, k - m_loc), constant_values=BIG))[:k]
-    chosen0 = jax.lax.pmin(cand, axes)                    # (k,) owner wins
-    # owner scatters its init rows into slot order; others contribute 0
-    slot_of = jnp.cumsum(init_loc.astype(jnp.int32)) - 1
-    M0 = jnp.zeros((k, d), jnp.float32).at[
-        jnp.clip(slot_of, 0, k - 1)].add(
-            jnp.where(init_loc[:, None], pf, 0.0))
-    M0 = jax.lax.psum(M0, axes)                           # (k, d)
-
-    from repro.kernels import ops
-    d2 = ops.pairwise_sq_dists(pf, M0)                    # (m_loc, k)
-    ok = jnp.arange(k) < count0
-    mind2 = jnp.min(jnp.where(ok[None, :], d2, jnp.inf), axis=1)
-    mind2 = jnp.where(fm, mind2, -jnp.inf)
-    p2 = jnp.sum(pf * pf, axis=1)
-    chosen = jnp.where(jnp.arange(k) < count0, chosen0, -1)
-
-    def body(t, carry):
-        chosen, mind2 = carry
-        grow = t >= count0
-        lmax = jnp.max(mind2)
-        larg = jnp.argmax(mind2).astype(jnp.int32)
-        gmax = jax.lax.pmax(lmax, axes)
-        cand_g = jax.lax.pmin(
-            jnp.where(lmax >= gmax, base + larg, BIG), axes)
-        chosen = jnp.where(grow, chosen.at[t].set(cand_g), chosen)
-        mine = (cand_g >= base) & (cand_g < base + m_loc)
-        row = jnp.clip(cand_g - base, 0, m_loc - 1)
-        c = jax.lax.psum(jnp.where(mine, pf[row], 0.0), axes)   # (d,)
-        nd = jnp.maximum(p2 - 2.0 * (pf @ c) + jnp.sum(c * c), 0.0)
-        nd = jnp.where(fm, nd, -jnp.inf)
-        mind2 = jnp.where(grow, jnp.minimum(mind2, nd), mind2)
-        return chosen, mind2
-
-    chosen, _ = jax.lax.fori_loop(0, k, body, (chosen, mind2))
-
-    # Assemble M from owners; one local Lloyd assignment + global update.
-    mine_t = (chosen >= base) & (chosen < base + m_loc)
-    rows = jnp.clip(chosen - base, 0, m_loc - 1)
-    M = jax.lax.psum(jnp.where(mine_t[:, None], pf[rows], 0.0), axes)
-    labels, _ = L.assign_points(pf, M, center_mask=chosen >= 0,
-                                point_mask=fm)
-    sums, cnt = ops.kmeans_update(pf, labels, k)
-    sums = jax.lax.psum(sums, axes)
-    cnt = jax.lax.psum(cnt, axes)
-    tau = jnp.where((cnt > 0)[:, None],
-                    sums / jnp.maximum(cnt, 1.0)[:, None], M)
-    return M, tau.astype(centers_loc.dtype), labels.reshape(Z_loc, kp)
-
-
 def kfed_shard_map(mesh, data: jax.Array, k: int, k_prime: int, *,
                    key: jax.Array, axis="data", server: str = "replicated",
+                   participation: Optional[jax.Array] = None,
+                   weight_by_core_counts: bool = False,
                    k_valid: Optional[jax.Array] = None,
                    point_mask: Optional[jax.Array] = None,
                    **local_kw):
@@ -136,8 +67,13 @@ def kfed_shard_map(mesh, data: jax.Array, k: int, k_prime: int, *,
     all-gather of the (Z, k', d) centers, steps 2-8 replicated on every
     chip) or "sharded" (beyond-paper: the server aggregation itself is
     sharded — per-chip traffic drops by the shard count for ~2 MB of tiny
-    scalar/(d,) reductions; bitwise-identical output). Returns
-    (labels (Z, n), tau_centers (k, d) replicated).
+    scalar/(d,) reductions; bitwise-identical output).
+
+    ``participation``: optional (Z,) bool — devices that missed the round
+    are excluded from aggregation and attached post-hoc (Theorem 3.2)
+    with zero extra communication rounds. ``weight_by_core_counts``
+    weights the server's Lloyd round by the Algorithm 1 core set sizes.
+    Returns (labels (Z, n), tau_centers (k, d) replicated).
     """
     Z, n, d = data.shape
     axes = _axes(axis)
@@ -150,40 +86,61 @@ def kfed_shard_map(mesh, data: jax.Array, k: int, k_prime: int, *,
     if point_mask is None:
         point_mask = jnp.ones((Z, n), bool)
     keys = jax.random.split(key, Z)
+    has_part = participation is not None
 
-    def shard_fn(keys_b, data_b, kv_b, pm_b):
+    def shard_fn(keys_b, data_b, kv_b, pm_b, *rest):
+        part_b = jnp.asarray(rest[0], bool) if has_part else None
         # -- Stage 1: local solves for this shard's cohort of devices.
         loc = batched_local_kmeans(keys_b, data_b, k_max=k_prime,
                                    k_valid=kv_b, point_mask=pm_b, **local_kw)
+        # -- Stage 2 (transport prep): participation + weighting masks.
+        cmask = (loc.center_mask if part_b is None
+                 else loc.center_mask & part_b[:, None])
+        w_loc = (S.core_weights(loc.core_counts)
+                 if weight_by_core_counts else None)
+        zloc = data_b.shape[0]
         if server == "sharded":
-            # -- Stage 2': sharded server — only tiny reductions cross
+            # -- Stage 3': sharded server — only tiny reductions cross
             # chips (k scalar pairs + k (d,) psums + one (k, d) psum).
             kz_all = jax.lax.all_gather(
-                jnp.sum(loc.center_mask, axis=1).astype(jnp.int32),
+                jnp.sum(cmask, axis=1).astype(jnp.int32),
                 axes, axis=0, tiled=True)                  # (Z,)
-            _, tau, my = _sharded_server(loc.centers, loc.center_mask,
-                                         kz_all, k, axes, mesh)
-            labels_b = K.induced_labels(my, loc.assign)
-            return labels_b, tau
-        # -- The one-shot communication: gather device centers + masks.
-        all_centers = jax.lax.all_gather(loc.centers, axes, axis=0,
-                                         tiled=True)       # (Z, k', d)
-        all_mask = jax.lax.all_gather(loc.center_mask, axes, axis=0,
-                                      tiled=True)           # (Z, k')
-        # -- Stage 2: replicated server aggregation.
-        agg = K.aggregate(all_centers, all_mask, k)
-        zloc = data_b.shape[0]
-        my = jax.lax.dynamic_slice_in_dim(
-            agg.center_labels, _flat_axis_index(axes, mesh) * zloc, zloc, 0)
-        labels_b = K.induced_labels(my, loc.assign)
-        return labels_b, agg.tau_centers
+            base = _flat_axis_index(axes, mesh) * zloc * k_prime
+            _, tau, my = S.aggregate_sharded(loc.centers, cmask, kz_all,
+                                             k, axes, base,
+                                             weights_loc=w_loc)
+        else:
+            # -- The one-shot communication: gather centers + masks.
+            all_centers = jax.lax.all_gather(loc.centers, axes, axis=0,
+                                             tiled=True)   # (Z, k', d)
+            all_mask = jax.lax.all_gather(cmask, axes, axis=0,
+                                          tiled=True)       # (Z, k')
+            all_w = (None if w_loc is None else
+                     jax.lax.all_gather(w_loc, axes, axis=0, tiled=True))
+            # -- Stage 3: replicated shared server aggregation.
+            agg = S.aggregate(all_centers, all_mask, k, weights=all_w)
+            tau = agg.tau_centers
+            my = jax.lax.dynamic_slice_in_dim(
+                agg.center_labels, _flat_axis_index(axes, mesh) * zloc,
+                zloc, 0)
+        if part_b is not None:
+            # Theorem 3.2 post-hoc attachment of this shard's absent
+            # devices — purely local against the replicated tau centers.
+            my = S.attach_absent_devices(my, loc.centers,
+                                         loc.center_mask, tau, part_b)
+        # -- Stage 4: induced labeling (Definition 3.3).
+        labels_b = S.induced_labels(my, loc.assign)
+        return labels_b, tau
 
-    fn = jax.shard_map(
+    in_specs = [P(axes)] * (5 if has_part else 4)
+    fn = _shard_map(
         shard_fn, mesh=mesh,
-        in_specs=(P(axes), P(axes), P(axes), P(axes)),
-        out_specs=(P(axes), P()),
-        check_vma=False)
-    return fn(keys, data, k_valid, point_mask)
+        in_specs=tuple(in_specs),
+        out_specs=(P(axes), P()))
+    args = (keys, data, k_valid, point_mask)
+    if has_part:
+        args += (jnp.asarray(participation, bool),)
+    return fn(*args)
 
 
 def assign_new_device_shard(mesh, new_data: jax.Array, tau_centers: jax.Array,
@@ -225,8 +182,8 @@ def distributed_lloyd(mesh, data: jax.Array, k: int, *, key: jax.Array,
         a, _ = L.assign_points(x, c)
         return a.reshape(data_b.shape[:2]), c
 
-    fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=(P(axes),),
-                       out_specs=(P(axes), P()), check_vma=False)
+    fn = _shard_map(shard_fn, mesh=mesh, in_specs=(P(axes),),
+                    out_specs=(P(axes), P()))
     return fn(data)
 
 

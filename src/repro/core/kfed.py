@@ -8,6 +8,12 @@ max-min selection starting from one device's centers, runs ONE round of
 Lloyd's heuristic on the ~Z*k' device centers, and returns the partition
 tau_1..tau_k of device centers. Every data point inherits the tau-label of
 its local cluster center.
+
+This module is the stable public surface; the server arithmetic itself
+lives in ``core/server.py`` (ONE implementation shared by the vmap
+simulation, the replicated shard_map path, and the sharded-server path —
+DESIGN.md §4), and the scenario layer (participation masks, async
+arrival, weighting) in ``fed/engine.py``.
 """
 from __future__ import annotations
 
@@ -16,60 +22,22 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import lloyd as L
-from repro.core.local_kmeans import batched_local_kmeans
-
-
-class KFedAggregate(NamedTuple):
-    seeds_idx: jax.Array       # (k,) indices into flattened (Z*k') centers
-    seed_centers: jax.Array    # (k, d) the set M
-    tau_centers: jax.Array     # (k, d) mu(tau_r) after the one Lloyd round
-    center_labels: jax.Array   # (Z, k') tau-label of each device center, -1 pad
-    z0: jax.Array              # () the device whose centers seeded M
+# Re-exported shared server core (one implementation for all paths).
+from repro.core.server import (  # noqa: F401
+    KFedAggregate,
+    assign_new_device,
+    induced_labels,
+)
+from repro.core import server as S
 
 
 def aggregate(device_centers: jax.Array, center_mask: jax.Array,
-              k: int) -> KFedAggregate:
-    """Steps 2-8 of Algorithm 2. device_centers: (Z, k', d)."""
-    Z, kp, d = device_centers.shape
-    flat = device_centers.reshape(Z * kp, d)
-    fm = center_mask.reshape(Z * kp)
-
-    # "Pick any z": deterministically pick the device with most local
-    # clusters (maximizes the seeded set, minimizes max-min iterations).
-    kz = jnp.sum(center_mask, axis=1)
-    z0 = jnp.argmax(kz).astype(jnp.int32)
-    init_sel = ((jnp.arange(Z) == z0)[:, None] & center_mask).reshape(-1)
-
-    seeds_idx = L.maxmin_seed(flat, fm, init_sel, k)
-    M = flat[seeds_idx]
-
-    # One round of Lloyd's heuristic over the device centers.
-    labels, _ = L.assign_points(flat, M, point_mask=fm)
-    tau_centers, _ = L.update_centers(flat.astype(jnp.float32), labels, k,
-                                      M.astype(jnp.float32))
-    return KFedAggregate(seeds_idx, M, tau_centers.astype(device_centers.dtype),
-                         labels.reshape(Z, kp), z0)
-
-
-def induced_labels(center_labels: jax.Array,
-                   local_assign: jax.Array) -> jax.Array:
-    """Definition 3.3: point i on device z with local cluster s gets label
-    tau(theta_s^(z)). center_labels: (Z, k'), local_assign: (Z, n)."""
-    safe = jnp.clip(local_assign, 0, center_labels.shape[1] - 1)
-    lbl = jnp.take_along_axis(center_labels, safe, axis=1)
-    return jnp.where(local_assign >= 0, lbl, -1)
-
-
-def assign_new_device(new_centers: jax.Array, new_mask: jax.Array,
-                      ref_centers: jax.Array) -> jax.Array:
-    """Theorem 3.2: a device joining after clustering is assigned by
-    nearest-neighbor matching of its local centers against the k retained
-    server centers — O(k' * k) distance computations, no other device
-    involved. new_centers: (k', d); ref_centers: (k, d)."""
-    labels, _ = L.assign_points(new_centers, ref_centers,
-                                point_mask=new_mask)
-    return labels
+              k: int, weights: Optional[jax.Array] = None) -> KFedAggregate:
+    """Steps 2-8 of Algorithm 2. device_centers: (Z, k', d). Routes
+    through the shared server core; ``weights`` optionally weights the
+    one Lloyd round by per-center mass (e.g. Algorithm 1 core set
+    sizes)."""
+    return S.aggregate(device_centers, center_mask, k, weights=weights)
 
 
 class KFedResult(NamedTuple):
@@ -83,20 +51,25 @@ class KFedResult(NamedTuple):
 def kfed(key: jax.Array, device_data: jax.Array, k: int, k_prime: int, *,
          k_valid: Optional[jax.Array] = None,
          point_mask: Optional[jax.Array] = None,
+         participation: Optional[jax.Array] = None,
+         weight_by_core_counts: bool = False,
          **local_kw) -> KFedResult:
-    """End-to-end k-FED (simulation path): vmapped Algorithm 1 over the
-    device axis followed by the server aggregation.
+    """End-to-end k-FED (simulation path): a thin configuration of the
+    federated engine — vmapped Algorithm 1 over the device axis followed
+    by the shared server aggregation.
 
-    device_data: (Z, n, d) padded per-device data.
+    device_data: (Z, n, d) padded per-device data. ``participation``:
+    optional (Z,) bool — devices that missed the round are excluded from
+    aggregation and attached post-hoc via the Theorem 3.2 rule.
     """
-    Z = device_data.shape[0]
-    keys = jax.random.split(key, Z)
-    loc = batched_local_kmeans(keys, device_data, k_max=k_prime,
-                               k_valid=k_valid, point_mask=point_mask,
-                               **local_kw)
-    agg = aggregate(loc.centers, loc.center_mask, k)
-    labels = induced_labels(agg.center_labels, loc.assign)
-    return KFedResult(agg, loc.centers, loc.center_mask, loc.assign, labels)
+    from repro.fed.engine import EngineConfig, run_round  # lazy: core->fed
+    cfg = EngineConfig(k=k, k_prime=k_prime,
+                       weight_by_core_counts=weight_by_core_counts,
+                       local_kw=dict(local_kw))
+    r = run_round(key, device_data, cfg, participation=participation,
+                  k_valid=k_valid, point_mask=point_mask)
+    return KFedResult(r.agg, r.device_centers, r.center_mask,
+                      r.local_assign, r.labels)
 
 
 def kmeans_cost_of_labels(data: jax.Array, labels: jax.Array,

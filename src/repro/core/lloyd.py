@@ -126,6 +126,53 @@ def kmeans_pp_init(key: jax.Array, x: jax.Array, k: int, *,
     return centers.astype(x.dtype), center_mask
 
 
+class LocalReducer:
+    """Reduction strategy for a server that owns the full point set (the
+    replicated execution: argmax/fetch/sum are plain local ops). The
+    sharded execution substitutes collective equivalents — see
+    ``core/server.ShardedReducer``; the greedy loop itself is shared."""
+
+    def argmax(self, vals: jax.Array) -> jax.Array:
+        return jnp.argmax(vals).astype(jnp.int32)
+
+    def fetch_row(self, points: jax.Array, idx: jax.Array) -> jax.Array:
+        return points[idx]
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        return x
+
+
+def maxmin_grow(pf: jax.Array, valid: jax.Array, chosen: jax.Array,
+                mind2: jax.Array, count0: jax.Array, k: int,
+                reducer=None) -> jax.Array:
+    """The greedy farthest-point growth loop (steps 4-6 of Algorithm 2),
+    shared by every server execution path. ``chosen`` holds the already
+    selected (global) indices in slots < count0; ``mind2`` the distance of
+    every local point to the current set M (-inf for invalid points).
+
+    Incremental update via the matmul identity ||x||^2 - 2 x.c + ||c||^2
+    (one read of ``pf`` per iteration instead of materializing the
+    broadcast (x - c)^2). ``reducer`` supplies argmax / row-fetch — local
+    for the replicated server, collective for the sharded one.
+    """
+    reducer = reducer or LocalReducer()
+    p2 = jnp.sum(pf * pf, axis=1)                         # (m,)
+
+    def body(t, carry):
+        chosen, mind2 = carry
+        grow = t >= count0
+        cand = reducer.argmax(mind2)
+        chosen = jnp.where(grow, chosen.at[t].set(cand), chosen)
+        c = reducer.fetch_row(pf, cand)
+        nd = jnp.maximum(p2 - 2.0 * (pf @ c) + jnp.sum(c * c), 0.0)
+        nd = jnp.where(valid, nd, -jnp.inf)
+        mind2 = jnp.where(grow, jnp.minimum(mind2, nd), mind2)
+        return chosen, mind2
+
+    chosen, _ = jax.lax.fori_loop(0, k, body, (chosen, mind2))
+    return chosen
+
+
 def maxmin_seed(points: jax.Array, valid: jax.Array, init_sel: jax.Array,
                 k: int) -> jax.Array:
     """Farthest-point (max-min) seeding, steps 2-6 of Algorithm 2.
@@ -136,7 +183,6 @@ def maxmin_seed(points: jax.Array, valid: jax.Array, init_sel: jax.Array,
 
     points: (m, d); valid/init_sel: (m,) bool. Returns chosen indices (k,).
     """
-    m = points.shape[0]
     pf = points.astype(jnp.float32)
 
     # Initial selected indices, in order (stable: selected first).
@@ -154,21 +200,4 @@ def maxmin_seed(points: jax.Array, valid: jax.Array, init_sel: jax.Array,
     mind2 = jnp.min(jnp.where(init_ok[None, :], d2, jnp.inf), axis=1)
     mind2 = jnp.where(valid, mind2, -jnp.inf)  # invalid never picked
 
-    # Incremental update via the matmul identity ||x||^2 - 2 x.c + ||c||^2
-    # (one read of ``points`` per iteration instead of materializing the
-    # broadcast (x - c)^2).
-    p2 = jnp.sum(pf * pf, axis=1)                         # (m,)
-
-    def body(t, carry):
-        chosen, mind2 = carry
-        grow = t >= count0
-        cand = jnp.argmax(mind2).astype(jnp.int32)
-        chosen = jnp.where(grow, chosen.at[t].set(cand), chosen)
-        c = pf[cand]
-        nd = jnp.maximum(p2 - 2.0 * (pf @ c) + jnp.sum(c * c), 0.0)
-        nd = jnp.where(valid, nd, -jnp.inf)
-        mind2 = jnp.where(grow, jnp.minimum(mind2, nd), mind2)
-        return chosen, mind2
-
-    chosen, _ = jax.lax.fori_loop(0, k, body, (chosen, mind2))
-    return chosen
+    return maxmin_grow(pf, valid, chosen, mind2, count0, k)

@@ -1,0 +1,287 @@
+"""The ONE k-FED server implementation (Algorithm 2 steps 2-8).
+
+Every execution path routes through this module (DESIGN.md §4):
+
+  * ``core.kfed.aggregate``          -> :func:`aggregate`
+  * shard_map ``server="replicated"``-> :func:`aggregate` (after gather)
+  * shard_map ``server="sharded"``   -> :func:`aggregate_sharded`
+
+The replicated and sharded executions differ ONLY in the reducer handed
+to the shared greedy max-min loop (``lloyd.maxmin_grow``) and the shared
+one-round Lloyd update (:func:`lloyd_round`); the protocol arithmetic
+exists exactly once. The optional per-center ``weights`` (the |S_r| core
+set sizes from Algorithm 1) turn the Lloyd round into a weighted mean so
+large devices are not diluted by small ones.
+
+On top of the one-shot entry point the server exposes an incremental
+fold — :func:`init_state` / :func:`aggregate_incremental` /
+:func:`finalize` — so device cohorts can report asynchronously, in any
+order, across multiple calls. The fold buffers reports keyed by device
+id (the sufficient statistic of the one-shot protocol), which makes the
+finalized aggregate bitwise independent of arrival order; the
+non-commutative max-min seeding is deferred to :func:`finalize`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lloyd as L
+from repro.kernels import ops
+
+
+class KFedAggregate(NamedTuple):
+    seeds_idx: jax.Array       # (k,) indices into flattened (Z*k') centers
+    seed_centers: jax.Array    # (k, d) the set M
+    tau_centers: jax.Array     # (k, d) mu(tau_r) after the one Lloyd round
+    center_labels: jax.Array   # (Z, k') tau-label of each device center, -1 pad
+    z0: jax.Array              # () the device whose centers seeded M
+
+
+# ---------------------------------------------------------------------------
+# Shared stages.
+# ---------------------------------------------------------------------------
+
+
+def lloyd_round(x: jax.Array, fm: jax.Array, M: jax.Array, k: int, *,
+                reducer=None, weights: Optional[jax.Array] = None,
+                center_mask: Optional[jax.Array] = None):
+    """Steps 7-8 of Algorithm 2: ONE Lloyd round of the device centers
+    against the seeded set M. With ``weights`` (per-point, e.g. core set
+    sizes |S_r|) the update is the weighted mean. ``reducer.psum``
+    combines partial (sums, counts) across server shards (identity for
+    the replicated server).
+
+    Returns (tau (k, d) f32, labels (m,) int32).
+    """
+    reducer = reducer or L.LocalReducer()
+    labels, _ = L.assign_points(x, M, center_mask=center_mask, point_mask=fm)
+    w = None if weights is None else weights.astype(jnp.float32)
+    sums, cnt = ops.kmeans_update(x.astype(jnp.float32), labels, k, w)
+    sums = reducer.psum(sums)
+    cnt = reducer.psum(cnt)
+    tau = jnp.where((cnt > 0)[:, None],
+                    sums / jnp.maximum(cnt, 1.0)[:, None],
+                    M.astype(jnp.float32))
+    return tau, labels
+
+
+def induced_labels(center_labels: jax.Array,
+                   local_assign: jax.Array) -> jax.Array:
+    """Definition 3.3: point i on device z with local cluster s gets label
+    tau(theta_s^(z)). center_labels: (Z, k'), local_assign: (Z, n)."""
+    safe = jnp.clip(local_assign, 0, center_labels.shape[1] - 1)
+    lbl = jnp.take_along_axis(center_labels, safe, axis=1)
+    return jnp.where(local_assign >= 0, lbl, -1)
+
+
+def assign_new_device(new_centers: jax.Array, new_mask: jax.Array,
+                      ref_centers: jax.Array) -> jax.Array:
+    """Theorem 3.2: a device joining after clustering is assigned by
+    nearest-neighbor matching of its local centers against the k retained
+    server centers — O(k' * k) distance computations, no other device
+    involved. new_centers: (k', d); ref_centers: (k, d)."""
+    labels, _ = L.assign_points(new_centers, ref_centers,
+                                point_mask=new_mask)
+    return labels
+
+
+def core_weights(core_counts: jax.Array) -> jax.Array:
+    """Per-center weights for the server Lloyd round: the Algorithm 1
+    core set sizes |S_r|, clamped to >= 1 so a degenerate (empty-core)
+    center still anchors its own cluster."""
+    return jnp.maximum(core_counts.astype(jnp.float32), 1.0)
+
+
+def attach_absent_devices(center_labels: jax.Array,
+                          device_centers: jax.Array,
+                          center_mask: jax.Array,
+                          tau_centers: jax.Array,
+                          participation: jax.Array) -> jax.Array:
+    """Post-hoc attachment of devices that missed the round: their center
+    labels come from the Theorem 3.2 nearest-center rule against the
+    retained tau centers, with zero extra communication rounds."""
+    post = jax.vmap(lambda c, m: assign_new_device(c, m, tau_centers))(
+        device_centers, center_mask)
+    return jnp.where(participation[:, None], center_labels, post)
+
+
+# ---------------------------------------------------------------------------
+# Replicated execution (also the vmap simulation path).
+# ---------------------------------------------------------------------------
+
+
+def aggregate(device_centers: jax.Array, center_mask: jax.Array, k: int, *,
+              weights: Optional[jax.Array] = None) -> KFedAggregate:
+    """Steps 2-8 of Algorithm 2 on a full (Z, k', d) center tensor.
+
+    ``weights``: optional (Z, k') per-center weights for the Lloyd round
+    (masked centers never contribute regardless — their labels are -1).
+    """
+    Z, kp, d = device_centers.shape
+    flat = device_centers.reshape(Z * kp, d)
+    fm = center_mask.reshape(Z * kp)
+
+    # "Pick any z": deterministically pick the device with most local
+    # clusters (maximizes the seeded set, minimizes max-min iterations).
+    kz = jnp.sum(center_mask, axis=1)
+    z0 = jnp.argmax(kz).astype(jnp.int32)
+    init_sel = ((jnp.arange(Z) == z0)[:, None] & center_mask).reshape(-1)
+
+    seeds_idx = L.maxmin_seed(flat, fm, init_sel, k)
+    M = flat[seeds_idx]
+
+    w = None if weights is None else weights.reshape(Z * kp)
+    tau, labels = lloyd_round(flat, fm, M, k, weights=w)
+    return KFedAggregate(seeds_idx, M, tau.astype(device_centers.dtype),
+                         labels.reshape(Z, kp), z0)
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution: same stages, collective reducer.
+# ---------------------------------------------------------------------------
+
+_BIG = jnp.int32(2 ** 30)
+
+
+class ShardedReducer:
+    """Collective counterpart of ``lloyd.LocalReducer``: each shard owns
+    rows [base, base + m_loc) of the global point set. argmax resolves
+    ties to the smallest global index (= first occurrence), matching the
+    replicated ``jnp.argmax``."""
+
+    def __init__(self, axes, base, m_loc):
+        self.axes, self.base, self.m_loc = axes, base, m_loc
+
+    def argmax(self, vals: jax.Array) -> jax.Array:
+        lmax = jnp.max(vals)
+        larg = jnp.argmax(vals).astype(jnp.int32)
+        gmax = jax.lax.pmax(lmax, self.axes)
+        return jax.lax.pmin(
+            jnp.where(lmax >= gmax, self.base + larg, _BIG), self.axes)
+
+    def fetch_row(self, points: jax.Array, gidx: jax.Array) -> jax.Array:
+        mine = (gidx >= self.base) & (gidx < self.base + self.m_loc)
+        row = jnp.clip(gidx - self.base, 0, self.m_loc - 1)
+        return jax.lax.psum(jnp.where(mine, points[row], 0.0), self.axes)
+
+    def fetch_rows(self, points: jax.Array, gidx: jax.Array) -> jax.Array:
+        """(k,) global indices -> (k, d) rows, owner contributes."""
+        mine = (gidx >= self.base) & (gidx < self.base + self.m_loc)
+        rows = jnp.clip(gidx - self.base, 0, self.m_loc - 1)
+        return jax.lax.psum(
+            jnp.where(mine[:, None], points[rows], 0.0), self.axes)
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        return jax.lax.psum(x, self.axes)
+
+
+def aggregate_sharded(centers_loc, mask_loc, kz_all, k, axes, base, *,
+                      weights_loc: Optional[jax.Array] = None):
+    """Steps 2-8 of Algorithm 2 with the server itself sharded: each chip
+    owns its m_loc = Z_loc*k' slice of the device centers; the greedy
+    max-min runs as (local argmax -> two scalar all-reduces -> (d,) psum
+    of the winning center) per iteration, so per-chip HBM traffic is
+    m_loc*d per iteration instead of Z*k'*d (§Perf k-FED iteration 2).
+    Selection order matches the replicated server (first-occurrence
+    argmax = smallest global index among ties).
+
+    centers_loc: (Z_loc, k', d); mask_loc: (Z_loc, k'); kz_all: (Z,);
+    ``base`` = this shard's first global row index.
+    Returns (M (k, d), tau_centers (k, d), my_labels (Z_loc, k')).
+    """
+    Z_loc, kp, d = centers_loc.shape
+    m_loc = Z_loc * kp
+    pf = centers_loc.reshape(m_loc, d).astype(jnp.float32)
+    fm = mask_loc.reshape(m_loc)
+    shard = base // m_loc
+    red = ShardedReducer(axes, base, m_loc)
+
+    # "Pick any z": the device with most local clusters, first one wins.
+    z0 = jnp.argmax(kz_all).astype(jnp.int32)
+    own_rows = jnp.arange(m_loc) // kp == (z0 - shard * Z_loc)
+    init_loc = own_rows & fm                              # (m_loc,)
+    count0 = red.psum(jnp.sum(init_loc).astype(jnp.int32))
+
+    # Initial chosen indices (global, ascending) and their coordinates.
+    cand = jnp.where(init_loc, base + jnp.arange(m_loc, dtype=jnp.int32),
+                     _BIG)
+    cand = jnp.sort(cand)[:k] if m_loc >= k else jnp.sort(
+        jnp.pad(cand, (0, k - m_loc), constant_values=_BIG))[:k]
+    chosen0 = jax.lax.pmin(cand, axes)                    # (k,) owner wins
+    # owner scatters its init rows into slot order; others contribute 0
+    slot_of = jnp.cumsum(init_loc.astype(jnp.int32)) - 1
+    M0 = jnp.zeros((k, d), jnp.float32).at[
+        jnp.clip(slot_of, 0, k - 1)].add(
+            jnp.where(init_loc[:, None], pf, 0.0))
+    M0 = red.psum(M0)                                     # (k, d)
+
+    d2 = ops.pairwise_sq_dists(pf, M0)                    # (m_loc, k)
+    ok = jnp.arange(k) < count0
+    mind2 = jnp.min(jnp.where(ok[None, :], d2, jnp.inf), axis=1)
+    mind2 = jnp.where(fm, mind2, -jnp.inf)
+    chosen = jnp.where(jnp.arange(k) < count0, chosen0, -1)
+
+    # The SAME greedy growth loop as the replicated server, with the
+    # collective reducer swapped in.
+    chosen = L.maxmin_grow(pf, fm, chosen, mind2, count0, k, reducer=red)
+
+    # Assemble M from owners; one local Lloyd assignment + global update.
+    M = red.fetch_rows(pf, chosen)
+    w = None if weights_loc is None else weights_loc.reshape(m_loc)
+    tau, labels = lloyd_round(pf, fm, M, k, reducer=red, weights=w,
+                              center_mask=chosen >= 0)
+    return M, tau.astype(centers_loc.dtype), labels.reshape(Z_loc, kp)
+
+
+# ---------------------------------------------------------------------------
+# Incremental (asynchronous staged-arrival) server.
+# ---------------------------------------------------------------------------
+
+
+class ServerState(NamedTuple):
+    """Fold state of the asynchronous server: device reports buffered by
+    device id. Because the buffer position is the device id, folding the
+    same cohorts in ANY order yields the same state — and therefore a
+    bitwise-identical finalized clustering."""
+    centers: jax.Array    # (Z, k', d) buffered Theta^(z)
+    mask: jax.Array       # (Z, k') center validity of received reports
+    weights: jax.Array    # (Z, k') f32 per-center weights (1.0 default)
+    received: jax.Array   # (Z,) bool — device has reported this round
+
+
+def init_state(Z: int, k_prime: int, d: int,
+               dtype=jnp.float32) -> ServerState:
+    return ServerState(jnp.zeros((Z, k_prime, d), dtype),
+                       jnp.zeros((Z, k_prime), bool),
+                       jnp.ones((Z, k_prime), jnp.float32),
+                       jnp.zeros((Z,), bool))
+
+
+def aggregate_incremental(state: ServerState, device_ids, centers,
+                          mask, weights=None) -> ServerState:
+    """Fold one cohort's report into the server state.
+
+    device_ids: (B,) int; centers: (B, k', d); mask: (B, k'). Cohorts may
+    arrive in any order and across any number of calls; re-delivery of a
+    device report is idempotent.
+    """
+    ids = jnp.asarray(device_ids, jnp.int32)
+    w = (jnp.ones(jnp.shape(mask), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    return ServerState(state.centers.at[ids].set(centers),
+                       state.mask.at[ids].set(mask),
+                       state.weights.at[ids].set(w),
+                       state.received.at[ids].set(True))
+
+
+def finalize(state: ServerState, k: int, *,
+             weighted: bool = False) -> KFedAggregate:
+    """Run Algorithm 2 over every report received so far. Devices that
+    never reported are masked out (their labels come out -1); attach them
+    post-hoc with :func:`attach_absent_devices`."""
+    mask = state.mask & state.received[:, None]
+    return aggregate(state.centers, mask, k,
+                     weights=state.weights if weighted else None)

@@ -1,3 +1,9 @@
+from repro.fed.engine import (  # noqa: F401
+    EngineConfig,
+    RoundResult,
+    run_round,
+    run_round_async,
+)
 from repro.fed.fedavg import FedAvgConfig, fedavg_round, make_local_step  # noqa
 from repro.fed.ifca import ifca_round  # noqa: F401
 from repro.fed.personalize import kfed_personalize  # noqa: F401

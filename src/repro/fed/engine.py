@@ -1,0 +1,149 @@
+"""Pluggable federated execution engine for one-shot k-FED (DESIGN.md §4).
+
+One k-FED round decomposes into four stages:
+
+  1. local solve    — Algorithm 1 on each device (vmapped / sharded);
+  2. transport      — the ONE message per device: (Theta^(z), mask,
+                      optional core-set weights);
+  3. server         — Algorithm 2 via the shared core (``core/server``),
+                      one-shot or as an incremental fold;
+  4. induced labels — Definition 3.3 back on each device.
+
+The beyond-paper scenarios the paper's §4 promises are configurations of
+these stages rather than new protocol implementations:
+
+  * **partial participation** — a (Z,) bool mask; absent devices are
+    excluded from aggregation and attached post-hoc by the Theorem 3.2
+    nearest-center rule (zero extra rounds);
+  * **asynchronous staged arrival** — cohorts report across multiple
+    ``server.aggregate_incremental`` folds in ANY order; the finalized
+    labels are bitwise identical to the one-shot run with the same
+    participation set;
+  * **weighted aggregation** — the server's single Lloyd round weights
+    each device center by its Algorithm 1 core set size |S_r|, so large
+    devices are not diluted by small ones.
+
+The shard_map production paths (``core/distributed.kfed_shard_map``) run
+the same stages over a mesh; this module is the single-host engine the
+simulation path (``core.kfed.kfed``) is a thin configuration of.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import server
+from repro.core.local_kmeans import LocalKMeansResult, batched_local_kmeans
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Static configuration of one federated clustering round."""
+    k: int                                  # global cluster count
+    k_prime: int                            # per-device k^(z) cap
+    weight_by_core_counts: bool = False     # weighted server Lloyd round
+    local_kw: dict = field(default_factory=dict)  # Algorithm 1 options
+
+
+class RoundResult(NamedTuple):
+    agg: server.KFedAggregate
+    device_centers: jax.Array   # (Z, k', d)
+    center_mask: jax.Array      # (Z, k')
+    local_assign: jax.Array     # (Z, n)
+    core_counts: jax.Array      # (Z, k') |S_r| from Algorithm 1
+    center_labels: jax.Array    # (Z, k') incl. post-hoc attached devices
+    labels: jax.Array           # (Z, n) induced clustering, -1 padded
+    participated: jax.Array     # (Z,) bool
+
+
+def core_weights(loc: LocalKMeansResult) -> jax.Array:
+    """Per-center weights for the server Lloyd round (shared rule:
+    ``server.core_weights`` over the Algorithm 1 core set sizes)."""
+    return server.core_weights(loc.core_counts)
+
+
+def local_stage(key: jax.Array, device_data: jax.Array, cfg: EngineConfig,
+                *, k_valid=None, point_mask=None) -> LocalKMeansResult:
+    """Stage 1: vmapped Algorithm 1 over the device axis."""
+    Z = device_data.shape[0]
+    keys = jax.random.split(key, Z)
+    return batched_local_kmeans(keys, device_data, k_max=cfg.k_prime,
+                                k_valid=k_valid, point_mask=point_mask,
+                                **cfg.local_kw)
+
+
+def server_stage(loc: LocalKMeansResult, cfg: EngineConfig, *,
+                 participation: Optional[jax.Array] = None):
+    """Stages 2-3: transport masking + shared server aggregation, then
+    Theorem 3.2 post-hoc attachment of any absent devices.
+
+    Returns (agg, center_labels (Z, k'), participated (Z,) bool).
+    """
+    Z = loc.centers.shape[0]
+    w = core_weights(loc) if cfg.weight_by_core_counts else None
+    if participation is None:
+        agg = server.aggregate(loc.centers, loc.center_mask, cfg.k,
+                               weights=w)
+        return agg, agg.center_labels, jnp.ones((Z,), bool)
+    part = jnp.asarray(participation, bool)
+    mask = loc.center_mask & part[:, None]
+    agg = server.aggregate(loc.centers, mask, cfg.k, weights=w)
+    center_labels = server.attach_absent_devices(
+        agg.center_labels, loc.centers, loc.center_mask,
+        agg.tau_centers, part)
+    return agg, center_labels, part
+
+
+def _finish(loc: LocalKMeansResult, agg, center_labels, part) -> RoundResult:
+    labels = server.induced_labels(center_labels, loc.assign)
+    return RoundResult(agg, loc.centers, loc.center_mask, loc.assign,
+                       loc.core_counts, center_labels, labels, part)
+
+
+def run_round(key: jax.Array, device_data: jax.Array, cfg: EngineConfig, *,
+              participation: Optional[jax.Array] = None,
+              k_valid=None, point_mask=None) -> RoundResult:
+    """One synchronous k-FED round (optionally with partial
+    participation). The reference execution every other path — async,
+    shard_map replicated, shard_map sharded — must agree with."""
+    loc = local_stage(key, device_data, cfg, k_valid=k_valid,
+                      point_mask=point_mask)
+    agg, center_labels, part = server_stage(loc, cfg,
+                                            participation=participation)
+    return _finish(loc, agg, center_labels, part)
+
+
+def run_round_async(key: jax.Array, device_data: jax.Array,
+                    cfg: EngineConfig, cohorts: Sequence, *,
+                    k_valid=None, point_mask=None) -> RoundResult:
+    """Asynchronous staged arrival: ``cohorts`` is a sequence of
+    device-id index arrays reporting in that (arbitrary) order across
+    separate ``aggregate_incremental`` folds. Devices in no cohort are
+    treated as non-participants and attached post-hoc (Theorem 3.2).
+
+    Bitwise-identical labels to :func:`run_round` with ``participation``
+    = union(cohorts): the fold state is keyed by device id, so arrival
+    order cannot influence the finalized aggregate.
+    """
+    Z, _, d = device_data.shape
+    loc = local_stage(key, device_data, cfg, k_valid=k_valid,
+                      point_mask=point_mask)
+    w = core_weights(loc) if cfg.weight_by_core_counts else None
+
+    st = server.init_state(Z, cfg.k_prime, d, loc.centers.dtype)
+    part = jnp.zeros((Z,), bool)
+    for ids in cohorts:
+        ids = jnp.asarray(ids, jnp.int32)
+        st = server.aggregate_incremental(
+            st, ids, loc.centers[ids], loc.center_mask[ids],
+            weights=None if w is None else w[ids])
+        part = part.at[ids].set(True)
+
+    agg = server.finalize(st, cfg.k, weighted=cfg.weight_by_core_counts)
+    center_labels = server.attach_absent_devices(
+        agg.center_labels, loc.centers, loc.center_mask,
+        agg.tau_centers, part)
+    return _finish(loc, agg, center_labels, part)

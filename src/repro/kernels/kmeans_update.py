@@ -19,7 +19,7 @@ def _round_up(v: int, m: int) -> int:
 
 
 def _make_kernel(bn: int, kp: int):
-    def kernel(x_ref, a_ref, sums_ref, cnt_ref):
+    def kernel(x_ref, a_ref, w_ref, sums_ref, cnt_ref):
         i = pl.program_id(0)
 
         @pl.when(i == 0)
@@ -29,8 +29,10 @@ def _make_kernel(bn: int, kp: int):
 
         x = x_ref[...].astype(jnp.float32)
         a = a_ref[...]
+        w = w_ref[...]
         cols = jax.lax.broadcasted_iota(jnp.int32, (bn, kp), 1)
-        oh = (a[:, None] == cols).astype(jnp.float32)
+        # Weighted one-hot rows (weight 1.0 for the unweighted update).
+        oh = (a[:, None] == cols).astype(jnp.float32) * w[:, None]
         # one-hot^T @ x on the MXU: (kp, bn) x (bn, d) -> (kp, d)
         sums_ref[...] += jax.lax.dot_general(
             oh, x, (((0,), (0,)), ((), ())),
@@ -42,11 +44,13 @@ def _make_kernel(bn: int, kp: int):
 
 @functools.partial(jax.jit, static_argnames=("k", "bn", "interpret"))
 def kmeans_update(x: jax.Array, assign: jax.Array, k: int,
+                  weights: jax.Array | None = None,
                   *, bn: int = 256, interpret: bool = True):
-    """Per-cluster sums/counts. x: (n, d), assign: (n,) int32 in [-1, k).
+    """Per-cluster (weighted) sums/counts. x: (n, d), assign: (n,) int32
+    in [-1, k); weights: optional (n,) per-point mass.
 
     Returns (sums (k, d) f32, counts (k,) f32). Matches
-    ``ref.kmeans_update`` (without the optional weights argument).
+    ``ref.kmeans_update`` (including the optional weights argument).
     """
     n, d = x.shape
     np_ = _round_up(n, bn)
@@ -54,12 +58,16 @@ def kmeans_update(x: jax.Array, assign: jax.Array, k: int,
 
     xp = jnp.zeros((np_, d), x.dtype).at[:n].set(x)
     ap = jnp.full((np_,), -1, jnp.int32).at[:n].set(assign.astype(jnp.int32))
+    w = (jnp.ones((n,), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    wp = jnp.zeros((np_,), jnp.float32).at[:n].set(w)
 
     sums, cnt = pl.pallas_call(
         _make_kernel(bn, kp),
         grid=(np_ // bn,),
         in_specs=[
             pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
             pl.BlockSpec((bn,), lambda i: (i,)),
         ],
         out_specs=[
@@ -71,5 +79,5 @@ def kmeans_update(x: jax.Array, assign: jax.Array, k: int,
             jax.ShapeDtypeStruct((kp,), jnp.float32),
         ],
         interpret=interpret,
-    )(xp, ap)
+    )(xp, ap, wp)
     return sums[:k], cnt[:k]

@@ -1,9 +1,11 @@
 """Jit'd dispatch layer over the Pallas kernels and their jnp oracles.
 
 The framework's numerical code calls these entry points; the backend is
-selected globally (``set_backend``) or per-call. On this CPU container the
-Pallas path runs in interpret mode (the kernels target TPU; interpret mode
-executes the kernel body in Python for correctness validation).
+selected globally (``set_backend``) or per-call. Interpret mode is
+auto-detected from the platform: on TPU the kernels run compiled, on any
+other backend (e.g. this CPU container) they run in interpret mode (the
+kernel body executes in Python for correctness validation). Override
+with ``REPRO_KERNEL_INTERPRET=0|1`` or ``set_backend(..., interpret=)``.
 """
 from __future__ import annotations
 
@@ -16,11 +18,29 @@ from repro.kernels import ref as _ref
 
 _STATE = {
     "impl": os.environ.get("REPRO_KERNEL_IMPL", "ref"),  # "ref" | "pallas"
-    "interpret": True,
+    "interpret": None,  # None = auto-detect on first kernel call
 }
 
 
-def set_backend(impl: str, interpret: bool = True) -> None:
+def _auto_interpret() -> bool:
+    env = os.environ.get("REPRO_KERNEL_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "off")
+    # Compiled Pallas only on TPU; interpret everywhere else. Deferred to
+    # first kernel call so importing this module never initializes a
+    # backend.
+    return jax.default_backend() != "tpu"
+
+
+def _interpret() -> bool:
+    if _STATE["interpret"] is None:
+        _STATE["interpret"] = _auto_interpret()
+    return _STATE["interpret"]
+
+
+def set_backend(impl: str, interpret: Optional[bool] = None) -> None:
+    """Select the kernel implementation. ``interpret=None`` re-enables
+    platform auto-detection (compiled on TPU, interpret elsewhere)."""
     assert impl in ("ref", "pallas"), impl
     _STATE["impl"] = impl
     _STATE["interpret"] = interpret
@@ -39,22 +59,22 @@ def assign_argmin(x: jax.Array, c: jax.Array,
                   c_mask: Optional[jax.Array] = None):
     if _STATE["impl"] == "pallas":
         from repro.kernels.pdist_argmin import pairwise_argmin
-        return pairwise_argmin(x, c, c_mask, interpret=_STATE["interpret"])
+        return pairwise_argmin(x, c, c_mask, interpret=_interpret())
     return _ref.assign_argmin(x, c, c_mask)
 
 
 def kmeans_update(x: jax.Array, assign: jax.Array, k: int,
                   weights: Optional[jax.Array] = None):
-    if _STATE["impl"] == "pallas" and weights is None:
+    if _STATE["impl"] == "pallas":
         from repro.kernels.kmeans_update import kmeans_update as _pk
-        return _pk(x, assign, k, interpret=_STATE["interpret"])
+        return _pk(x, assign, k, weights, interpret=_interpret())
     return _ref.kmeans_update(x, assign, k, weights)
 
 
 def swa_decode_attention(q, kw, vw, bias, scale):
     if _STATE["impl"] == "pallas":
         from repro.kernels.swa_decode import swa_decode_attention as _pk
-        return _pk(q, kw, vw, bias, scale, interpret=_STATE["interpret"])
+        return _pk(q, kw, vw, bias, scale, interpret=_interpret())
     return _ref.swa_decode_attention(q, kw, vw, bias, scale)
 
 
@@ -63,7 +83,7 @@ def moe_dispatch(x, src, valid):
     gather on TPU)."""
     if _STATE["impl"] == "pallas":
         from repro.kernels.moe_dispatch import moe_dispatch as _pd
-        return _pd(x, src, valid, interpret=_STATE["interpret"])
+        return _pd(x, src, valid, interpret=_interpret())
     return _ref.moe_dispatch(x, src, valid)
 
 
@@ -71,5 +91,5 @@ def moe_combine(ybuf, slot, gates, top_k: int):
     if _STATE["impl"] == "pallas":
         from repro.kernels.moe_dispatch import moe_combine as _pc
         return _pc(ybuf, slot, gates, top_k=top_k,
-                   interpret=_STATE["interpret"])
+                   interpret=_interpret())
     return _ref.moe_combine(ybuf, slot, gates, top_k)

@@ -35,13 +35,18 @@ from repro.launch.roofline import roofline_terms
 SCENARIO = dict(Z=4096, n=4096, d=1024, k=256, k_prime=16)
 
 
+# TPU-native Algorithm 1 defaults (matmul-only SVD) shared by every
+# lowered scenario so the dryrun comparison stays apples-to-apples.
+DEFAULT_LOCAL_KW = dict(approx_iters=8, max_iters=32,
+                        use_subspace_iteration=True)
+
+
 def lower_kfed(mesh, axes, *, Z, n, d, k, k_prime, verbose=True,
                server="replicated", **local_kw):
     data = jax.ShapeDtypeStruct((Z, n, d), jnp.float32)
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
 
-    kw = dict(approx_iters=8, max_iters=32,
-              use_subspace_iteration=True)  # TPU-native: matmul-only SVD
+    kw = dict(DEFAULT_LOCAL_KW)
     kw.update(local_kw)
 
     def fn(key, data):
@@ -53,6 +58,31 @@ def lower_kfed(mesh, axes, *, Z, n, d, k, k_prime, verbose=True,
 
 def lower_kfed_sharded(mesh, axes, **kw):
     return lower_kfed(mesh, axes, server="sharded", **kw)
+
+
+def lower_kfed_partial(mesh, axes, *, Z, n, d, k, k_prime, **local_kw):
+    """Partial-participation scenario (DESIGN.md §4): a (Z,) bool mask is
+    an extra tiny operand; absent devices are attached post-hoc via the
+    Theorem 3.2 rule inside the same lowered program — the collective
+    schedule stays one-shot (one extra (Z,) bool gather at most)."""
+    data = jax.ShapeDtypeStruct((Z, n, d), jnp.float32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    part = jax.ShapeDtypeStruct((Z,), jnp.bool_)
+
+    kw = dict(DEFAULT_LOCAL_KW)
+    kw.update(local_kw)
+
+    def fn(key, data, part):
+        return kfed_shard_map(mesh, data, k, k_prime, key=key, axis=axes,
+                              participation=part, **kw)
+
+    return jax.jit(fn).lower(key, data, part)
+
+
+def lower_kfed_weighted(mesh, axes, **kw):
+    """Core-set-weighted aggregation through the shared server core; the
+    weights ride the existing one-shot gather as one extra (Z, k') f32."""
+    return lower_kfed(mesh, axes, weight_by_core_counts=True, **kw)
 
 
 def lower_lloyd_baseline(mesh, axes, *, Z, n, d, k, iters=25, **_):
@@ -115,7 +145,9 @@ def main():
         mesh = make_production_mesh(multi_pod=mp)
         axes = tuple(mesh.shape.keys())  # shard fed-devices over ALL axes
         todo = [("kfed-oneshot", lower_kfed),
-                ("kfed-oneshot-shardedserver", lower_kfed_sharded)]
+                ("kfed-oneshot-shardedserver", lower_kfed_sharded),
+                ("kfed-partial-participation", lower_kfed_partial),
+                ("kfed-weighted", lower_kfed_weighted)]
         if not args.skip_baseline:
             todo.append(("distributed-lloyd-baseline", lower_lloyd_baseline))
         for name, make in todo:

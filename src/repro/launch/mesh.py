@@ -7,18 +7,18 @@ device count before any jax initialization.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.utils.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n_data: int | None = None):
     """Mesh over whatever devices exist (tests / local examples)."""
     n = n_data or len(jax.devices())
-    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+    return make_mesh((n,), ("data",))

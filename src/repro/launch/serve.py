@@ -23,6 +23,25 @@ def make_prefill(model: Model, ctx: DistCtx):
     return prefill
 
 
+def make_kfed_attach(tau_centers, k_prime: int, **local_kw):
+    """Serving path for late-joining federated devices (Theorem 3.2,
+    DESIGN.md §4): given the retained tau centers of a finished k-FED
+    round, returns a jitted step ``(key, device_data) -> point labels``
+    that attaches one new device with a local Algorithm 1 solve plus
+    O(k' k) distance computations — no communication with any other
+    device and no recomputation of the round."""
+    from repro.core import server as S
+    from repro.core.local_kmeans import local_kmeans
+    tau = jnp.asarray(tau_centers)
+
+    def attach(key, device_data):
+        loc = local_kmeans(key, device_data, k_max=k_prime, **local_kw)
+        lbl = S.assign_new_device(loc.centers, loc.center_mask, tau)
+        return S.induced_labels(lbl[None], loc.assign[None])[0]
+
+    return jax.jit(attach)
+
+
 def generate(model: Model, params, batch, *, steps: int,
              ctx: DistCtx = None, greedy: bool = True,
              key=None):

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.utils.compat import shard_map as _shard_map
+
 from repro.models.common import DistCtx, dense_init
 
 
@@ -238,9 +240,9 @@ def _dense_shard_map(p, x, m, ctx: DistCtx):
                 {"router": P(None, None),
                  "w1": P(None, None, ctx.tp), "w3": P(None, None, ctx.tp),
                  "w2": P(None, ctx.tp, None)})
-    y, aux = jax.shard_map(
+    y, aux = _shard_map(
         block, mesh=ctx.mesh, in_specs=in_specs,
-        out_specs=(P(ctx.dp, None, None), P()), check_vma=False)(
+        out_specs=(P(ctx.dp, None, None), P()))(
             x, {k: p[k] for k in ("router", "w1", "w3", "w2")})
     return y, jnp.mean(aux)
 
@@ -304,10 +306,9 @@ def apply_moe(p, x, cfg, ctx: DistCtx):
         in_specs = (P(ctx.dp, None, None),
                     {"router": P(None, None), "w1": espec,
                      "w3": espec, "w2": espec})
-        y, aux = jax.shard_map(
+        y, aux = _shard_map(
             block, mesh=ctx.mesh, in_specs=in_specs,
-            out_specs=(P(ctx.dp, None, None), P()),
-            check_vma=False)(x, ep)
+            out_specs=(P(ctx.dp, None, None), P()))(x, ep)
         aux = jnp.mean(aux)
 
     if m.n_shared:

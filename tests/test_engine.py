@@ -1,0 +1,172 @@
+"""Federated engine scenarios (DESIGN.md §4): the shared server core,
+partial participation with Theorem 3.2 re-attachment, asynchronous
+staged arrival, and core-count-weighted aggregation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kfed as K
+from repro.core import server as S
+from repro.core.local_kmeans import batched_local_kmeans
+from repro.data.gaussian import structured_devices
+from repro.fed.engine import EngineConfig, run_round, run_round_async
+from repro.utils.metrics import clustering_accuracy
+
+
+def _setup(key=0, k=16, d=24, k_prime=4, m0=4, n=20, sep=60.0):
+    return structured_devices(jax.random.PRNGKey(key), k=k, d=d,
+                              k_prime=k_prime, m0=m0, n_per_comp_dev=n,
+                              sep=sep)
+
+
+CFG = EngineConfig(k=16, k_prime=4)
+
+
+def test_engine_is_the_kfed_path():
+    """kfed() is a thin configuration of the engine; both equal the
+    hand-composed stage pipeline through the shared server core."""
+    fm = _setup()
+    out = K.kfed(jax.random.PRNGKey(1), fm.data, k=16, k_prime=4)
+    r = run_round(jax.random.PRNGKey(1), fm.data, CFG)
+    np.testing.assert_array_equal(np.asarray(r.labels),
+                                  np.asarray(out.labels))
+
+    keys = jax.random.split(jax.random.PRNGKey(1), fm.data.shape[0])
+    loc = batched_local_kmeans(keys, fm.data, k_max=4)
+    agg = S.aggregate(loc.centers, loc.center_mask, 16)
+    labels = S.induced_labels(agg.center_labels, loc.assign)
+    np.testing.assert_array_equal(np.asarray(labels), np.asarray(r.labels))
+    assert clustering_accuracy(np.asarray(r.labels),
+                               np.asarray(fm.labels), 16) > 0.98
+
+
+def test_partial_participation_matches_theorem32_attachment():
+    """Dropping a device from the round and re-attaching it post-hoc is
+    EXACTLY the Theorem 3.2 nearest-center rule of assign_new_device."""
+    fm = _setup()
+    Z = fm.data.shape[0]
+    drop = 5
+    part = jnp.asarray(np.arange(Z) != drop)
+    r = run_round(jax.random.PRNGKey(1), fm.data, CFG, participation=part)
+
+    # Manual attachment from the same local solve + retained tau centers.
+    manual_ctr = S.assign_new_device(r.device_centers[drop],
+                                     r.center_mask[drop],
+                                     r.agg.tau_centers)
+    manual_pts = S.induced_labels(manual_ctr[None],
+                                  r.local_assign[drop][None])[0]
+    np.testing.assert_array_equal(np.asarray(r.labels[drop]),
+                                  np.asarray(manual_pts))
+    # The aggregate itself never saw the dropped device.
+    assert not bool(np.asarray(r.participated)[drop])
+    assert np.all(np.asarray(r.agg.center_labels)[drop] == -1)
+    # Everyone — including the re-attached device — lands correctly.
+    assert clustering_accuracy(np.asarray(r.labels),
+                               np.asarray(fm.labels), 16) > 0.97
+
+
+def test_async_staged_arrival_bitwise_equals_oneshot():
+    """Cohorts reporting across multiple aggregate_incremental folds, in
+    any order, finalize to bitwise-identical labels."""
+    fm = _setup()
+    full = run_round(jax.random.PRNGKey(1), fm.data, CFG)
+    orders = [
+        [[0, 1, 2, 3, 4, 5, 6, 7], [8, 9, 10, 11, 12, 13, 14, 15]],
+        [[15, 3, 9], [0, 1, 2, 4, 5, 6, 7, 8], [10, 11, 12, 13, 14]],
+        [[i] for i in reversed(range(16))],          # fully serialized
+    ]
+    for cohorts in orders:
+        ra = run_round_async(jax.random.PRNGKey(1), fm.data, CFG, cohorts)
+        np.testing.assert_array_equal(np.asarray(ra.labels),
+                                      np.asarray(full.labels))
+        assert bool(np.all(np.asarray(ra.participated)))
+
+
+def test_async_with_stragglers_matches_participation_mask():
+    """Devices missing from every cohort == the same participation mask
+    on the synchronous path, bitwise."""
+    fm = _setup()
+    missing = [3, 12]
+    part = jnp.asarray(~np.isin(np.arange(16), missing))
+    sync = run_round(jax.random.PRNGKey(1), fm.data, CFG,
+                     participation=part)
+    cohorts = [[i for i in range(16) if i not in missing and i % 3 == j]
+               for j in range(3)]
+    ra = run_round_async(jax.random.PRNGKey(1), fm.data, CFG, cohorts)
+    np.testing.assert_array_equal(np.asarray(ra.labels),
+                                  np.asarray(sync.labels))
+    np.testing.assert_array_equal(np.asarray(ra.participated),
+                                  np.asarray(sync.participated))
+
+
+def test_incremental_redelivery_idempotent():
+    """Re-delivering a cohort's report (retry after a network failure)
+    cannot change the finalized clustering."""
+    fm = _setup()
+    full = run_round(jax.random.PRNGKey(1), fm.data, CFG)
+    cohorts = [[0, 1, 2, 3, 4, 5, 6, 7], [4, 5, 6, 7],  # retry overlap
+               [8, 9, 10, 11, 12, 13, 14, 15], [0, 1, 2, 3]]
+    ra = run_round_async(jax.random.PRNGKey(1), fm.data, CFG, cohorts)
+    np.testing.assert_array_equal(np.asarray(ra.labels),
+                                  np.asarray(full.labels))
+
+
+def test_weighted_aggregation_recovers_and_weights_the_update():
+    """Core-count weighting keeps the paper's recovery guarantee on
+    well-separated data, and lloyd_round really computes the weighted
+    mean."""
+    fm = _setup()
+    cfg = EngineConfig(k=16, k_prime=4, weight_by_core_counts=True)
+    r = run_round(jax.random.PRNGKey(1), fm.data, cfg)
+    assert clustering_accuracy(np.asarray(r.labels),
+                               np.asarray(fm.labels), 16) > 0.98
+
+    # Exact weighted-mean semantics on a tiny hand case: two points in
+    # one cluster, weights 3 and 1 -> tau at the 3:1 interpolation.
+    x = jnp.asarray([[0.0, 0.0], [4.0, 0.0]])
+    fm_mask = jnp.ones((2,), bool)
+    M = jnp.asarray([[1.0, 0.0]])
+    w = jnp.asarray([3.0, 1.0])
+    tau, labels = S.lloyd_round(x, fm_mask, M, 1, weights=w)
+    np.testing.assert_array_equal(np.asarray(labels), [0, 0])
+    np.testing.assert_allclose(np.asarray(tau), [[1.0, 0.0]])
+
+
+def test_sharded_replicated_aggregate_share_one_core():
+    """The duplicated-protocol regression guard: the replicated
+    aggregate and the sharded execution route through the same greedy
+    loop (lloyd.maxmin_grow) and the same Lloyd round
+    (server.lloyd_round) — verified structurally, not by parallel
+    reimplementations drifting into agreement."""
+    import inspect
+    from repro.core import lloyd as L
+    rep_src = inspect.getsource(S.aggregate)
+    sh_src = inspect.getsource(S.aggregate_sharded)
+    assert "maxmin_seed" in rep_src and "lloyd_round" in rep_src
+    assert "maxmin_grow" in sh_src and "lloyd_round" in sh_src
+    assert "maxmin_grow" in inspect.getsource(L.maxmin_seed)
+    # kfed.aggregate and the engine delegate to the same function.
+    assert inspect.getsource(K.aggregate).count("S.aggregate") == 1
+
+
+def test_server_state_fold_matches_oneshot_aggregate():
+    """finalize(fold(cohorts)) == aggregate(all) when every device
+    reports — the fold state is the one-shot sufficient statistic."""
+    fm = _setup(m0=2)
+    Z = fm.data.shape[0]
+    keys = jax.random.split(jax.random.PRNGKey(1), Z)
+    loc = batched_local_kmeans(keys, fm.data, k_max=4)
+    one = S.aggregate(loc.centers, loc.center_mask, 16)
+
+    st = S.init_state(Z, 4, fm.data.shape[-1], loc.centers.dtype)
+    for ids in (list(range(Z - 1, -1, -2)), list(range(0, Z, 2))):
+        ids = jnp.asarray(ids, jnp.int32)
+        st = S.aggregate_incremental(st, ids, loc.centers[ids],
+                                     loc.center_mask[ids])
+    inc = S.finalize(st, 16)
+    np.testing.assert_array_equal(np.asarray(inc.center_labels),
+                                  np.asarray(one.center_labels))
+    np.testing.assert_array_equal(np.asarray(inc.seeds_idx),
+                                  np.asarray(one.seeds_idx))
+    np.testing.assert_allclose(np.asarray(inc.tau_centers),
+                               np.asarray(one.tau_centers))

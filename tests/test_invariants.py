@@ -4,7 +4,13 @@ message-size formula, and MoE capacity monotonicity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests here are hypothesis-driven; the engine suite "
+           "(test_engine.py) covers the deterministic invariants")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import lloyd as L
 from repro.core.kfed import kfed

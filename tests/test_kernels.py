@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.kmeans_update import kmeans_update as pk_update
@@ -52,6 +53,24 @@ def test_kmeans_update_matches_ref(n, d, k):
     np.testing.assert_allclose(np.asarray(sums), np.asarray(rsums),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(cnt), np.asarray(rcnt))
+
+
+@pytest.mark.parametrize("n,d,k", SHAPES)
+def test_kmeans_update_weighted_matches_ref(n, d, k):
+    """The weighted center update (server Lloyd round with core-set
+    weights) through the Pallas kernel vs the oracle."""
+    key = jax.random.PRNGKey(n * 11 + k)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (n, d))
+    assign = jax.random.randint(jax.random.PRNGKey(2), (n,), -1, k)
+    w = jax.random.uniform(kw, (n,), jnp.float32, 0.0, 5.0)
+    sums, cnt = pk_update(x, assign.astype(jnp.int32), k, w, bn=64,
+                          interpret=True)
+    rsums, rcnt = ref.kmeans_update(x, assign, k, w)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(rsums),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cnt), np.asarray(rcnt),
+                               rtol=1e-6, atol=1e-6)
 
 
 @pytest.mark.parametrize("b,h,kvh,dh,W", [(2, 8, 2, 64, 128),
