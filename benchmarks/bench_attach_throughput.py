@@ -1,0 +1,69 @@
+"""Attachment-service throughput: devices/sec and points/sec of the
+streaming post-round serving path (``fed.stream.AttachService``) over a
+batch-size sweep, plus the checkpoint -> restore -> serve bitwise
+round-trip the crash-recovery story depends on."""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.data.gaussian import late_device_stream, structured_devices
+from repro.fed.engine import EngineConfig, run_round
+from repro.fed.stream import AttachService, StreamConfig
+
+
+def _stream(means, k_prime, requests, n, seed):
+    """Fixed-shape requests (one bucket) so the sweep times pure serve."""
+    return [r[0] for r in late_device_stream(
+        means, k_prime, requests, seed, n_range=(n, n + 1),
+        kv_min=k_prime)]
+
+
+def run(full: bool = False):
+    k, kp, d = 16, 4, 24
+    n = 128 if full else 64
+    requests = 32 if full else 8
+    batch_sizes = (1, 8, 32) if full else (1, 8)
+
+    fm = structured_devices(jax.random.PRNGKey(0), k=k, d=d, k_prime=kp,
+                            m0=4, n_per_comp_dev=25, sep=60.0)
+    rr = run_round(jax.random.PRNGKey(1), fm.data,
+                   EngineConfig(k=k, k_prime=kp))
+    rows = []
+    for B in batch_sizes:
+        cfg = StreamConfig(k=k, k_prime=kp, d=d, capacity=4096,
+                           batch_size=B, bucket_sizes=(n,))
+        svc = AttachService.from_round(rr, cfg)
+        svc.serve(_stream(fm.means, kp, B, n, seed=99))  # compile warmup
+        reqs = _stream(fm.means, kp, requests, n, seed=7)
+        t0 = time.perf_counter()
+        svc.serve(reqs)
+        dt = time.perf_counter() - t0
+        pts = requests * n
+        rows.append(row(f"attach_bs{B}_n{n}", dt / requests * 1e6,
+                        f"dev_per_s={requests / dt:.1f};"
+                        f"pts_per_s={pts / dt:.0f}"))
+
+    # Crash recovery: checkpoint mid-stream, restore, serve the rest —
+    # must be bitwise identical to the uninterrupted service.
+    cfg = StreamConfig(k=k, k_prime=kp, d=d, capacity=4096,
+                       batch_size=batch_sizes[-1], bucket_sizes=(n,))
+    live = AttachService.from_round(rr, cfg)
+    reqs = _stream(fm.means, kp, requests, n, seed=11)
+    half = len(reqs) // 2
+    live.serve(reqs[:half])
+    path = os.path.join(tempfile.mkdtemp(), "attach_ck.npz")
+    t0 = time.perf_counter()
+    live.save(path)
+    restored = AttachService.restore(path, cfg)
+    us_ck = (time.perf_counter() - t0) * 1e6
+    same = all(np.array_equal(a, b)
+               for a, b in zip(live.serve(reqs[half:]),
+                               restored.serve(reqs[half:])))
+    rows.append(row("attach_ckpt_roundtrip", us_ck, f"bitwise={same}"))
+    return rows

@@ -26,6 +26,7 @@ BENCHES = {
     "table2": "benchmarks.bench_table2_personalization",
     "fig4": "benchmarks.bench_fig4_selection",
     "kernels": "benchmarks.bench_kernels",
+    "attach": "benchmarks.bench_attach_throughput",
     "ablation_moe": "benchmarks.bench_ablation_moe",
     "roofline": "benchmarks.bench_roofline",
 }

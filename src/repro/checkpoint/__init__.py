@@ -1,1 +1,5 @@
-from repro.checkpoint.store import load_pytree, save_pytree  # noqa: F401
+from repro.checkpoint.store import (  # noqa: F401
+    checkpoint_step,
+    load_pytree,
+    save_pytree,
+)

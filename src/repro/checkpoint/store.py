@@ -41,8 +41,14 @@ def save_pytree(path: str, tree, step: Optional[int] = None) -> str:
     flat = _flatten(tree)
     if step is not None:
         flat["__step__"] = np.asarray(step)
-    np.savez(path, **flat)
-    return path
+    # Atomic: write beside the target, then rename over it, so a crash
+    # mid-save (the scenario checkpoints exist for) can never leave a
+    # truncated file where the previous good checkpoint was.
+    final = path if path.endswith(".npz") else path + ".npz"
+    tmp = final + ".tmp.npz"
+    np.savez(tmp, **flat)
+    os.replace(tmp, final)
+    return final
 
 
 def load_pytree(path: str, like, shardings=None):

@@ -271,10 +271,13 @@ def aggregate_incremental(state: ServerState, device_ids, centers,
     ids = jnp.asarray(device_ids, jnp.int32)
     w = (jnp.ones(jnp.shape(mask), jnp.float32) if weights is None
          else weights.astype(jnp.float32))
-    return ServerState(state.centers.at[ids].set(centers),
-                       state.mask.at[ids].set(mask),
-                       state.weights.at[ids].set(w),
-                       state.received.at[ids].set(True))
+    # mode="drop": an id beyond the state's capacity is ignored instead
+    # of clipping onto (and corrupting) the last slot — the streaming
+    # service relies on over-capacity reports being served-not-folded.
+    return ServerState(state.centers.at[ids].set(centers, mode="drop"),
+                       state.mask.at[ids].set(mask, mode="drop"),
+                       state.weights.at[ids].set(w, mode="drop"),
+                       state.received.at[ids].set(True, mode="drop"))
 
 
 def finalize(state: ServerState, k: int, *,

@@ -9,10 +9,11 @@ Definition 3.2 heterogeneity with k' = sqrt(k) when so configured.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def make_mixture_means(key: jax.Array, k: int, d: int, *,
@@ -57,6 +58,29 @@ def structured_devices(key: jax.Array, *, k: int, d: int, k_prime: int,
     presence = jax.nn.one_hot(labels, k, dtype=bool).any(axis=1)
     k_valid = jnp.full((Z,), k_prime, jnp.int32)
     return FederatedMixture(data, labels, k_valid, presence, means, group)
+
+
+def late_device_stream(means, k_prime: int, requests: int, seed: int, *,
+                       n_range: Tuple[int, int] = (16, 400),
+                       kv_min: int = 1, sigma: float = 1.0):
+    """Synthetic post-round attach requests (host-side numpy): each late
+    device holds a random component subset of size k^(z) in
+    [kv_min, k_prime] and a ragged point count drawn from ``n_range`` —
+    the heterogeneous shapes the streaming service buckets
+    (``fed/stream.py``). Returns [(data (n, d) f32, labels (n,), k^(z))].
+    """
+    mu = np.asarray(means)
+    k, d = mu.shape
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(requests):
+        kv = int(rng.integers(kv_min, k_prime + 1))
+        comps = rng.choice(k, kv, replace=False)
+        n = int(rng.integers(*n_range))
+        lab = rng.choice(comps, n)
+        data = (mu[lab] + rng.normal(size=(n, d)) * sigma).astype(np.float32)
+        out.append((data, lab, kv))
+    return out
 
 
 def iid_devices(key: jax.Array, *, k: int, d: int, Z: int, n_per_dev: int,

@@ -8,3 +8,4 @@ from repro.fed.fedavg import FedAvgConfig, fedavg_round, make_local_step  # noqa
 from repro.fed.ifca import ifca_round  # noqa: F401
 from repro.fed.personalize import kfed_personalize  # noqa: F401
 from repro.fed.selection import kfed_pow_d, pow_d, random_selection  # noqa
+from repro.fed.stream import AttachService, StreamConfig  # noqa: F401

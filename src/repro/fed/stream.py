@@ -1,0 +1,286 @@
+"""Streaming post-round attachment service (DESIGN.md §9).
+
+Everything after the one communication round: a finalized k-FED round
+leaves k tau centers, and from then on the paper's Theorem 3.2 promises
+O(k'k) attachment of any late-joining device with zero extra rounds.
+This module turns that promise into a serving layer:
+
+  * **batching** — heterogeneous ``(n^(z), k^(z))`` attach requests are
+    bucketed by padded point count, padded into fixed ``(B, n_pad, d)``
+    shapes with point masks, and served by ONE jitted step that vmaps
+    the Algorithm 1 local solve over the request batch and attaches via
+    the Theorem 3.2 nearest-center rule;
+  * **online refresh** — each served report (Theta, mask, |S_r|) can be
+    folded into the incremental server state
+    (``server.aggregate_incremental``), and on a configurable cadence
+    the round is re-finalized so the cached tau centers track the
+    population (the membership-update problem of Holzer et al. 2023 /
+    Garst & Reinders 2023), still with one uplink per device ever;
+  * **crash recovery** — the full service state (tau centers, fold
+    state, counters, key seed) checkpoints through
+    ``checkpoint/store.py``; restore + serve is bitwise identical to
+    the uninterrupted service because request keys are derived from the
+    persisted request-id counter, never from wall clock.
+
+Request ids double as fold-state slots: ids below ``capacity`` are
+folded, later ones are served but not folded (admission control beyond
+that is a ROADMAP open item). In-flight (submitted, unflushed) requests
+are NOT part of a checkpoint — clients re-submit on failover.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import load_pytree, save_pytree
+from repro.core import server
+from repro.core.local_kmeans import batched_local_kmeans
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class StreamConfig:
+    """Static configuration of the attachment service."""
+    k: int                      # global cluster count of the round
+    k_prime: int                # per-request k^(z) cap (static pad)
+    d: int                      # feature dimension
+    capacity: int               # fold-state slots (device ids)
+    batch_size: int = 8         # requests per jitted serve step
+    bucket_sizes: Tuple[int, ...] = (64, 256, 1024)  # n^(z) pad buckets
+    refresh_every: int = 0      # re-finalize after this many folds; 0 = never
+    fold_reports: bool = True   # fold served reports into the server state
+    weight_by_core_counts: bool = False
+    local_kw: dict = field(default_factory=dict)  # Algorithm 1 options
+
+    def __post_init__(self):
+        assert list(self.bucket_sizes) == sorted(set(self.bucket_sizes)), (
+            "bucket_sizes must be strictly ascending", self.bucket_sizes)
+
+
+class AttachService:
+    """Serves batches of late-joining devices against a finalized round.
+
+    Construct with :meth:`from_round` (seeds the fold state with the
+    round's own reports) or :meth:`restore` (from a checkpoint).
+    """
+
+    def __init__(self, cfg: StreamConfig, tau_centers, *,
+                 state: Optional[server.ServerState] = None,
+                 seed: int = 0, next_id: int = 0,
+                 since_refresh: int = 0, served_devices: int = 0,
+                 served_points: int = 0):
+        self.cfg = cfg
+        self.tau = jnp.asarray(tau_centers, jnp.float32)
+        assert self.tau.shape == (cfg.k, cfg.d), self.tau.shape
+        self.state = (server.init_state(cfg.capacity, cfg.k_prime, cfg.d)
+                      if state is None
+                      else jax.tree.map(jnp.asarray, state))
+        self._base_seed = int(seed)
+        self._base_key = jax.random.PRNGKey(self._base_seed)
+        self._next_id = int(next_id)
+        self._since_refresh = int(since_refresh)
+        self._served_devices = int(served_devices)
+        self._served_points = int(served_points)
+        self._pending: List[Tuple[int, np.ndarray, int]] = []
+        self._done: Dict[int, np.ndarray] = {}  # served, not yet delivered
+        self._step = jax.jit(self._make_step())
+
+    # ------------------------------------------------------------- build --
+
+    @classmethod
+    def from_round(cls, rr, cfg: StreamConfig, *,
+                   seed: int = 0) -> "AttachService":
+        """Seed the service from a finished ``fed.engine.RoundResult``:
+        cache its tau centers and fold the participating devices' reports
+        so a later refresh re-finalizes over round + streamed devices."""
+        Z = int(rr.device_centers.shape[0])
+        assert cfg.capacity >= Z, (cfg.capacity, Z)
+        svc = cls(cfg, rr.agg.tau_centers, seed=seed, next_id=Z)
+        if cfg.fold_reports:
+            ids = np.nonzero(np.asarray(rr.participated))[0]
+            if ids.size:
+                w = (server.core_weights(rr.core_counts[ids])
+                     if cfg.weight_by_core_counts else None)
+                svc.state = server.aggregate_incremental(
+                    svc.state, jnp.asarray(ids, jnp.int32),
+                    rr.device_centers[ids], rr.center_mask[ids], weights=w)
+        return svc
+
+    def _make_step(self):
+        cfg = self.cfg
+
+        def step(tau, keys, data, point_mask, k_valid):
+            loc = batched_local_kmeans(keys, data, k_max=cfg.k_prime,
+                                       k_valid=k_valid,
+                                       point_mask=point_mask,
+                                       **cfg.local_kw)
+            ctr = jax.vmap(
+                lambda c, m: server.assign_new_device(c, m, tau))(
+                    loc.centers, loc.center_mask)
+            labels = server.induced_labels(ctr, loc.assign)
+            return (labels, loc.centers, loc.center_mask,
+                    server.core_weights(loc.core_counts))
+
+        return step
+
+    # ------------------------------------------------------------- serve --
+
+    def submit(self, data, k_valid: Optional[int] = None) -> int:
+        """Enqueue one device's (n, d) data; returns its request id (the
+        fold slot, and the PRNG stream of its local solve)."""
+        arr = np.asarray(data, np.float32)
+        assert arr.ndim == 2 and arr.shape[1] == self.cfg.d, arr.shape
+        kv = self.cfg.k_prime if k_valid is None else int(k_valid)
+        assert 1 <= kv <= self.cfg.k_prime, kv
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append((rid, arr, kv))
+        return rid
+
+    def _bucket(self, n: int) -> int:
+        for b in self.cfg.bucket_sizes:
+            if n <= b:
+                return b
+        return _round_up(n, self.cfg.bucket_sizes[-1])
+
+    def flush(self) -> Dict[int, np.ndarray]:
+        """Serve every pending request; returns {request_id: (n,) labels}.
+
+        Requests are grouped by pad bucket and served in fixed
+        (batch_size, n_pad, d) shapes — short batches pad by repeating
+        the last real request (discarded). Served reports fold into the
+        incremental server state, triggering a refresh on cadence.
+        """
+        pending, self._pending = self._pending, []
+        buckets: Dict[int, list] = {}
+        for item in pending:
+            buckets.setdefault(self._bucket(item[1].shape[0]), []).append(
+                item)
+        out, self._done = self._done, {}  # undelivered earlier results
+        try:
+            for n_pad in sorted(buckets):
+                group = buckets[n_pad]
+                B = self.cfg.batch_size
+                for lo in range(0, len(group), B):
+                    self._serve_batch(group[lo:lo + B], n_pad, out)
+        except BaseException:
+            # A failed batch must not lose work: computed results go
+            # back to the undelivered buffer, unserved requests requeue.
+            self._done.update(out)
+            self._pending = [it for it in pending
+                             if it[0] not in out] + self._pending
+            raise
+        return out
+
+    def serve(self, datas, k_valid=None) -> List[np.ndarray]:
+        """Submit + flush convenience: one labels array per input.
+        Results of OTHER requests already pending stay queued for the
+        next :meth:`flush`."""
+        kvs = ([None] * len(datas) if k_valid is None else list(k_valid))
+        assert len(kvs) == len(datas), (len(kvs), len(datas))
+        rids = [self.submit(d, kv) for d, kv in zip(datas, kvs)]
+        got = self.flush()
+        mine = [got.pop(r) for r in rids]
+        self._done.update(got)
+        return mine
+
+    def _serve_batch(self, batch, n_pad: int, out: Dict[int, np.ndarray]):
+        cfg = self.cfg
+        B = cfg.batch_size
+        data = np.zeros((B, n_pad, cfg.d), np.float32)
+        pmask = np.zeros((B, n_pad), bool)
+        kv = np.full((B,), cfg.k_prime, np.int32)
+        rids = np.zeros((B,), np.int64)
+        for i in range(B):
+            rid, arr, k_valid = batch[min(i, len(batch) - 1)]  # pad=repeat
+            n = arr.shape[0]
+            data[i, :n] = arr
+            pmask[i, :n] = True
+            kv[i] = k_valid
+            rids[i] = rid
+        keys = jax.vmap(lambda r: jax.random.fold_in(self._base_key, r))(
+            jnp.asarray(rids, jnp.uint32))
+        labels, centers, cmask, weights = self._step(
+            self.tau, keys, jnp.asarray(data), jnp.asarray(pmask),
+            jnp.asarray(kv))
+        labels = np.asarray(labels)
+        for i, (rid, arr, _) in enumerate(batch):
+            out[rid] = labels[i, :arr.shape[0]]
+            self._served_devices += 1
+            self._served_points += arr.shape[0]
+        if cfg.fold_reports:
+            self._fold(batch, rids, centers, cmask, weights)
+
+    def _fold(self, batch, rids, centers, cmask, weights):
+        keep = [i for i in range(len(batch))
+                if rids[i] < self.cfg.capacity]
+        if not keep:
+            return
+        sel = jnp.asarray(keep, jnp.int32)
+        ids = jnp.asarray(rids[keep], jnp.int32)
+        w = weights[sel] if self.cfg.weight_by_core_counts else None
+        self.state = server.aggregate_incremental(
+            self.state, ids, centers[sel], cmask[sel], weights=w)
+        self._since_refresh += len(keep)
+        if self.cfg.refresh_every and (
+                self._since_refresh >= self.cfg.refresh_every):
+            self.refresh()
+
+    # ----------------------------------------------------------- refresh --
+
+    def refresh(self) -> server.KFedAggregate:
+        """Re-finalize Algorithm 2 over every folded report (round
+        devices + streamed attachments) and swap in the new tau centers.
+        tau is a traced argument of the serve step, so no recompile."""
+        agg = server.finalize(self.state, self.cfg.k,
+                              weighted=self.cfg.weight_by_core_counts)
+        self.tau = jnp.asarray(agg.tau_centers, jnp.float32)
+        self._since_refresh = 0
+        return agg
+
+    # -------------------------------------------------------- checkpoint --
+
+    def _counters(self) -> np.ndarray:
+        return np.asarray([self._next_id, self._since_refresh,
+                           self._served_devices, self._served_points,
+                           self._base_seed], np.int64)
+
+    def save(self, path: str) -> str:
+        """Checkpoint tau + fold state + counters (npz via
+        ``checkpoint.store``). Pending requests are not persisted."""
+        return save_pytree(path, {"tau": self.tau, "server": self.state,
+                                  "counters": self._counters()})
+
+    @classmethod
+    def restore(cls, path: str, cfg: StreamConfig) -> "AttachService":
+        like = {
+            "tau": jnp.zeros((cfg.k, cfg.d), jnp.float32),
+            "server": server.init_state(cfg.capacity, cfg.k_prime, cfg.d),
+            "counters": np.zeros((5,), np.int64),
+        }
+        tree = load_pytree(path, like)
+        cnt = np.asarray(tree["counters"])
+        return cls(cfg, tree["tau"], state=tree["server"],
+                   seed=int(cnt[4]), next_id=int(cnt[0]),
+                   since_refresh=int(cnt[1]), served_devices=int(cnt[2]),
+                   served_points=int(cnt[3]))
+
+    # ------------------------------------------------------------- stats --
+
+    def stats(self) -> dict:
+        return {
+            "served_devices": self._served_devices,
+            "served_points": self._served_points,
+            "folded": int(np.asarray(jnp.sum(self.state.received))),
+            "capacity": self.cfg.capacity,
+            "pending": len(self._pending),
+            "undelivered": len(self._done),
+            "since_refresh": self._since_refresh,
+        }

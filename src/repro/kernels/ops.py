@@ -13,12 +13,17 @@ import os
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 
 _STATE = {
     "impl": os.environ.get("REPRO_KERNEL_IMPL", "ref"),  # "ref" | "pallas"
     "interpret": None,  # None = auto-detect on first kernel call
+    # Row count above which assign_argmin streams fixed-size chunks
+    # through the kernel instead of one monolithic call (bounds the
+    # padded/intermediate footprint for million-point labeling).
+    "chunk_rows": int(os.environ.get("REPRO_ASSIGN_CHUNK_ROWS", 1 << 18)),
 }
 
 
@@ -38,12 +43,25 @@ def _interpret() -> bool:
     return _STATE["interpret"]
 
 
-def set_backend(impl: str, interpret: Optional[bool] = None) -> None:
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Per-call override -> resolved interpret flag. Kernel modules call
+    this so a direct kernel invocation (bypassing the dispatchers below)
+    still gets the platform auto-detection instead of a hardcoded
+    default."""
+    return _interpret() if interpret is None else interpret
+
+
+def set_backend(impl: str, interpret: Optional[bool] = None,
+                chunk_rows: Optional[int] = None) -> None:
     """Select the kernel implementation. ``interpret=None`` re-enables
-    platform auto-detection (compiled on TPU, interpret elsewhere)."""
+    platform auto-detection (compiled on TPU, interpret elsewhere).
+    ``chunk_rows`` sets the auto-chunking threshold of
+    :func:`assign_argmin` (0 disables)."""
     assert impl in ("ref", "pallas"), impl
     _STATE["impl"] = impl
     _STATE["interpret"] = interpret
+    if chunk_rows is not None:
+        _STATE["chunk_rows"] = chunk_rows
 
 
 def get_backend() -> str:
@@ -55,12 +73,46 @@ def pairwise_sq_dists(x: jax.Array, c: jax.Array) -> jax.Array:
     return _ref.pairwise_sq_dists(x, c)
 
 
-def assign_argmin(x: jax.Array, c: jax.Array,
-                  c_mask: Optional[jax.Array] = None):
+def _assign_argmin_one(x: jax.Array, c: jax.Array,
+                       c_mask: Optional[jax.Array] = None):
     if _STATE["impl"] == "pallas":
         from repro.kernels.pdist_argmin import pairwise_argmin
         return pairwise_argmin(x, c, c_mask, interpret=_interpret())
     return _ref.assign_argmin(x, c, c_mask)
+
+
+def assign_argmin_chunked(x: jax.Array, c: jax.Array,
+                          c_mask: Optional[jax.Array] = None,
+                          *, chunk: int = 1 << 18):
+    """Streaming nearest-center assignment: rows of ``x`` are processed
+    in fixed ``chunk``-size tiles (``lax.map`` — one kernel launch per
+    tile, sequential), so the working set stays O(chunk * d) no matter
+    how many points are labeled. Same (idx, min_sq_dist) contract as
+    :func:`assign_argmin`."""
+    n, d = x.shape
+    if n <= chunk:
+        return _assign_argmin_one(x, c, c_mask)
+    # Whole chunks stream through lax.map; the ragged tail gets its own
+    # call — no full zero-padded copy of x (that would double peak
+    # memory on exactly the inputs chunking exists to bound).
+    nfull = (n // chunk) * chunk
+    idx, val = jax.lax.map(
+        lambda xb: _assign_argmin_one(xb, c, c_mask),
+        x[:nfull].reshape(-1, chunk, d))
+    idx, val = idx.reshape(-1), val.reshape(-1)
+    if nfull < n:
+        ti, tv = _assign_argmin_one(x[nfull:], c, c_mask)
+        idx = jnp.concatenate([idx, ti])
+        val = jnp.concatenate([val, tv])
+    return idx, val
+
+
+def assign_argmin(x: jax.Array, c: jax.Array,
+                  c_mask: Optional[jax.Array] = None):
+    chunk = _STATE["chunk_rows"]
+    if chunk and x.shape[0] > chunk:
+        return assign_argmin_chunked(x, c, c_mask, chunk=chunk)
+    return _assign_argmin_one(x, c, c_mask)
 
 
 def kmeans_update(x: jax.Array, assign: jax.Array, k: int,

@@ -5,11 +5,18 @@ Algorithm 1 and the one-round server Lloyd of k-FED) is matmul-shaped:
 
     d(i, r) = ||x_i||^2 - 2 x_i . c_r + ||c_r||^2
 
-We tile (n, d) into (bn, bd) VMEM blocks, drive the -2 x @ c^T term through
-the MXU (128-aligned tiles), accumulate partial dot products over d-blocks
-in a VMEM scratch accumulator, and fuse the argmin so the (n, k) distance
-matrix never round-trips to HBM. Outputs are the assignment indices and
-the min squared distance per point.
+We tile (n, d) into (bn, bd) VMEM blocks and the center axis into bk
+blocks, drive the -2 x @ c^T term through the MXU (128-aligned tiles),
+accumulate partial dot products over d-blocks in a (bn, bk) VMEM scratch
+accumulator, and fuse the argmin so the (n, k) distance matrix never
+round-trips to HBM. The per-point running (idx, val) best lives in the
+output block (resident across the k/d grid axes), so VMEM usage is fixed
+at O(bn * (bd + bk)) regardless of k — large-k center sets (the induced
+labeling of a production round with thousands of retained centers)
+stream through in tiles instead of materializing one (bn, k) scratch.
+Outputs are the assignment indices and the min squared distance per
+point; ties resolve to the smallest center index (first occurrence),
+matching ``jnp.argmin``.
 """
 from __future__ import annotations
 
@@ -28,45 +35,54 @@ def _round_up(v: int, m: int) -> int:
 
 
 def _kernel(x_ref, c_ref, cn_ref, idx_ref, val_ref, acc_ref, xn_ref):
-    j = pl.program_id(1)
-    nj = pl.num_programs(1)
+    kb = pl.program_id(1)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    bk = acc_ref.shape[1]
+
+    @pl.when((kb == 0) & (j == 0))
+    def _init_best():
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+        val_ref[...] = jnp.full_like(val_ref, jnp.inf)
+        xn_ref[...] = jnp.zeros_like(xn_ref)
 
     @pl.when(j == 0)
-    def _init():
+    def _init_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
-        xn_ref[...] = jnp.zeros_like(xn_ref)
 
     x = x_ref[...].astype(jnp.float32)
     c = c_ref[...].astype(jnp.float32)
     # -2 * x @ c.T on the MXU, accumulated over d-blocks.
     acc_ref[...] += -2.0 * jax.lax.dot_general(
         x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    xn_ref[...] += jnp.sum(x * x, axis=1)
+
+    # ||x||^2 depends only on the row block: accumulate it on the first
+    # k-block pass and reuse the scratch for the rest.
+    @pl.when(kb == 0)
+    def _xnorm():
+        xn_ref[...] += jnp.sum(x * x, axis=1)
 
     @pl.when(j == nj - 1)
-    def _finalize():
+    def _merge():
         d = acc_ref[...] + cn_ref[...][None, :] + xn_ref[...][:, None]
         d = jnp.maximum(d, 0.0)
-        idx_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)
-        val_ref[...] = jnp.min(d, axis=1)
+        bidx = jnp.argmin(d, axis=1).astype(jnp.int32)
+        bval = jnp.min(d, axis=1)
+        # Strict < keeps the earlier k-block on ties; within a block
+        # argmin picks the first — together: smallest global index.
+        better = bval < val_ref[...]
+        idx_ref[...] = jnp.where(better, kb * bk + bidx, idx_ref[...])
+        val_ref[...] = jnp.where(better, bval, val_ref[...])
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "bd", "interpret"))
-def pairwise_argmin(x: jax.Array, c: jax.Array,
-                    c_mask: jax.Array | None = None,
-                    *, bn: int = 128, bd: int = 512,
-                    interpret: bool = True):
-    """Fused nearest-center assignment. x: (n, d), c: (k, d).
-
-    Returns (idx (n,) int32, min_sq_dist (n,) f32). Matches
-    ``ref.assign_argmin`` (masked centers excluded via an additive
-    MASKED_DIST on their norm term).
-    """
+@functools.partial(jax.jit, static_argnames=("bn", "bd", "bk", "interpret"))
+def _pairwise_argmin(x, c, c_mask, *, bn: int, bd: int, bk: int,
+                     interpret: bool):
     n, d = x.shape
     k = c.shape[0]
-    np_, dp = _round_up(n, bn), _round_up(min(d, bd) if d < bd else d, bd)
-    dp = max(dp, bd)
-    kp = _round_up(k, 128)
+    np_, dp = _round_up(n, bn), _round_up(d, bd)
+    bk = min(_round_up(bk, 128), _round_up(k, 128))
+    kp = _round_up(_round_up(k, 128), bk)
 
     xp = jnp.zeros((np_, dp), x.dtype).at[:n, :d].set(x)
     cp = jnp.zeros((kp, dp), c.dtype).at[:k, :d].set(c)
@@ -76,27 +92,45 @@ def pairwise_argmin(x: jax.Array, c: jax.Array,
         valid = valid & jnp.pad(c_mask, (0, kp - k), constant_values=False)
     cn = jnp.where(valid, cn, MASKED_DIST)
 
-    grid = (np_ // bn, dp // bd)
+    grid = (np_ // bn, kp // bk, dp // bd)   # d innermost: acc stays hot
     idx, val = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),   # x tile
-            pl.BlockSpec((kp, bd), lambda i, j: (0, j)),   # all centers, d tile
-            pl.BlockSpec((kp,), lambda i, j: (0,)),        # masked center norms
+            pl.BlockSpec((bn, bd), lambda i, kb, j: (i, j)),  # x tile
+            pl.BlockSpec((bk, bd), lambda i, kb, j: (kb, j)),  # center tile
+            pl.BlockSpec((bk,), lambda i, kb, j: (kb,)),  # masked norms
         ],
         out_specs=[
-            pl.BlockSpec((bn,), lambda i, j: (i,)),
-            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, kb, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, kb, j: (i,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((np_,), jnp.int32),
             jax.ShapeDtypeStruct((np_,), jnp.float32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((bn, kp), jnp.float32),
+            pltpu.VMEM((bn, bk), jnp.float32),
             pltpu.VMEM((bn,), jnp.float32),
         ],
         interpret=interpret,
     )(xp, cp, cn)
     return idx[:n], val[:n]
+
+
+def pairwise_argmin(x: jax.Array, c: jax.Array,
+                    c_mask: jax.Array | None = None,
+                    *, bn: int = 128, bd: int = 512, bk: int = 512,
+                    interpret: bool | None = None):
+    """Fused nearest-center assignment. x: (n, d), c: (k, d).
+
+    Returns (idx (n,) int32, min_sq_dist (n,) f32). Matches
+    ``ref.assign_argmin`` (masked centers excluded via an additive
+    MASKED_DIST on their norm term). ``bk`` tiles the center axis so
+    VMEM stays fixed for large k. ``interpret=None`` uses the same
+    platform auto-detection as ``kernels.ops`` (compiled on TPU,
+    interpret elsewhere) instead of silently interpreting on TPU.
+    """
+    from repro.kernels import ops
+    return _pairwise_argmin(x, c, c_mask, bn=bn, bd=bd, bk=bk,
+                            interpret=ops.resolve_interpret(interpret))

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from _hyp import given, settings, st
+
 from repro.core import kfed as K
 from repro.core import server as S
 from repro.core.local_kmeans import batched_local_kmeans
@@ -170,3 +172,75 @@ def test_server_state_fold_matches_oneshot_aggregate():
                                   np.asarray(one.seeds_idx))
     np.testing.assert_allclose(np.asarray(inc.tau_centers),
                                np.asarray(one.tau_centers))
+
+
+# ----------- property-based fold conformance (generated shapes) -----------
+#
+# The hand-picked cohort cases above pin two schedules; these generate the
+# whole space: random (Z, k', d, k), random participation, a random
+# permutation of the participants split at random chunk boundaries, plus a
+# re-delivered chunk — every schedule must finalize bitwise identical to
+# the synchronous aggregate with the same participation set.
+
+
+def _aggs_equal(a: S.KFedAggregate, b: S.KFedAggregate) -> None:
+    np.testing.assert_array_equal(np.asarray(a.seeds_idx),
+                                  np.asarray(b.seeds_idx))
+    np.testing.assert_array_equal(np.asarray(a.center_labels),
+                                  np.asarray(b.center_labels))
+    np.testing.assert_array_equal(np.asarray(a.tau_centers),
+                                  np.asarray(b.tau_centers))  # bitwise
+    np.testing.assert_array_equal(np.asarray(a.z0), np.asarray(b.z0))
+
+
+def _fold_schedule(rng, st0, ids, centers, mask, weights):
+    """Deliver ``ids`` permuted, in random chunks, with one random chunk
+    re-delivered at a random later point (retry)."""
+    perm = rng.permutation(ids)
+    nchunks = int(rng.integers(1, len(perm) + 1))
+    bounds = np.sort(rng.choice(np.arange(1, len(perm)),
+                                size=min(nchunks - 1, len(perm) - 1),
+                                replace=False)) if len(perm) > 1 else []
+    cohorts = [c for c in np.split(perm, bounds) if len(c)]
+    if cohorts:  # idempotent re-delivery of a random cohort
+        cohorts.insert(int(rng.integers(0, len(cohorts) + 1)),
+                       cohorts[int(rng.integers(0, len(cohorts)))])
+    state = st0
+    for ids_c in cohorts:
+        ids_c = jnp.asarray(ids_c, jnp.int32)
+        w = None if weights is None else weights[ids_c]
+        state = S.aggregate_incremental(state, ids_c, centers[ids_c],
+                                        mask[ids_c], weights=w)
+    return state
+
+
+@settings(max_examples=8, deadline=None)
+@given(Z=st.integers(2, 20), kp=st.integers(1, 5), d=st.integers(1, 12),
+       seed=st.integers(0, 2 ** 16))
+def test_property_fold_conformance_bitwise(Z, kp, d, seed):
+    rng = np.random.default_rng((Z, kp, d, seed))
+    centers = jnp.asarray(rng.normal(size=(Z, kp, d)) * 3, jnp.float32)
+    mask = rng.random((Z, kp)) < 0.7
+    mask[:, 0] = True                       # >= 1 valid center per device
+    mask = jnp.asarray(mask)
+    part = rng.random(Z) < 0.8
+    part[int(rng.integers(Z))] = True       # >= 1 participant
+    weighted = bool(seed & 1)
+    weights = (jnp.asarray(rng.uniform(0.5, 5.0, (Z, kp)), jnp.float32)
+               if weighted else None)
+
+    eff_mask = mask & jnp.asarray(part)[:, None]
+    k = int(rng.integers(1, int(np.asarray(eff_mask).sum()) + 1))
+    sync = S.aggregate(centers, eff_mask, k, weights=weights)
+
+    st0 = S.init_state(Z, kp, d, centers.dtype)
+    ids = np.nonzero(part)[0].astype(np.int32)
+    folded = _fold_schedule(rng, st0, ids, centers, mask, weights)
+    inc = S.finalize(folded, k, weighted=weighted)
+    _aggs_equal(sync, inc)
+
+    # A second independent schedule folds to the same state bitwise —
+    # order/chunking invariance without reference to the sync path.
+    folded2 = _fold_schedule(rng, st0, ids, centers, mask, weights)
+    for la, lb in zip(jax.tree.leaves(folded), jax.tree.leaves(folded2)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))

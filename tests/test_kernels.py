@@ -97,6 +97,81 @@ def test_swa_decode_matches_ref(b, h, kvh, dh, W, dtype):
                                rtol=tol, atol=tol)
 
 
+# -------- pairwise_argmin edge shapes: ragged n/d, k-tiling, masks ------
+
+from repro.kernels import ops
+
+EDGE_SHAPES = [
+    (37, 5, 7),      # n % bn != 0, d far below bd
+    (64, 130, 7),    # d above bd, non-multiple
+    (50, 33, 129),   # k > 128: two k-blocks at bk=128
+    (100, 70, 300),  # k > 256: three k-blocks
+]
+
+
+@pytest.mark.parametrize("n,d,k", EDGE_SHAPES)
+def test_pairwise_argmin_edge_shapes_match_ref(n, d, k):
+    kx, kc, km = jax.random.split(jax.random.PRNGKey(n * 3 + k), 3)
+    x = jax.random.normal(kx, (n, d)) * 3
+    c = jax.random.normal(kc, (k, d)) * 3
+    cm = jax.random.bernoulli(km, 0.8, (k,)).at[0].set(True)
+    idx, val = pk_argmin(x, c, cm, bn=32, bd=64, bk=128, interpret=True)
+    ridx, rval = ref.assign_argmin(x, c, cm)
+    rd = np.asarray(jnp.where(cm[None, :], ref.pairwise_sq_dists(x, c),
+                              ref.MASKED_DIST))
+    np.testing.assert_allclose(rd[np.arange(n), np.asarray(idx)],
+                               rd[np.arange(n), np.asarray(ridx)],
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(val), np.asarray(rval),
+                               rtol=1e-4, atol=1e-4)
+    assert np.all(np.asarray(cm)[np.asarray(idx)])  # never a masked center
+
+
+def test_pairwise_argmin_single_valid_center_k_tiled():
+    """One valid center living in the SECOND k-block: every point must
+    find it across the block-merge."""
+    n, d, k, only = 40, 9, 200, 137
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    c = jax.random.normal(jax.random.PRNGKey(1), (k, d))
+    cm = jnp.zeros((k,), bool).at[only].set(True)
+    idx, val = pk_argmin(x, c, cm, bn=32, bd=64, bk=128, interpret=True)
+    assert np.all(np.asarray(idx) == only)
+    want = np.asarray(ref.pairwise_sq_dists(x, c))[:, only]
+    np.testing.assert_allclose(np.asarray(val), want, rtol=1e-4, atol=1e-4)
+
+
+def test_pairwise_argmin_interpret_autodetect():
+    """The interpret default routes through ops' platform auto-detect
+    (compiled on TPU, interpret elsewhere) instead of hardcoding True."""
+    assert ops.resolve_interpret(None) == (jax.default_backend() != "tpu")
+    assert ops.resolve_interpret(True) is True
+    assert ops.resolve_interpret(False) is False
+    x = jax.random.normal(jax.random.PRNGKey(0), (17, 6))
+    c = jax.random.normal(jax.random.PRNGKey(1), (5, 6))
+    idx, _ = pk_argmin(x, c)  # no interpret kwarg: auto-detected path
+    ridx, _ = ref.assign_argmin(x, c)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_assign_argmin_chunked_matches_monolithic(impl):
+    """The streaming driver (fixed-size row tiles) is exact vs the
+    one-call path, on both backends, ragged final chunk included."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (777, 10))
+    c = jax.random.normal(jax.random.PRNGKey(3), (9, 10))
+    cm = jnp.arange(9) != 4
+    prev_impl, prev_interp = ops.get_backend(), ops._STATE["interpret"]
+    try:
+        ops.set_backend(impl)
+        ci, cv = ops.assign_argmin_chunked(x, c, cm, chunk=100)
+        mi, mv = ops.assign_argmin(x, c, cm)
+    finally:
+        ops.set_backend(prev_impl, prev_interp)
+    np.testing.assert_array_equal(np.asarray(ci), np.asarray(mi))
+    np.testing.assert_allclose(np.asarray(cv), np.asarray(mv),
+                               rtol=1e-5, atol=1e-5)
+
+
 # ---------------- hypothesis property tests ----------------
 
 @settings(max_examples=15, deadline=None)
