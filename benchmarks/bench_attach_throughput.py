@@ -1,5 +1,5 @@
 """Attachment-service throughput: devices/sec and points/sec of the
-streaming post-round serving path (``fed.stream.AttachService``) over a
+streaming post-round serving path (``fed.api.Session.serve``) over a
 batch-size sweep, plus the checkpoint -> restore -> serve bitwise
 round-trip the crash-recovery story depends on."""
 from __future__ import annotations
@@ -13,8 +13,7 @@ import numpy as np
 
 from benchmarks.common import row
 from repro.data.gaussian import late_device_stream, structured_devices
-from repro.fed.engine import EngineConfig, run_round
-from repro.fed.stream import AttachService, StreamConfig
+from repro.fed.api import FederationPlan, Session
 
 
 def _stream(means, k_prime, requests, n, seed):
@@ -32,17 +31,22 @@ def run(full: bool = False):
 
     fm = structured_devices(jax.random.PRNGKey(0), k=k, d=d, k_prime=kp,
                             m0=4, n_per_comp_dev=25, sep=60.0)
-    rr = run_round(jax.random.PRNGKey(1), fm.data,
-                   EngineConfig(k=k, k_prime=kp))
+    # ONE round shared across every streaming plan in the sweep.
+    rr = Session(FederationPlan(k=k, k_prime=kp, d=d)).run(
+        jax.random.PRNGKey(1), fm.data).detail
+
+    def session(B):
+        plan = FederationPlan(k=k, k_prime=kp, d=d, capacity=4096,
+                              batch_size=B, bucket_sizes=(n,))
+        return Session.from_round(plan, rr)
+
     rows = []
     for B in batch_sizes:
-        cfg = StreamConfig(k=k, k_prime=kp, d=d, capacity=4096,
-                           batch_size=B, bucket_sizes=(n,))
-        svc = AttachService.from_round(rr, cfg)
-        svc.serve(_stream(fm.means, kp, B, n, seed=99))  # compile warmup
+        sess = session(B)
+        sess.serve(_stream(fm.means, kp, B, n, seed=99))  # compile warmup
         reqs = _stream(fm.means, kp, requests, n, seed=7)
         t0 = time.perf_counter()
-        svc.serve(reqs)
+        sess.serve(reqs)
         dt = time.perf_counter() - t0
         pts = requests * n
         rows.append(row(f"attach_bs{B}_n{n}", dt / requests * 1e6,
@@ -50,17 +54,15 @@ def run(full: bool = False):
                         f"pts_per_s={pts / dt:.0f}"))
 
     # Crash recovery: checkpoint mid-stream, restore, serve the rest —
-    # must be bitwise identical to the uninterrupted service.
-    cfg = StreamConfig(k=k, k_prime=kp, d=d, capacity=4096,
-                       batch_size=batch_sizes[-1], bucket_sizes=(n,))
-    live = AttachService.from_round(rr, cfg)
+    # must be bitwise identical to the uninterrupted session.
+    live = session(batch_sizes[-1])
     reqs = _stream(fm.means, kp, requests, n, seed=11)
     half = len(reqs) // 2
     live.serve(reqs[:half])
     path = os.path.join(tempfile.mkdtemp(), "attach_ck.npz")
     t0 = time.perf_counter()
     live.save(path)
-    restored = AttachService.restore(path, cfg)
+    restored = Session.restore(path, live.plan)
     us_ck = (time.perf_counter() - t0) * 1e6
     same = all(np.array_equal(a, b)
                for a, b in zip(live.serve(reqs[half:]),

@@ -6,9 +6,9 @@ import jax
 import numpy as np
 
 from benchmarks.common import row, time_call
-from repro.core.kfed import kfed
 from repro.core.separation import separation_report
 from repro.data.gaussian import structured_devices
+from repro.fed.api import FederationPlan, Session
 from repro.utils.metrics import clustering_accuracy
 
 C_VALUES_QUICK = [0.5, 1.0, 2.0, 6.0]
@@ -26,8 +26,9 @@ def run(full: bool = False, seeds: int = 3):
             fm = structured_devices(jax.random.PRNGKey(s), k=k, d=d,
                                     k_prime=kp, m0=m0, n_per_comp_dev=30,
                                     sep=c * np.sqrt(d))
-            fn = jax.jit(lambda data: kfed(
-                jax.random.PRNGKey(100 + s), data, k=k, k_prime=kp))
+            sess = Session(FederationPlan(k=k, k_prime=kp, d=d))
+            fn = jax.jit(lambda data: sess.run(
+                jax.random.PRNGKey(100 + s), data))
             us, out = time_call(fn, fm.data, repeats=1)
             accs.append(clustering_accuracy(np.asarray(out.labels),
                                             np.asarray(fm.labels), k))

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_call
-from repro.core.kfed import kfed, kmeans_cost_of_labels
+from repro.core.kfed import kmeans_cost_of_labels
+from repro.fed.api import FederationPlan, Session
 from repro.core.lloyd import kmeans_pp_init, lloyd
 from repro.data.partition import partition_iid, partition_structured
 from repro.data.synthetic_tasks import femnist_like, shakespeare_like
@@ -39,10 +40,12 @@ def _run_dataset(name, xs, ys, k, k_primes, Z, seeds=2):
             ii = partition_iid(rng, X, orc_lbl, k=k, Z=Z)
 
             def cost_of(part, kp_eff):
-                res = kfed(jax.random.PRNGKey(10 + s),
-                           jnp.asarray(part.data), k=k, k_prime=kp_eff,
-                           k_valid=jnp.asarray(part.k_valid),
-                           point_mask=jnp.asarray(part.point_mask))
+                plan = FederationPlan(k=k, k_prime=kp_eff,
+                                      d=int(part.data.shape[-1]))
+                res = Session(plan).run(
+                    jax.random.PRNGKey(10 + s), jnp.asarray(part.data),
+                    k_valid=jnp.asarray(part.k_valid),
+                    point_mask=jnp.asarray(part.point_mask))
                 lbl = jnp.where(jnp.asarray(part.point_mask),
                                 res.labels, -1)
                 return float(kmeans_cost_of_labels(

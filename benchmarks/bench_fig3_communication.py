@@ -10,9 +10,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_call
-from repro.core.kfed import kfed, kmeans_cost_of_labels
+from repro.core.kfed import kmeans_cost_of_labels
 from repro.core.lloyd import assign_points, kmeans_pp_init, update_centers
 from repro.data.gaussian import structured_devices
+from repro.fed.api import FederationPlan, Session
 
 
 def _central_lloyd_sim(key, data, k, iters):
@@ -39,8 +40,9 @@ def run(full: bool = False):
                                 k_prime=kp_eff, m0=m0 * (kp // kp_eff),
                                 n_per_comp_dev=n_per, sep=25.0)
         Z = fm.data.shape[0]
-        fn = jax.jit(lambda data: kfed(jax.random.PRNGKey(7 + s), data,
-                                       k=k, k_prime=kp_eff))
+        sess = Session(FederationPlan(k=k, k_prime=kp_eff, d=d))
+        fn = jax.jit(lambda data: sess.run(jax.random.PRNGKey(7 + s),
+                                           data))
         us, out = time_call(fn, fm.data, repeats=1)
         phi_kfed = float(kmeans_cost_of_labels(fm.data.reshape(-1, d),
                                                out.labels.reshape(-1), k))

@@ -12,7 +12,7 @@ import numpy as np
 
 from benchmarks._models import init_mlp, mlp_accuracy, mlp_loss
 from benchmarks.common import row
-from repro.core.kfed import kfed
+from repro.fed.api import FederationPlan, Session
 from repro.data.partition import _pack
 from repro.data.synthetic_tasks import femnist_like
 from repro.fed.client import local_sgd
@@ -38,7 +38,8 @@ def run(full: bool = False):
     # One-shot k-FED clustering of devices by mean feature (k' = 1).
     feats = (X * M[..., None]).sum(1) / jnp.maximum(
         M.sum(1), 1)[:, None]
-    res = kfed(jax.random.PRNGKey(5), feats[:, None, :], k=8, k_prime=1)
+    res = Session(FederationPlan(k=8, k_prime=1, d=d)).run(
+        jax.random.PRNGKey(5), feats[:, None, :])
     clusters = np.asarray(res.labels[:, 0])
 
     def run_strategy(strategy):

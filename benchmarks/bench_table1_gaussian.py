@@ -8,8 +8,8 @@ import jax
 import numpy as np
 
 from benchmarks.common import row, time_call
-from repro.core.kfed import kfed
 from repro.data.gaussian import structured_devices
+from repro.fed.api import FederationPlan, Session
 from repro.utils.metrics import clustering_accuracy
 
 # (d, k, m0): paper's settings, with a quick-mode subset first.
@@ -30,8 +30,9 @@ def run(full: bool = False, seeds: int = 3):
                                     k_prime=kp, m0=m0,
                                     n_per_comp_dev=40,
                                     sep=100.0 * 0.3)  # c~O(10) effective
-            fn = jax.jit(lambda data: kfed(
-                jax.random.PRNGKey(100 + s), data, k=k, k_prime=kp))
+            sess = Session(FederationPlan(k=k, k_prime=kp, d=d))
+            fn = jax.jit(lambda data: sess.run(
+                jax.random.PRNGKey(100 + s), data))
             us, out = time_call(fn, fm.data, repeats=1)
             accs.append(clustering_accuracy(np.asarray(out.labels),
                                             np.asarray(fm.labels), k))

@@ -4,6 +4,7 @@ roofline). Prints ``name,us_per_call,derived`` CSV rows.
   PYTHONPATH=src python -m benchmarks.run            # quick mode
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale
   PYTHONPATH=src python -m benchmarks.run --only table1,fig3
+  PYTHONPATH=src python -m benchmarks.run --list     # valid bench keys
   PYTHONPATH=src python -m benchmarks.run --json .   # + BENCH_<ts>.json
 
 ``--json OUT`` additionally writes a structured ``BENCH_<timestamp>.json``
@@ -62,8 +63,19 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write a BENCH_<timestamp>.json perf record to "
                          "the OUT directory (or exact .json path)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the valid bench keys and exit")
     args = ap.parse_args()
+    if args.list:
+        for key in BENCHES:
+            print(key)
+        return
     keys = list(BENCHES) if not args.only else args.only.split(",")
+    unknown = [key for key in keys if key not in BENCHES]
+    if unknown:
+        print(f"error: unknown bench key(s): {', '.join(unknown)}\n"
+              f"valid keys: {', '.join(BENCHES)}", file=sys.stderr)
+        sys.exit(2)
 
     import importlib
     t_start = time.time()

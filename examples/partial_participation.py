@@ -1,14 +1,14 @@
 """Partial participation, asynchronous arrival, and straggler serving
-with the federated engine (DESIGN.md §4).
+through the declarative federation API (DESIGN.md §4, §10).
 
 Simulates the failure modes the paper's one-shot protocol tolerates:
   * a cohort of devices misses the round (network partition) — they are
     excluded from aggregation and re-attached post-hoc (Theorem 3.2);
   * the remaining cohorts report asynchronously, out of order, with one
-    retry — the final clustering is bitwise identical to the synchronous
-    round;
+    retry — ``Session.fold``/``finalize`` yields a clustering bitwise
+    identical to the synchronous ``Session.run``;
   * a brand-new device arrives at serving time and is labeled by the
-    jitted attach step with zero extra communication rounds.
+    session's jitted attach step with zero extra communication rounds.
 
   PYTHONPATH=src python examples/partial_participation.py
 """
@@ -17,8 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.gaussian import structured_devices
-from repro.fed.engine import EngineConfig, run_round, run_round_async
-from repro.launch.serve import make_kfed_attach
+from repro.fed.api import FederationPlan, Session
 from repro.utils.metrics import clustering_accuracy
 
 
@@ -27,10 +26,11 @@ def main():
     fm = structured_devices(jax.random.PRNGKey(0), k=k, d=24, k_prime=kp,
                             m0=m0, n_per_comp_dev=25, sep=60.0)
     Z = fm.data.shape[0]
-    cfg = EngineConfig(k=k, k_prime=kp, weight_by_core_counts=True)
+    plan = FederationPlan(k=k, k_prime=kp, d=24,
+                          weight_by_core_counts=True)
 
     # --- Synchronous reference round. ------------------------------------
-    full = run_round(jax.random.PRNGKey(1), fm.data, cfg)
+    full = Session(plan).run(jax.random.PRNGKey(1), fm.data)
     acc = clustering_accuracy(np.asarray(full.labels),
                               np.asarray(fm.labels), k)
     print(f"network: Z={Z} devices, k={k}, k'={kp} "
@@ -40,8 +40,8 @@ def main():
     # --- Two devices miss the round entirely. -----------------------------
     missing = np.array([3, Z - 2])
     part = jnp.asarray(~np.isin(np.arange(Z), missing))
-    dropped = run_round(jax.random.PRNGKey(1), fm.data, cfg,
-                        participation=part)
+    dropped = Session(plan).run(jax.random.PRNGKey(1), fm.data,
+                                participation=part)
     acc_d = clustering_accuracy(np.asarray(dropped.labels),
                                 np.asarray(fm.labels), k)
     print(f"devices {missing.tolist()} offline: accuracy {100 * acc_d:.2f}% "
@@ -50,7 +50,10 @@ def main():
     # --- The same round, asynchronously, cohorts out of order + a retry. --
     ids = [z for z in range(Z) if z not in missing]
     cohorts = [ids[2::3], ids[0::3], ids[2::3], ids[1::3]]  # retry of [2::3]
-    staged = run_round_async(jax.random.PRNGKey(1), fm.data, cfg, cohorts)
+    sess = Session(plan).begin(jax.random.PRNGKey(1), fm.data)
+    for cohort in cohorts:
+        sess.fold(cohort)
+    staged = sess.finalize()
     same = bool(np.array_equal(np.asarray(staged.labels),
                                np.asarray(dropped.labels)))
     print(f"async staged arrival ({len(cohorts)} folds, shuffled, 1 retry): "
@@ -63,7 +66,7 @@ def main():
     late_labels = jnp.repeat(comps, 25)
     late_data = fm.means[late_labels] + jax.random.normal(
         jax.random.PRNGKey(7), (late_labels.shape[0], fm.means.shape[1]))
-    attach = make_kfed_attach(staged.agg.tau_centers, kp)
+    attach = sess.attach_fn()
     pts = attach(jax.random.PRNGKey(8), late_data)
     acc_l = clustering_accuracy(np.asarray(pts), np.asarray(late_labels), k)
     print(f"late device via serving path: accuracy {100 * acc_l:.2f}% "

@@ -1,9 +1,13 @@
-"""Quickstart: one-shot federated clustering with k-FED.
+"""Quickstart: one-shot federated clustering through the declarative
+federation API (``FederationPlan`` + ``Session``, DESIGN.md §10).
 
 Builds the paper's Section 4.1 setup (mixture of k Gaussians, k' = sqrt(k)
-components per device, m0 devices per component group), runs k-FED, and
-reports accuracy against the target clustering plus the exact
-communication cost of the single round.
+components per device, m0 devices per component group), declares the
+deployment as a plan, runs the one communication round through a
+Session, and reports accuracy against the target clustering plus the
+exact communication cost. The same Session then serves a straggler
+device that joins AFTER clustering (Theorem 3.2) — no network-wide
+recomputation, just O(k' k) distance computations.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,9 +16,8 @@ import math
 import jax
 import numpy as np
 
-from repro.core.kfed import assign_new_device, induced_labels, kfed
-from repro.core.local_kmeans import local_kmeans
 from repro.data.gaussian import structured_devices
+from repro.fed.api import FederationPlan, Session
 from repro.utils.metrics import clustering_accuracy
 
 
@@ -26,7 +29,11 @@ def main():
     Z, n, _ = fm.data.shape
     print(f"network: Z={Z} devices, {n} points each, k={k}, k'={kp}")
 
-    out = kfed(jax.random.PRNGKey(1), fm.data, k=k, k_prime=kp)
+    # The whole deployment is ONE declarative spec; the Session owns the
+    # lifecycle (run -> attach/serve -> save/restore).
+    plan = FederationPlan(k=k, k_prime=kp, d=d)
+    sess = Session(plan)
+    out = sess.run(jax.random.PRNGKey(1), fm.data)
     acc = clustering_accuracy(np.asarray(out.labels),
                               np.asarray(fm.labels), k)
     upload = Z * kp * d * 4
@@ -34,14 +41,11 @@ def main():
     print(f"one-shot communication: {upload / 1024:.1f} KiB total uplink "
           f"({kp * d * 4} B per device)")
 
-    # A straggler device joins AFTER clustering (Theorem 3.2): no
-    # network-wide recomputation, just O(k' k) distance computations.
+    # A straggler device joins AFTER clustering (Theorem 3.2): the same
+    # Session attaches it against the retained tau centers.
     late = structured_devices(jax.random.PRNGKey(2), k=k, d=d, k_prime=kp,
                               m0=1, n_per_comp_dev=40, sep=40.0)
-    loc = local_kmeans(jax.random.PRNGKey(3), late.data[0], k_max=kp)
-    lbl = assign_new_device(loc.centers, loc.center_mask,
-                            out.agg.tau_centers)
-    pts = induced_labels(lbl[None], loc.assign[None])[0]
+    pts = sess.attach(np.asarray(late.data[0]))
     late_acc = clustering_accuracy(np.asarray(pts),
                                    np.asarray(late.labels[0]), k)
     print(f"late-joining device assigned with {100 * late_acc:.2f}% "

@@ -1,13 +1,14 @@
-"""Post-round streaming attachment with the AttachService
-(fed/stream.py, DESIGN.md §9).
+"""Post-round streaming attachment through the Session lifecycle
+(``fed/api.py``, DESIGN.md §9–§10).
 
 One k-FED communication round finishes; from then on late devices
 stream in with heterogeneous (n, k') shapes and are served in batches —
 local Algorithm 1 solve vmapped over the batch, Theorem 3.2 attachment
 against the cached tau centers, each report folded back into the
-incremental server so a periodic refresh keeps tau tracking the
-population. Mid-stream the service checkpoints and a restored replica
-proves bitwise-identical serving (crash recovery).
+incremental server by the plan's admission policy so a periodic refresh
+keeps tau tracking the population. Mid-stream the session checkpoints
+and a restored replica proves bitwise-identical serving (crash
+recovery).
 
   PYTHONPATH=src python examples/streaming_attach.py
 """
@@ -18,8 +19,7 @@ import jax
 import numpy as np
 
 from repro.data.gaussian import late_device_stream, structured_devices
-from repro.fed.engine import EngineConfig, run_round
-from repro.fed.stream import AttachService, StreamConfig
+from repro.fed.api import FederationPlan, Session
 from repro.utils.metrics import clustering_accuracy
 
 
@@ -27,14 +27,14 @@ def main():
     k, kp, d = 16, 4, 24
     fm = structured_devices(jax.random.PRNGKey(0), k=k, d=d, k_prime=kp,
                             m0=4, n_per_comp_dev=25, sep=60.0)
-    rr = run_round(jax.random.PRNGKey(1), fm.data,
-                   EngineConfig(k=k, k_prime=kp))
+    # One plan declares the round AND the serving layer behind it.
+    plan = FederationPlan(k=k, k_prime=kp, d=d, capacity=1024,
+                          batch_size=4, bucket_sizes=(32, 128),
+                          refresh_every=8)
+    sess = Session(plan)
+    rr = sess.run(jax.random.PRNGKey(1), fm.data)
     print(f"round finalized: Z={fm.data.shape[0]}, accuracy "
           f"{100 * clustering_accuracy(np.asarray(rr.labels), np.asarray(fm.labels), k):.2f}%")
-
-    cfg = StreamConfig(k=k, k_prime=kp, d=d, capacity=1024, batch_size=4,
-                       bucket_sizes=(32, 128), refresh_every=8)
-    svc = AttachService.from_round(rr, cfg)
 
     # A stream of late devices: random component subsets, ragged n, k'.
     stream = late_device_stream(fm.means, kp, 12, seed=7,
@@ -43,20 +43,20 @@ def main():
     truths = [r[1] for r in stream]
     kvs = [r[2] for r in stream]
 
-    out = svc.serve(reqs[:6], kvs[:6])
+    out = sess.serve(reqs[:6], kvs[:6])
     accs = [clustering_accuracy(l, t, k) for l, t in zip(out, truths)]
     print(f"served 6 late devices (ragged n, k'): mean accuracy "
           f"{100 * float(np.mean(accs)):.2f}%")
 
     path = os.path.join(tempfile.mkdtemp(), "attach.npz")
-    svc.save(path)
-    replica = AttachService.restore(path, cfg)
-    a = svc.serve(reqs[6:], kvs[6:])
+    sess.save(path)
+    replica = Session.restore(path, plan)
+    a = sess.serve(reqs[6:], kvs[6:])
     b = replica.serve(reqs[6:], kvs[6:])
     same = all(np.array_equal(x, y) for x, y in zip(a, b))
     print(f"checkpoint -> restore -> serve bitwise identical: {same}")
     assert same
-    print(f"stats: {svc.stats()}")
+    print(f"stats: {sess.stats()}")
 
 
 if __name__ == "__main__":

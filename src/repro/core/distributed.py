@@ -51,14 +51,17 @@ def _flat_axis_index(axes, mesh):
     return idx
 
 
-def kfed_shard_map(mesh, data: jax.Array, k: int, k_prime: int, *,
-                   key: jax.Array, axis="data", server: str = "replicated",
-                   participation: Optional[jax.Array] = None,
-                   weight_by_core_counts: bool = False,
-                   k_valid: Optional[jax.Array] = None,
-                   point_mask: Optional[jax.Array] = None,
-                   **local_kw):
-    """One-shot k-FED over a device mesh.
+def kfed_shard_map_impl(mesh, data: jax.Array, k: int, k_prime: int, *,
+                        key: jax.Array, axis="data",
+                        server: str = "replicated",
+                        participation: Optional[jax.Array] = None,
+                        weight_by_core_counts: bool = False,
+                        k_valid: Optional[jax.Array] = None,
+                        point_mask: Optional[jax.Array] = None,
+                        **local_kw):
+    """One-shot k-FED over a device mesh (engine internal; the
+    declarative surface is ``fed.api.Session`` with topology
+    ``replicated`` | ``sharded``).
 
     data: (Z, n, d) with Z divisible by the total shard count. ``axis``
     may be one mesh axis name or a tuple (the federated-device dimension
@@ -75,6 +78,10 @@ def kfed_shard_map(mesh, data: jax.Array, k: int, k_prime: int, *,
     weights the server's Lloyd round by the Algorithm 1 core set sizes.
     Returns (labels (Z, n), tau_centers (k, d) replicated).
     """
+    if server not in ("replicated", "sharded"):
+        raise ValueError(
+            f"kfed_shard_map server={server!r} is invalid: accepted "
+            f"values are ['replicated', 'sharded']")
     Z, n, d = data.shape
     axes = _axes(axis)
     nshards = 1
@@ -143,6 +150,35 @@ def kfed_shard_map(mesh, data: jax.Array, k: int, k_prime: int, *,
     return fn(*args)
 
 
+def kfed_shard_map(mesh, data: jax.Array, k: int, k_prime: int, *,
+                   key: jax.Array, axis="data", server: str = "replicated",
+                   participation: Optional[jax.Array] = None,
+                   weight_by_core_counts: bool = False,
+                   k_valid: Optional[jax.Array] = None,
+                   point_mask: Optional[jax.Array] = None,
+                   **local_kw):
+    """Deprecated: use ``fed.api.Session`` with
+    ``FederationPlan(topology="replicated" | "sharded")`` (this shim
+    routes through it with bitwise-identical results). Returns
+    (labels (Z, n), tau_centers (k, d) replicated)."""
+    from repro.fed import api
+    from repro.utils.deprecation import warn_legacy
+    warn_legacy("core.distributed.kfed_shard_map", "Session.run")
+    if server not in ("replicated", "sharded"):
+        raise ValueError(
+            f"kfed_shard_map server={server!r} is invalid: accepted "
+            f"values are ['replicated', 'sharded']")
+    plan = api.FederationPlan(
+        k=k, k_prime=k_prime, d=int(data.shape[-1]), topology=server,
+        mesh_axes=_axes(axis),
+        weight_by_core_counts=weight_by_core_counts,
+        local_kw=dict(local_kw))
+    r = api.Session(plan, mesh=mesh).run(
+        key, data, participation=participation, k_valid=k_valid,
+        point_mask=point_mask)
+    return r.labels, r.tau_centers
+
+
 def assign_new_device_shard(mesh, new_data: jax.Array, tau_centers: jax.Array,
                             k_prime: int, *, key: jax.Array, **local_kw):
     """A device joining after the fact (Theorem 3.2): local solve + O(k'k)
@@ -193,6 +229,9 @@ def _sums(x, a, k):
 
 
 def simulate_kfed(key, device_data, k, k_prime, **kw):
-    """Single-host simulation alias (vmap path) — same numerics as the
-    shard_map path (see tests/test_distributed.py)."""
-    return K.kfed(key, device_data, k, k_prime, **kw)
+    """Deprecated alias of the vmap simulation path — same numerics as
+    the shard_map path (see tests/test_distributed.py); use
+    ``fed.api.Session`` with the default ``simulated`` topology."""
+    from repro.utils.deprecation import warn_legacy
+    warn_legacy("core.distributed.simulate_kfed", "Session.run")
+    return K._kfed_impl(key, device_data, k, k_prime, **kw)

@@ -48,28 +48,44 @@ class KFedResult(NamedTuple):
     labels: jax.Array           # (Z, n) induced clustering, -1 padded
 
 
+def _kfed_impl(key, device_data, k, k_prime, *, k_valid=None,
+               point_mask=None, participation=None,
+               weight_by_core_counts=False, **local_kw) -> KFedResult:
+    """Internal simulation path (no deprecation warning) — what both
+    the legacy :func:`kfed` shim and warning-clean internal callers
+    (e.g. ``fed.personalize``) route through."""
+    from repro.fed import api  # lazy: core -> fed
+    plan = api.FederationPlan(
+        k=k, k_prime=k_prime, d=int(device_data.shape[-1]),
+        weight_by_core_counts=weight_by_core_counts,
+        local_kw=dict(local_kw))
+    r = api.Session(plan).run(key, device_data,
+                              participation=participation,
+                              k_valid=k_valid, point_mask=point_mask)
+    rr = r.detail
+    return KFedResult(rr.agg, rr.device_centers, rr.center_mask,
+                      rr.local_assign, rr.labels)
+
+
 def kfed(key: jax.Array, device_data: jax.Array, k: int, k_prime: int, *,
          k_valid: Optional[jax.Array] = None,
          point_mask: Optional[jax.Array] = None,
          participation: Optional[jax.Array] = None,
          weight_by_core_counts: bool = False,
          **local_kw) -> KFedResult:
-    """End-to-end k-FED (simulation path): a thin configuration of the
-    federated engine — vmapped Algorithm 1 over the device axis followed
-    by the shared server aggregation.
+    """Deprecated: use ``fed.api.Session.run`` (this shim routes
+    through it with bitwise-identical results).
 
     device_data: (Z, n, d) padded per-device data. ``participation``:
     optional (Z,) bool — devices that missed the round are excluded from
     aggregation and attached post-hoc via the Theorem 3.2 rule.
     """
-    from repro.fed.engine import EngineConfig, run_round  # lazy: core->fed
-    cfg = EngineConfig(k=k, k_prime=k_prime,
-                       weight_by_core_counts=weight_by_core_counts,
-                       local_kw=dict(local_kw))
-    r = run_round(key, device_data, cfg, participation=participation,
-                  k_valid=k_valid, point_mask=point_mask)
-    return KFedResult(r.agg, r.device_centers, r.center_mask,
-                      r.local_assign, r.labels)
+    from repro.utils.deprecation import warn_legacy
+    warn_legacy("core.kfed.kfed", "Session.run")
+    return _kfed_impl(key, device_data, k, k_prime, k_valid=k_valid,
+                      point_mask=point_mask, participation=participation,
+                      weight_by_core_counts=weight_by_core_counts,
+                      **local_kw)
 
 
 def kmeans_cost_of_labels(data: jax.Array, labels: jax.Array,

@@ -4,6 +4,18 @@ from repro.fed.engine import (  # noqa: F401
     run_round,
     run_round_async,
 )
+from repro.fed.api import (  # noqa: F401
+    FederationPlan,
+    PlanError,
+    RunResult,
+    Session,
+    SessionError,
+)
+from repro.fed.policy import (  # noqa: F401
+    FoldPolicy,
+    POLICIES,
+    make_policy,
+)
 from repro.fed.fedavg import FedAvgConfig, fedavg_round, make_local_step  # noqa
 from repro.fed.ifca import ifca_round  # noqa: F401
 from repro.fed.personalize import kfed_personalize  # noqa: F401

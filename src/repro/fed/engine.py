@@ -103,12 +103,15 @@ def _finish(loc: LocalKMeansResult, agg, center_labels, part) -> RoundResult:
                        loc.core_counts, center_labels, labels, part)
 
 
-def run_round(key: jax.Array, device_data: jax.Array, cfg: EngineConfig, *,
-              participation: Optional[jax.Array] = None,
-              k_valid=None, point_mask=None) -> RoundResult:
+def run_round_impl(key: jax.Array, device_data: jax.Array,
+                   cfg: EngineConfig, *,
+                   participation: Optional[jax.Array] = None,
+                   k_valid=None, point_mask=None) -> RoundResult:
     """One synchronous k-FED round (optionally with partial
     participation). The reference execution every other path — async,
-    shard_map replicated, shard_map sharded — must agree with."""
+    shard_map replicated, shard_map sharded — must agree with. This is
+    the engine internal; the declarative surface is
+    ``fed.api.Session.run``."""
     loc = local_stage(key, device_data, cfg, k_valid=k_valid,
                       point_mask=point_mask)
     agg, center_labels, part = server_stage(loc, cfg,
@@ -116,34 +119,40 @@ def run_round(key: jax.Array, device_data: jax.Array, cfg: EngineConfig, *,
     return _finish(loc, agg, center_labels, part)
 
 
+def run_round(key: jax.Array, device_data: jax.Array, cfg: EngineConfig, *,
+              participation: Optional[jax.Array] = None,
+              k_valid=None, point_mask=None) -> RoundResult:
+    """Deprecated: use ``fed.api.Session.run`` (this shim routes
+    through it and returns the detailed RoundResult)."""
+    from repro.fed import api
+    from repro.utils.deprecation import warn_legacy
+    warn_legacy("fed.engine.run_round", "Session.run")
+    sess = api.Session(api.plan_from_engine_config(
+        cfg, d=device_data.shape[-1]))
+    return sess.run(key, device_data, participation=participation,
+                    k_valid=k_valid, point_mask=point_mask).detail
+
+
 def run_round_async(key: jax.Array, device_data: jax.Array,
                     cfg: EngineConfig, cohorts: Sequence, *,
                     k_valid=None, point_mask=None) -> RoundResult:
-    """Asynchronous staged arrival: ``cohorts`` is a sequence of
-    device-id index arrays reporting in that (arbitrary) order across
-    separate ``aggregate_incremental`` folds. Devices in no cohort are
-    treated as non-participants and attached post-hoc (Theorem 3.2).
+    """Deprecated: use ``fed.api.Session.fold`` + ``Session.finalize``
+    (this shim routes the same cohorts through a Session).
 
-    Bitwise-identical labels to :func:`run_round` with ``participation``
-    = union(cohorts): the fold state is keyed by device id, so arrival
-    order cannot influence the finalized aggregate.
+    Bitwise-identical labels to the synchronous round with
+    ``participation`` = union(cohorts): the fold state is keyed by
+    device id, so arrival order cannot influence the finalized
+    aggregate.
     """
-    Z, _, d = device_data.shape
-    loc = local_stage(key, device_data, cfg, k_valid=k_valid,
-                      point_mask=point_mask)
-    w = core_weights(loc) if cfg.weight_by_core_counts else None
-
-    st = server.init_state(Z, cfg.k_prime, d, loc.centers.dtype)
-    part = jnp.zeros((Z,), bool)
+    from repro.fed import api
+    from repro.utils.deprecation import warn_legacy
+    warn_legacy("fed.engine.run_round_async",
+                "Session.fold/Session.finalize")
+    sess = api.Session(api.plan_from_engine_config(
+        cfg, d=device_data.shape[-1]))
+    # begin() first so an EMPTY cohort list still finalizes (every
+    # device treated as a non-participant, attached post-hoc).
+    sess.begin(key, device_data, k_valid=k_valid, point_mask=point_mask)
     for ids in cohorts:
-        ids = jnp.asarray(ids, jnp.int32)
-        st = server.aggregate_incremental(
-            st, ids, loc.centers[ids], loc.center_mask[ids],
-            weights=None if w is None else w[ids])
-        part = part.at[ids].set(True)
-
-    agg = server.finalize(st, cfg.k, weighted=cfg.weight_by_core_counts)
-    center_labels = server.attach_absent_devices(
-        agg.center_labels, loc.centers, loc.center_mask,
-        agg.tau_centers, part)
-    return _finish(loc, agg, center_labels, part)
+        sess.fold(ids)
+    return sess.finalize().detail

@@ -11,7 +11,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.kfed import kfed
+from repro.core.kfed import _kfed_impl
 from repro.fed.fedavg import FedAvgConfig, fedavg_round
 
 
@@ -20,7 +20,7 @@ def cluster_devices(key, features, k: int, k_prime: int = 1):
     — with n_feat == 1 this is exactly device-level clustering (k' = 1 per
     the Table 2 setup); larger n_feat clusters per-device feature sets and
     majority-votes the device's cluster (the k' = 2 rows)."""
-    res = kfed(key, features, k=k, k_prime=k_prime)
+    res = _kfed_impl(key, features, k=k, k_prime=k_prime)
     lbl = res.labels                      # (Z, n_feat)
     Z, k_ = lbl.shape[0], k
     counts = jax.vmap(lambda row: jnp.bincount(

@@ -1,0 +1,212 @@
+"""Fold-slot admission policies (ROADMAP "admission control / eviction").
+
+The incremental server (``core.server``) buffers one report per slot;
+``server.aggregate_incremental`` is the ONE fold primitive and stays
+policy-free. What a deployment can choose is the *mapping from request
+ids to slots* — which reports are admitted into the bounded fold state
+and which occupant is evicted when it is full. That mapping is a
+``FoldPolicy``:
+
+  * ``drop`` — the slot IS the request id; ids past ``capacity`` are
+    served but never folded (first-come-first-folded, the historical
+    behavior, bitwise-pinned by tests);
+  * ``lru`` — a full state evicts the least-recently-folded occupant's
+    slot; re-delivery of a held id touches its recency. The fold state
+    tracks the ``capacity`` most recently reporting devices;
+  * ``weighted_reservoir`` — Efraimidis–Spirakis A-ES weighted
+    reservoir sampling: each report draws a deterministic key
+    u(seed, id)^(1/weight) and the state retains exactly the
+    ``capacity`` largest keys seen so far, so heavy devices (large
+    Algorithm 1 core sets) are proportionally more likely to stay
+    folded. Deterministic: the key depends only on (seed, id, weight),
+    never on arrival order or wall clock.
+
+Eviction is just an overwrite: ``aggregate_incremental`` scatters the
+new report into the victim's slot, replacing its centers/mask/weights.
+Policies are host-side (they run in the service's Python loop, one
+admit per served request) and checkpoint as plain integer/float arrays
+so a restored service replays admission decisions bitwise.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+__all__ = ["FoldPolicy", "DropPolicy", "LruPolicy",
+           "WeightedReservoirPolicy", "POLICIES", "make_policy"]
+
+
+class FoldPolicy:
+    """Maps request ids to fold slots; owns eviction.
+
+    ``admit(rid, weight)`` returns the slot to scatter the report into,
+    or None to serve-without-folding. Policies must be deterministic
+    functions of (their persisted state, rid, weight) so that
+    checkpoint -> restore -> admit replays identically.
+    """
+
+    name: str = "abstract"
+    needs_weight: bool = False  # admit() wants the report's |S_r| mass
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+
+    def admit(self, rid: int, weight: float = 1.0) -> Optional[int]:
+        raise NotImplementedError
+
+    # -- checkpoint plumbing (npz-able arrays; {} for stateless) --------
+    def state_like(self) -> Dict[str, np.ndarray]:
+        """Zero-filled arrays matching :meth:`state_arrays` (restore
+        template for ``checkpoint.store.load_pytree``)."""
+        return {}
+
+    def state_arrays(self) -> Dict[str, np.ndarray]:
+        return {}
+
+    def load_state(self, arrays: Dict[str, np.ndarray]) -> None:
+        pass
+
+
+class DropPolicy(FoldPolicy):
+    """The historical admission rule: slot == request id, over-capacity
+    ids dropped. Stateless (the decision is a pure function of rid)."""
+
+    name = "drop"
+
+    def admit(self, rid: int, weight: float = 1.0) -> Optional[int]:
+        return rid if rid < self.capacity else None
+
+
+class LruPolicy(FoldPolicy):
+    """Least-recently-folded eviction over ``capacity`` device slots.
+
+    Invariant (property-tested): after any admission sequence the held
+    ids are exactly the ``capacity`` most recently admitted distinct
+    ids, and every admit() is granted a slot (nothing is ever dropped).
+    """
+
+    name = "lru"
+
+    def __init__(self, capacity: int):
+        super().__init__(capacity)
+        self._slot_rid = np.full((self.capacity,), -1, np.int64)
+        self._slot_seq = np.full((self.capacity,), -1, np.int64)
+        self._seq = 0
+        self._index: Dict[int, int] = {}
+
+    def admit(self, rid: int, weight: float = 1.0) -> Optional[int]:
+        slot = self._index.get(rid)
+        if slot is None:
+            free = np.nonzero(self._slot_rid < 0)[0]
+            if free.size:
+                slot = int(free[0])
+            else:  # evict the least recently folded occupant
+                slot = int(np.argmin(self._slot_seq))
+                del self._index[int(self._slot_rid[slot])]
+            self._slot_rid[slot] = rid
+            self._index[rid] = slot
+        self._slot_seq[slot] = self._seq
+        self._seq += 1
+        return slot
+
+    def state_like(self) -> Dict[str, np.ndarray]:
+        return {"slot_rid": np.zeros((self.capacity,), np.int64),
+                "slot_seq": np.zeros((self.capacity,), np.int64),
+                "seq": np.zeros((), np.int64)}
+
+    def state_arrays(self) -> Dict[str, np.ndarray]:
+        return {"slot_rid": self._slot_rid.copy(),
+                "slot_seq": self._slot_seq.copy(),
+                "seq": np.asarray(self._seq, np.int64)}
+
+    def load_state(self, arrays: Dict[str, np.ndarray]) -> None:
+        self._slot_rid = np.asarray(arrays["slot_rid"], np.int64).copy()
+        self._slot_seq = np.asarray(arrays["slot_seq"], np.int64).copy()
+        self._seq = int(arrays["seq"])
+        self._index = {int(r): i for i, r in enumerate(self._slot_rid)
+                       if r >= 0}
+
+
+class WeightedReservoirPolicy(FoldPolicy):
+    """A-ES weighted reservoir over the fold slots.
+
+    Each distinct id draws key = u^(1/max(weight, eps)) with
+    u = uniform(0, 1) seeded by (policy_seed, id); the state holds the
+    ``capacity`` largest (key, id) pairs seen. Invariant
+    (property-tested): the held set equals the exact top-``capacity``
+    of all distinct ids by (key, id), independent of arrival order;
+    re-delivery of a held id keeps its slot.
+    """
+
+    name = "weighted_reservoir"
+    needs_weight = True
+    _EPS = 1e-9
+
+    def __init__(self, capacity: int, seed: int = 0):
+        super().__init__(capacity)
+        self.seed = int(seed)
+        self._slot_rid = np.full((self.capacity,), -1, np.int64)
+        self._slot_key = np.full((self.capacity,), -np.inf, np.float64)
+        self._index: Dict[int, int] = {}
+
+    def key_of(self, rid: int, weight: float) -> float:
+        u = np.random.default_rng((self.seed, int(rid))).random()
+        return float(u ** (1.0 / max(float(weight), self._EPS)))
+
+    def admit(self, rid: int, weight: float = 1.0) -> Optional[int]:
+        slot = self._index.get(rid)
+        if slot is not None:
+            return slot  # idempotent re-delivery, key unchanged
+        key = self.key_of(rid, weight)
+        free = np.nonzero(self._slot_rid < 0)[0]
+        if free.size:
+            slot = int(free[0])
+        else:
+            victim = int(np.lexsort((self._slot_rid, self._slot_key))[0])
+            if (key, rid) <= (float(self._slot_key[victim]),
+                              int(self._slot_rid[victim])):
+                return None  # below the reservoir threshold
+            del self._index[int(self._slot_rid[victim])]
+            slot = victim
+        self._slot_rid[slot] = rid
+        self._slot_key[slot] = key
+        self._index[rid] = slot
+        return slot
+
+    def state_like(self) -> Dict[str, np.ndarray]:
+        return {"slot_rid": np.zeros((self.capacity,), np.int64),
+                "slot_key": np.zeros((self.capacity,), np.float64)}
+
+    def state_arrays(self) -> Dict[str, np.ndarray]:
+        return {"slot_rid": self._slot_rid.copy(),
+                "slot_key": self._slot_key.copy()}
+
+    def load_state(self, arrays: Dict[str, np.ndarray]) -> None:
+        self._slot_rid = np.asarray(arrays["slot_rid"], np.int64).copy()
+        self._slot_key = np.asarray(arrays["slot_key"],
+                                    np.float64).copy()
+        self._index = {int(r): i for i, r in enumerate(self._slot_rid)
+                       if r >= 0}
+
+
+POLICIES = {
+    "drop": DropPolicy,
+    "lru": LruPolicy,
+    "weighted_reservoir": WeightedReservoirPolicy,
+}
+
+# Stable numeric codes for checkpoints (npz stores no strings): a
+# restored service must be configured with the SAME policy that wrote
+# the state, or its admission bookkeeping would be misread.
+POLICY_IDS = {"drop": 0, "lru": 1, "weighted_reservoir": 2}
+
+
+def make_policy(name: str, capacity: int, *, seed: int = 0) -> FoldPolicy:
+    if name not in POLICIES:
+        raise ValueError(
+            f"fold_policy={name!r}: accepted values are "
+            f"{sorted(POLICIES)}")
+    if name == "weighted_reservoir":
+        return WeightedReservoirPolicy(capacity, seed=seed)
+    return POLICIES[name](capacity)

@@ -22,10 +22,13 @@ This module turns that promise into a serving layer:
     the uninterrupted service because request keys are derived from the
     persisted request-id counter, never from wall clock.
 
-Request ids double as fold-state slots: ids below ``capacity`` are
-folded, later ones are served but not folded (admission control beyond
-that is a ROADMAP open item). In-flight (submitted, unflushed) requests
-are NOT part of a checkpoint — clients re-submit on failover.
+Fold-slot admission is a pluggable ``FoldPolicy`` (``fed/policy.py``):
+``drop`` (slot == request id, over-capacity ids served-not-folded — the
+historical behavior), ``lru`` (evict the least-recently-folded slot),
+or ``weighted_reservoir`` (A-ES sampling by report mass). Eviction is a
+slot overwrite, so ``server.aggregate_incremental`` stays the single
+fold primitive. In-flight (submitted, unflushed) requests are NOT part
+of a checkpoint — clients re-submit on failover.
 """
 from __future__ import annotations
 
@@ -39,10 +42,22 @@ import numpy as np
 from repro.checkpoint.store import load_pytree, save_pytree
 from repro.core import server
 from repro.core.local_kmeans import batched_local_kmeans
+from repro.fed.policy import FoldPolicy, make_policy
+from repro.utils.deprecation import warn_legacy
 
 
 def _round_up(v: int, m: int) -> int:
     return ((v + m - 1) // m) * m
+
+
+class StreamConfigError(ValueError):
+    """A StreamConfig field failed validation (named, with accepted
+    values) — raised at construction, never deep inside tracing."""
+
+
+def _bad(fieldname: str, got, accepted: str) -> None:
+    raise StreamConfigError(
+        f"StreamConfig.{fieldname}={got!r} is invalid: {accepted}")
 
 
 @dataclass(frozen=True)
@@ -57,11 +72,41 @@ class StreamConfig:
     refresh_every: int = 0      # re-finalize after this many folds; 0 = never
     fold_reports: bool = True   # fold served reports into the server state
     weight_by_core_counts: bool = False
+    fold_policy: str = "drop"   # admission: drop | lru | weighted_reservoir
+    policy_seed: int = 0        # weighted_reservoir key seed
     local_kw: dict = field(default_factory=dict)  # Algorithm 1 options
 
     def __post_init__(self):
-        assert list(self.bucket_sizes) == sorted(set(self.bucket_sizes)), (
-            "bucket_sizes must be strictly ascending", self.bucket_sizes)
+        from repro.fed.policy import POLICIES
+        if not isinstance(self.k, int) or self.k < 1:
+            _bad("k", self.k, "must be an int >= 1")
+        if (not isinstance(self.k_prime, int)
+                or not 1 <= self.k_prime <= self.k):
+            _bad("k_prime", self.k_prime,
+                 f"must satisfy 1 <= k_prime <= k (k={self.k})")
+        if not isinstance(self.d, int) or self.d < 1:
+            _bad("d", self.d, "must be an int >= 1")
+        if self.capacity < 1:
+            _bad("capacity", self.capacity, "must be an int >= 1")
+        if self.batch_size < 1:
+            _bad("batch_size", self.batch_size, "must be an int >= 1")
+        if self.refresh_every < 0:
+            _bad("refresh_every", self.refresh_every,
+                 "must be >= 0 (0 disables the refresh cadence)")
+        if (not self.bucket_sizes
+                or any(int(b) < 1 for b in self.bucket_sizes)
+                or list(self.bucket_sizes)
+                != sorted(set(int(b) for b in self.bucket_sizes))):
+            _bad("bucket_sizes", self.bucket_sizes,
+                 "must be a non-empty strictly ascending tuple of "
+                 "positive point-count pads, e.g. (64, 256, 1024)")
+        if self.fold_policy not in POLICIES:
+            _bad("fold_policy", self.fold_policy,
+                 f"accepted values are {sorted(POLICIES)}")
+        if not isinstance(self.policy_seed, int) or self.policy_seed < 0:
+            _bad("policy_seed", self.policy_seed,
+                 "must be a non-negative int (seeds the "
+                 "weighted_reservoir keys)")
 
 
 class AttachService:
@@ -73,6 +118,7 @@ class AttachService:
 
     def __init__(self, cfg: StreamConfig, tau_centers, *,
                  state: Optional[server.ServerState] = None,
+                 policy: Optional[FoldPolicy] = None,
                  seed: int = 0, next_id: int = 0,
                  since_refresh: int = 0, served_devices: int = 0,
                  served_points: int = 0):
@@ -82,6 +128,8 @@ class AttachService:
         self.state = (server.init_state(cfg.capacity, cfg.k_prime, cfg.d)
                       if state is None
                       else jax.tree.map(jnp.asarray, state))
+        self.policy = policy or make_policy(cfg.fold_policy, cfg.capacity,
+                                            seed=cfg.policy_seed)
         self._base_seed = int(seed)
         self._base_key = jax.random.PRNGKey(self._base_seed)
         self._next_id = int(next_id)
@@ -97,20 +145,32 @@ class AttachService:
     @classmethod
     def from_round(cls, rr, cfg: StreamConfig, *,
                    seed: int = 0) -> "AttachService":
-        """Seed the service from a finished ``fed.engine.RoundResult``:
-        cache its tau centers and fold the participating devices' reports
-        so a later refresh re-finalizes over round + streamed devices."""
+        """Deprecated: construct a ``fed.api.Session`` and use
+        ``Session.attach``/``Session.serve`` instead."""
+        warn_legacy("fed.stream.AttachService.from_round",
+                    "Session.attach/Session.serve")
+        return cls._from_round(rr, cfg, seed=seed)
+
+    @classmethod
+    def _from_round(cls, rr, cfg: StreamConfig, *,
+                    seed: int = 0) -> "AttachService":
+        """Seed the service from a finished round result: cache its tau
+        centers and fold the participating devices' reports so a later
+        refresh re-finalizes over round + streamed devices."""
         Z = int(rr.device_centers.shape[0])
-        assert cfg.capacity >= Z, (cfg.capacity, Z)
+        if cfg.fold_policy == "drop":
+            assert cfg.capacity >= Z, (cfg.capacity, Z)
         svc = cls(cfg, rr.agg.tau_centers, seed=seed, next_id=Z)
         if cfg.fold_reports:
             ids = np.nonzero(np.asarray(rr.participated))[0]
             if ids.size:
-                w = (server.core_weights(rr.core_counts[ids])
-                     if cfg.weight_by_core_counts else None)
-                svc.state = server.aggregate_incremental(
-                    svc.state, jnp.asarray(ids, jnp.int32),
-                    rr.device_centers[ids], rr.center_mask[ids], weights=w)
+                cw = server.core_weights(rr.core_counts[ids])
+                dev_w = (np.asarray(jnp.sum(cw, axis=1))
+                         if svc.policy.needs_weight else None)
+                svc._admit_and_fold(
+                    ids, dev_w, rr.device_centers[ids],
+                    rr.center_mask[ids],
+                    cw if cfg.weight_by_core_counts else None)
         return svc
 
     def _make_step(self):
@@ -218,17 +278,39 @@ class AttachService:
         if cfg.fold_reports:
             self._fold(batch, rids, centers, cmask, weights)
 
+    def _admit_and_fold(self, rids, dev_w, centers, cmask,
+                        fold_w) -> int:
+        """THE admission step shared by round seeding and streaming:
+        each request id goes through the policy, the admitted reports
+        scatter into their granted slots (a later admit within the
+        group may evict an earlier one's slot — last write wins), and
+        ``server.aggregate_incremental`` stays the single fold
+        primitive. Returns the number of admitted reports."""
+        admitted, slot_of = 0, {}
+        for i, rid in enumerate(rids):
+            slot = self.policy.admit(
+                int(rid), 1.0 if dev_w is None else float(dev_w[i]))
+            if slot is not None:
+                admitted += 1
+                slot_of[slot] = i
+        if slot_of:
+            items = sorted(slot_of.items(), key=lambda kv: kv[1])
+            sel = jnp.asarray([i for _, i in items], jnp.int32)
+            slots = jnp.asarray([s for s, _ in items], jnp.int32)
+            self.state = server.aggregate_incremental(
+                self.state, slots, centers[sel], cmask[sel],
+                weights=None if fold_w is None else fold_w[sel])
+        return admitted
+
     def _fold(self, batch, rids, centers, cmask, weights):
-        keep = [i for i in range(len(batch))
-                if rids[i] < self.cfg.capacity]
-        if not keep:
+        dev_w = (np.asarray(jnp.sum(weights, axis=1))
+                 if self.policy.needs_weight else None)
+        admitted = self._admit_and_fold(
+            rids[:len(batch)], dev_w, centers, cmask,
+            weights if self.cfg.weight_by_core_counts else None)
+        if not admitted:
             return
-        sel = jnp.asarray(keep, jnp.int32)
-        ids = jnp.asarray(rids[keep], jnp.int32)
-        w = weights[sel] if self.cfg.weight_by_core_counts else None
-        self.state = server.aggregate_incremental(
-            self.state, ids, centers[sel], cmask[sel], weights=w)
-        self._since_refresh += len(keep)
+        self._since_refresh += admitted
         if self.cfg.refresh_every and (
                 self._since_refresh >= self.cfg.refresh_every):
             self.refresh()
@@ -253,21 +335,55 @@ class AttachService:
                            self._base_seed], np.int64)
 
     def save(self, path: str) -> str:
-        """Checkpoint tau + fold state + counters (npz via
-        ``checkpoint.store``). Pending requests are not persisted."""
+        """Checkpoint tau + fold state + counters + admission-policy
+        identity and state (npz via ``checkpoint.store``). Pending
+        requests are not persisted."""
+        from repro.fed.policy import POLICY_IDS
         return save_pytree(path, {"tau": self.tau, "server": self.state,
-                                  "counters": self._counters()})
+                                  "counters": self._counters(),
+                                  "policy_id": np.asarray(
+                                      POLICY_IDS[self.policy.name],
+                                      np.int64),
+                                  "policy": self.policy.state_arrays()})
 
     @classmethod
     def restore(cls, path: str, cfg: StreamConfig) -> "AttachService":
+        """Deprecated: use ``fed.api.Session.restore`` instead."""
+        warn_legacy("fed.stream.AttachService.restore", "Session.restore")
+        return cls._restore(path, cfg)
+
+    @classmethod
+    def _restore(cls, path: str, cfg: StreamConfig) -> "AttachService":
+        from repro.fed.policy import POLICY_IDS
+        policy = make_policy(cfg.fold_policy, cfg.capacity,
+                             seed=cfg.policy_seed)
+        # Refuse a policy mismatch up front (named error, not a bare
+        # KeyError / silent state corruption): the checkpoint's slot
+        # bookkeeping is only meaningful under the policy that wrote
+        # it. Checkpoints from before the policy layer existed could
+        # only have been written under the drop rule.
+        data = np.load(path if path.endswith(".npz") else path + ".npz")
+        saved = (int(data["policy_id"]) if "policy_id" in data
+                 else POLICY_IDS["drop"])
+        if saved != POLICY_IDS[cfg.fold_policy]:
+            names = {v: n for n, v in POLICY_IDS.items()}
+            raise StreamConfigError(
+                f"StreamConfig.fold_policy={cfg.fold_policy!r} does not "
+                f"match the checkpoint at {path!r}, which was saved "
+                f"under fold_policy={names.get(saved, saved)!r}")
         like = {
             "tau": jnp.zeros((cfg.k, cfg.d), jnp.float32),
             "server": server.init_state(cfg.capacity, cfg.k_prime, cfg.d),
             "counters": np.zeros((5,), np.int64),
+            "policy": policy.state_like(),
         }
+        if "policy_id" in data:
+            like["policy_id"] = np.zeros((), np.int64)
         tree = load_pytree(path, like)
+        if tree["policy"]:
+            policy.load_state(tree["policy"])
         cnt = np.asarray(tree["counters"])
-        return cls(cfg, tree["tau"], state=tree["server"],
+        return cls(cfg, tree["tau"], state=tree["server"], policy=policy,
                    seed=int(cnt[4]), next_id=int(cnt[0]),
                    since_refresh=int(cnt[1]), served_devices=int(cnt[2]),
                    served_points=int(cnt[3]))
@@ -280,6 +396,7 @@ class AttachService:
             "served_points": self._served_points,
             "folded": int(np.asarray(jnp.sum(self.state.received))),
             "capacity": self.cfg.capacity,
+            "fold_policy": self.policy.name,
             "pending": len(self._pending),
             "undelivered": len(self._done),
             "since_refresh": self._since_refresh,

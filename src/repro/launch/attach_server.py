@@ -1,14 +1,16 @@
 """Attachment-server entry point: run one k-FED round, then serve a
-stream of late-joining devices through ``fed.stream.AttachService``.
+stream of late-joining devices — all through one declarative
+``FederationPlan`` + ``Session`` (DESIGN.md §10).
 
 Demonstrates the full post-round serving vertical — batched/bucketed
 Theorem 3.2 attachment, incremental folding with an online refresh
-cadence, and checkpointed crash recovery (the restored server replays
-the remaining stream bitwise-identically).
+cadence and a pluggable fold-slot admission policy, and checkpointed
+crash recovery (the restored session replays the remaining stream
+bitwise-identically).
 
   PYTHONPATH=src python -m repro.launch.attach_server \
       --requests 48 --batch-size 8 --refresh-every 16 \
-      --checkpoint /tmp/attach.npz
+      --fold-policy lru --checkpoint /tmp/attach.npz
 """
 from __future__ import annotations
 
@@ -19,8 +21,8 @@ import jax
 import numpy as np
 
 from repro.data.gaussian import late_device_stream, structured_devices
-from repro.fed.engine import EngineConfig, run_round
-from repro.fed.stream import AttachService, StreamConfig
+from repro.fed.api import FederationPlan, Session
+from repro.fed.policy import POLICIES
 from repro.utils.metrics import clustering_accuracy
 
 
@@ -34,9 +36,13 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--refresh-every", type=int, default=16)
     ap.add_argument("--capacity", type=int, default=4096)
+    ap.add_argument("--fold-policy", default="drop",
+                    choices=sorted(POLICIES),
+                    help="fold-slot admission: drop (served-not-folded "
+                         "past capacity), lru, or weighted_reservoir")
     ap.add_argument("--checkpoint", default=None, metavar="PATH",
                     help="checkpoint mid-stream and verify the restored "
-                         "server serves the remainder bitwise identically")
+                         "session serves the remainder bitwise identically")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -44,24 +50,25 @@ def main() -> None:
     fm = structured_devices(jax.random.PRNGKey(args.seed), k=k, d=d,
                             k_prime=kp, m0=args.devices_per_group,
                             n_per_comp_dev=25, sep=60.0)
-    rr = run_round(jax.random.PRNGKey(args.seed + 1), fm.data,
-                   EngineConfig(k=k, k_prime=kp))
+    plan = FederationPlan(k=k, k_prime=kp, d=d, capacity=args.capacity,
+                          batch_size=args.batch_size,
+                          refresh_every=args.refresh_every,
+                          fold_policy=args.fold_policy,
+                          checkpoint=args.checkpoint)
+    sess = Session(plan)
+    rr = sess.run(jax.random.PRNGKey(args.seed + 1), fm.data)
     Z = fm.data.shape[0]
     acc0 = clustering_accuracy(np.asarray(rr.labels),
                                np.asarray(fm.labels), k)
     print(f"round: Z={Z} devices, k={k}, k'={kp}, "
           f"accuracy {100 * acc0:.2f}%")
 
-    cfg = StreamConfig(k=k, k_prime=kp, d=d, capacity=args.capacity,
-                       batch_size=args.batch_size,
-                       refresh_every=args.refresh_every)
-    svc = AttachService.from_round(rr, cfg)
     stream = late_device_stream(fm.means, kp, args.requests, args.seed + 2)
 
     half = len(stream) // 2
     t0 = time.perf_counter()
-    out = svc.serve([r[0] for r in stream[:half]],
-                    [r[2] for r in stream[:half]])
+    out = sess.serve([r[0] for r in stream[:half]],
+                     [r[2] for r in stream[:half]])
     dt = time.perf_counter() - t0
     pts = sum(r[0].shape[0] for r in stream[:half])
     accs = [clustering_accuracy(lbl, r[1], k)
@@ -71,25 +78,25 @@ def main() -> None:
           f"mean accuracy {100 * float(np.mean(accs)):.2f}%")
 
     if args.checkpoint:
-        svc.save(args.checkpoint)
-        restored = AttachService.restore(args.checkpoint, cfg)
-        rest_live = svc.serve([r[0] for r in stream[half:]],
-                              [r[2] for r in stream[half:]])
+        sess.save()
+        restored = Session.restore(args.checkpoint, plan)
+        rest_live = sess.serve([r[0] for r in stream[half:]],
+                               [r[2] for r in stream[half:]])
         rest_ck = restored.serve([r[0] for r in stream[half:]],
                                  [r[2] for r in stream[half:]])
         same = all(np.array_equal(a, b)
                    for a, b in zip(rest_live, rest_ck))
         print(f"checkpoint -> restore -> serve: bitwise identical to "
-              f"uninterrupted service: {same}")
+              f"uninterrupted session: {same}")
         assert same
     else:
-        svc.serve([r[0] for r in stream[half:]],
-                  [r[2] for r in stream[half:]])
+        sess.serve([r[0] for r in stream[half:]],
+                   [r[2] for r in stream[half:]])
 
-    st = svc.stats()
+    st = sess.stats()
     print(f"stats: {st['served_devices']} served, {st['folded']} folded "
-          f"(capacity {st['capacity']}), refresh cadence "
-          f"{args.refresh_every}")
+          f"(capacity {st['capacity']}, policy {st['fold_policy']}), "
+          f"refresh cadence {args.refresh_every}")
 
 
 if __name__ == "__main__":

@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributed import distributed_lloyd, kfed_shard_map
+from repro.core.distributed import distributed_lloyd
+from repro.fed.api import FederationPlan, Session
 from repro.launch.hlo_analysis import analyze
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import roofline_terms
@@ -41,17 +42,32 @@ DEFAULT_LOCAL_KW = dict(approx_iters=8, max_iters=32,
                         use_subspace_iteration=True)
 
 
-def lower_kfed(mesh, axes, *, Z, n, d, k, k_prime, verbose=True,
-               server="replicated", **local_kw):
-    data = jax.ShapeDtypeStruct((Z, n, d), jnp.float32)
-    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
-
+def _session(mesh, axes, *, k, k_prime, d, server="replicated",
+             weight_by_core_counts=False, **local_kw):
+    """The production deployment as ONE declarative plan — the same
+    Session surface the serving/examples paths use, lowered here at
+    Z=4096 scale."""
     kw = dict(DEFAULT_LOCAL_KW)
     kw.update(local_kw)
+    plan = FederationPlan(k=k, k_prime=k_prime, d=d, topology=server,
+                          mesh_axes=tuple(axes),
+                          weight_by_core_counts=weight_by_core_counts,
+                          local_kw=kw)
+    return Session(plan, mesh=mesh)
+
+
+def lower_kfed(mesh, axes, *, Z, n, d, k, k_prime, verbose=True,
+               server="replicated", weight_by_core_counts=False,
+               **local_kw):
+    data = jax.ShapeDtypeStruct((Z, n, d), jnp.float32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    sess = _session(mesh, axes, k=k, k_prime=k_prime, d=d, server=server,
+                    weight_by_core_counts=weight_by_core_counts,
+                    **local_kw)
 
     def fn(key, data):
-        return kfed_shard_map(mesh, data, k, k_prime, key=key, axis=axes,
-                              server=server, **kw)
+        r = sess.run(key, data)
+        return r.labels, r.tau_centers
 
     return jax.jit(fn).lower(key, data)
 
@@ -68,13 +84,11 @@ def lower_kfed_partial(mesh, axes, *, Z, n, d, k, k_prime, **local_kw):
     data = jax.ShapeDtypeStruct((Z, n, d), jnp.float32)
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     part = jax.ShapeDtypeStruct((Z,), jnp.bool_)
-
-    kw = dict(DEFAULT_LOCAL_KW)
-    kw.update(local_kw)
+    sess = _session(mesh, axes, k=k, k_prime=k_prime, d=d, **local_kw)
 
     def fn(key, data, part):
-        return kfed_shard_map(mesh, data, k, k_prime, key=key, axis=axes,
-                              participation=part, **kw)
+        r = sess.run(key, data, participation=part)
+        return r.labels, r.tau_centers
 
     return jax.jit(fn).lower(key, data, part)
 

@@ -24,22 +24,17 @@ def make_prefill(model: Model, ctx: DistCtx):
 
 
 def make_kfed_attach(tau_centers, k_prime: int, **local_kw):
-    """Serving path for late-joining federated devices (Theorem 3.2,
-    DESIGN.md §4): given the retained tau centers of a finished k-FED
-    round, returns a jitted step ``(key, device_data) -> point labels``
-    that attaches one new device with a local Algorithm 1 solve plus
-    O(k' k) distance computations — no communication with any other
-    device and no recomputation of the round."""
-    from repro.core import server as S
-    from repro.core.local_kmeans import local_kmeans
+    """Deprecated: use ``fed.api.Session.attach_fn`` (this shim builds
+    a serving-only Session over the given tau centers and returns the
+    identical jitted ``(key, device_data) -> point labels`` step)."""
+    from repro.fed import api
+    from repro.utils.deprecation import warn_legacy
+    warn_legacy("launch.serve.make_kfed_attach", "Session.attach_fn")
     tau = jnp.asarray(tau_centers)
-
-    def attach(key, device_data):
-        loc = local_kmeans(key, device_data, k_max=k_prime, **local_kw)
-        lbl = S.assign_new_device(loc.centers, loc.center_mask, tau)
-        return S.induced_labels(lbl[None], loc.assign[None])[0]
-
-    return jax.jit(attach)
+    k, d = int(tau.shape[0]), int(tau.shape[1])
+    plan = api.FederationPlan(k=k, k_prime=k_prime, d=d,
+                              local_kw=dict(local_kw))
+    return api.Session.from_tau(plan, tau).attach_fn()
 
 
 def generate(model: Model, params, batch, *, steps: int,

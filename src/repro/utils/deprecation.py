@@ -1,0 +1,37 @@
+"""Warn-once deprecation registry for legacy federation entry points.
+
+Every pre-`fed.api` entry point (``core.kfed.kfed``,
+``core.distributed.kfed_shard_map``, ``fed.engine.run_round`` /
+``run_round_async``, ``fed.stream.AttachService.from_round`` /
+``restore``, ``launch.serve.make_kfed_attach``) now delegates to the
+declarative ``fed.api.Session`` surface and announces its replacement
+with exactly ONE ``DeprecationWarning`` per process — noisy enough to
+see once, quiet enough that long-running services and test suites are
+not flooded.
+
+Lives in ``utils`` (not ``fed.api``) so shims anywhere in the layering
+can import it without creating cycles.
+"""
+from __future__ import annotations
+
+import warnings
+
+_emitted: set = set()
+
+
+def warn_legacy(name: str, replacement: str) -> None:
+    """Emit one DeprecationWarning per process for ``name``, naming the
+    ``fed.api`` replacement. Subsequent calls are free."""
+    if name in _emitted:
+        return
+    _emitted.add(name)
+    warnings.warn(
+        f"repro legacy entry point {name} is deprecated; use "
+        f"{replacement} (repro.fed.api) instead. This warning is "
+        f"emitted once per process.",
+        DeprecationWarning, stacklevel=3)
+
+
+def reset_legacy_warnings() -> None:
+    """Forget which warnings were emitted (tests only)."""
+    _emitted.clear()

@@ -1,6 +1,9 @@
 """Federated engine scenarios (DESIGN.md §4): the shared server core,
 partial participation with Theorem 3.2 re-attachment, asynchronous
-staged arrival, and core-count-weighted aggregation."""
+staged arrival, and core-count-weighted aggregation — exercised through
+the declarative ``fed.api.Session`` surface."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,7 +14,7 @@ from repro.core import kfed as K
 from repro.core import server as S
 from repro.core.local_kmeans import batched_local_kmeans
 from repro.data.gaussian import structured_devices
-from repro.fed.engine import EngineConfig, run_round, run_round_async
+from repro.fed.api import FederationPlan, Session
 from repro.utils.metrics import clustering_accuracy
 
 
@@ -21,15 +24,34 @@ def _setup(key=0, k=16, d=24, k_prime=4, m0=4, n=20, sep=60.0):
                               sep=sep)
 
 
-CFG = EngineConfig(k=16, k_prime=4)
+PLAN = FederationPlan(k=16, k_prime=4, d=24)
+
+
+def run_round(key, data, plan, **kw):
+    """One synchronous round through the Session surface, returning the
+    engine-detail RoundResult the assertions inspect."""
+    return Session(plan).run(key, data, **kw).detail
+
+
+def run_round_async(key, data, plan, cohorts):
+    sess = Session(plan).begin(key, data)
+    for ids in cohorts:
+        sess.fold(ids)
+    return sess.finalize().detail
 
 
 def test_engine_is_the_kfed_path():
-    """kfed() is a thin configuration of the engine; both equal the
-    hand-composed stage pipeline through the shared server core."""
+    """The legacy kfed() shim is a thin configuration of the Session
+    path; both equal the hand-composed stage pipeline through the
+    shared server core."""
     fm = _setup()
-    out = K.kfed(jax.random.PRNGKey(1), fm.data, k=16, k_prime=4)
-    r = run_round(jax.random.PRNGKey(1), fm.data, CFG)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        out = K.kfed(jax.random.PRNGKey(1), fm.data, k=16, k_prime=4)
+    # re-arm the warn-once registry for the suite's legacy-leak guard
+    from repro.utils.deprecation import reset_legacy_warnings
+    reset_legacy_warnings()
+    r = run_round(jax.random.PRNGKey(1), fm.data, PLAN)
     np.testing.assert_array_equal(np.asarray(r.labels),
                                   np.asarray(out.labels))
 
@@ -49,7 +71,7 @@ def test_partial_participation_matches_theorem32_attachment():
     Z = fm.data.shape[0]
     drop = 5
     part = jnp.asarray(np.arange(Z) != drop)
-    r = run_round(jax.random.PRNGKey(1), fm.data, CFG, participation=part)
+    r = run_round(jax.random.PRNGKey(1), fm.data, PLAN, participation=part)
 
     # Manual attachment from the same local solve + retained tau centers.
     manual_ctr = S.assign_new_device(r.device_centers[drop],
@@ -71,14 +93,14 @@ def test_async_staged_arrival_bitwise_equals_oneshot():
     """Cohorts reporting across multiple aggregate_incremental folds, in
     any order, finalize to bitwise-identical labels."""
     fm = _setup()
-    full = run_round(jax.random.PRNGKey(1), fm.data, CFG)
+    full = run_round(jax.random.PRNGKey(1), fm.data, PLAN)
     orders = [
         [[0, 1, 2, 3, 4, 5, 6, 7], [8, 9, 10, 11, 12, 13, 14, 15]],
         [[15, 3, 9], [0, 1, 2, 4, 5, 6, 7, 8], [10, 11, 12, 13, 14]],
         [[i] for i in reversed(range(16))],          # fully serialized
     ]
     for cohorts in orders:
-        ra = run_round_async(jax.random.PRNGKey(1), fm.data, CFG, cohorts)
+        ra = run_round_async(jax.random.PRNGKey(1), fm.data, PLAN, cohorts)
         np.testing.assert_array_equal(np.asarray(ra.labels),
                                       np.asarray(full.labels))
         assert bool(np.all(np.asarray(ra.participated)))
@@ -90,11 +112,11 @@ def test_async_with_stragglers_matches_participation_mask():
     fm = _setup()
     missing = [3, 12]
     part = jnp.asarray(~np.isin(np.arange(16), missing))
-    sync = run_round(jax.random.PRNGKey(1), fm.data, CFG,
+    sync = run_round(jax.random.PRNGKey(1), fm.data, PLAN,
                      participation=part)
     cohorts = [[i for i in range(16) if i not in missing and i % 3 == j]
                for j in range(3)]
-    ra = run_round_async(jax.random.PRNGKey(1), fm.data, CFG, cohorts)
+    ra = run_round_async(jax.random.PRNGKey(1), fm.data, PLAN, cohorts)
     np.testing.assert_array_equal(np.asarray(ra.labels),
                                   np.asarray(sync.labels))
     np.testing.assert_array_equal(np.asarray(ra.participated),
@@ -105,10 +127,10 @@ def test_incremental_redelivery_idempotent():
     """Re-delivering a cohort's report (retry after a network failure)
     cannot change the finalized clustering."""
     fm = _setup()
-    full = run_round(jax.random.PRNGKey(1), fm.data, CFG)
+    full = run_round(jax.random.PRNGKey(1), fm.data, PLAN)
     cohorts = [[0, 1, 2, 3, 4, 5, 6, 7], [4, 5, 6, 7],  # retry overlap
                [8, 9, 10, 11, 12, 13, 14, 15], [0, 1, 2, 3]]
-    ra = run_round_async(jax.random.PRNGKey(1), fm.data, CFG, cohorts)
+    ra = run_round_async(jax.random.PRNGKey(1), fm.data, PLAN, cohorts)
     np.testing.assert_array_equal(np.asarray(ra.labels),
                                   np.asarray(full.labels))
 
@@ -118,8 +140,8 @@ def test_weighted_aggregation_recovers_and_weights_the_update():
     well-separated data, and lloyd_round really computes the weighted
     mean."""
     fm = _setup()
-    cfg = EngineConfig(k=16, k_prime=4, weight_by_core_counts=True)
-    r = run_round(jax.random.PRNGKey(1), fm.data, cfg)
+    plan = PLAN.with_options(weight_by_core_counts=True)
+    r = run_round(jax.random.PRNGKey(1), fm.data, plan)
     assert clustering_accuracy(np.asarray(r.labels),
                                np.asarray(fm.labels), 16) > 0.98
 

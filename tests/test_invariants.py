@@ -13,7 +13,7 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import lloyd as L
-from repro.core.kfed import kfed
+from repro.fed.api import FederationPlan, Session
 from repro.data.gaussian import structured_devices
 from repro.utils.metrics import clustering_accuracy
 
@@ -26,7 +26,8 @@ def test_kfed_invariant_under_device_order(seed):
     benchmark's fixed ones."""
     fm = structured_devices(jax.random.PRNGKey(seed), k=9, d=12, k_prime=3,
                             m0=3, n_per_comp_dev=15, sep=50.0)
-    out = kfed(jax.random.PRNGKey(1), fm.data, k=9, k_prime=3)
+    out = Session(FederationPlan(k=9, k_prime=3, d=12)).run(
+        jax.random.PRNGKey(1), fm.data)
     acc = clustering_accuracy(np.asarray(out.labels),
                               np.asarray(fm.labels), 9)
     assert acc > 0.95
@@ -54,7 +55,8 @@ def test_one_shot_message_size():
     Section 1's O(d k^(z)) message."""
     fm = structured_devices(jax.random.PRNGKey(0), k=16, d=24, k_prime=4,
                             m0=2, n_per_comp_dev=20, sep=50.0)
-    out = kfed(jax.random.PRNGKey(1), fm.data, k=16, k_prime=4)
+    out = Session(FederationPlan(k=16, k_prime=4, d=24)).run(
+        jax.random.PRNGKey(1), fm.data).detail
     Z = fm.data.shape[0]
     assert out.device_centers.shape == (Z, 4, 24)
     per_dev_bytes = int(np.asarray(out.center_mask).sum(1).max()) * 24 * 4

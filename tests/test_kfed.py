@@ -7,6 +7,7 @@ import numpy as np
 from repro.core import kfed as K
 from repro.core.local_kmeans import local_kmeans
 from repro.data.gaussian import structured_devices
+from repro.fed.api import FederationPlan, Session
 from repro.utils.metrics import clustering_accuracy
 
 
@@ -15,6 +16,13 @@ def _setup(key=0, k=16, d=32, k_prime=4, m0=3, n=25, sep=60.0):
                             k_prime=k_prime, m0=m0, n_per_comp_dev=n,
                             sep=sep)
     return fm
+
+
+def _kfed(key, data, k, k_prime, **kw):
+    """End-to-end k-FED through the Session surface; returns the
+    detailed RoundResult (a superset of the legacy KFedResult)."""
+    plan = FederationPlan(k=k, k_prime=k_prime, d=int(data.shape[-1]))
+    return Session(plan).run(key, data, **kw).detail
 
 
 def test_local_kmeans_recovers_device_clusters():
@@ -27,7 +35,7 @@ def test_local_kmeans_recovers_device_clusters():
 
 def test_kfed_recovers_target_clustering():
     fm = _setup()
-    out = K.kfed(jax.random.PRNGKey(2), fm.data, k=16, k_prime=4)
+    out = _kfed(jax.random.PRNGKey(2), fm.data, 16, 4)
     acc = clustering_accuracy(np.asarray(out.labels),
                               np.asarray(fm.labels), 16)
     assert acc > 0.98
@@ -37,7 +45,7 @@ def test_kfed_seeds_one_center_per_target_cluster():
     """Lemma 6: max-min seeding picks exactly one device center per target
     cluster under the separation assumptions."""
     fm = _setup(sep=100.0)
-    out = K.kfed(jax.random.PRNGKey(3), fm.data, k=16, k_prime=4)
+    out = _kfed(jax.random.PRNGKey(3), fm.data, 16, 4)
     # Identify each seed's true cluster by nearest target mean.
     seeds = np.asarray(out.agg.seed_centers)
     means = np.asarray(fm.means)
@@ -53,8 +61,8 @@ def test_kfed_heterogeneous_k_valid():
     pm[0] = np.asarray(fm.labels[0] % 4) != 2
     kv = np.asarray(fm.k_valid).copy()
     kv[0] = 3
-    out = K.kfed(jax.random.PRNGKey(4), fm.data, k=16, k_prime=4,
-                 k_valid=jnp.asarray(kv), point_mask=jnp.asarray(pm))
+    out = _kfed(jax.random.PRNGKey(4), fm.data, 16, 4,
+                k_valid=jnp.asarray(kv), point_mask=jnp.asarray(pm))
     acc = clustering_accuracy(np.asarray(out.labels)[pm],
                               np.asarray(fm.labels)[pm], 16)
     assert acc > 0.97
@@ -73,14 +81,14 @@ def test_assign_new_device_matches_existing_clustering():
     no network-wide recomputation."""
     fm = _setup(sep=80.0)
     # Hold out the last device.
-    out = K.kfed(jax.random.PRNGKey(5), fm.data[:-1], k=16, k_prime=4)
+    out = _kfed(jax.random.PRNGKey(5), fm.data[:-1], 16, 4)
     loc = local_kmeans(jax.random.PRNGKey(6), fm.data[-1], k_max=4)
     lbl = K.assign_new_device(loc.centers, loc.center_mask,
                               out.agg.tau_centers)
     point_lbl = K.induced_labels(lbl[None], loc.assign[None])[0]
     # Consistency: new-device points land in the cluster holding the same
     # target component (compare against full-network run).
-    full = K.kfed(jax.random.PRNGKey(5), fm.data, k=16, k_prime=4)
+    full = _kfed(jax.random.PRNGKey(5), fm.data, 16, 4)
     # Map both labelings to target labels for comparison.
     acc_joint = clustering_accuracy(
         np.concatenate([np.asarray(out.labels).ravel(),

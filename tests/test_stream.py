@@ -1,6 +1,7 @@
-"""Streaming attachment service (fed/stream.py, DESIGN.md §9): batched
-Theorem 3.2 serving, Theorem 3.2 consistency with the full round,
-incremental folding + refresh, and checkpointed crash recovery."""
+"""Streaming attachment through the Session lifecycle (fed/api.py over
+fed/stream.py, DESIGN.md §9–§10): batched Theorem 3.2 serving,
+consistency with the full round, incremental folding + refresh, and
+checkpointed crash recovery."""
 import numpy as np
 import pytest
 
@@ -8,9 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.data.gaussian import late_device_stream, structured_devices
-from repro.fed.engine import EngineConfig, run_round
-from repro.fed.stream import AttachService, StreamConfig
-from repro.launch.serve import make_kfed_attach
+from repro.fed.api import FederationPlan, Session
 from repro.utils.metrics import clustering_accuracy
 
 K, KP, D = 16, 4, 24
@@ -20,16 +19,21 @@ K, KP, D = 16, 4, 24
 def fixture_round():
     fm = structured_devices(jax.random.PRNGKey(0), k=K, d=D, k_prime=KP,
                             m0=4, n_per_comp_dev=25, sep=60.0)
-    rr = run_round(jax.random.PRNGKey(1), fm.data,
-                   EngineConfig(k=K, k_prime=KP))
+    rr = Session(FederationPlan(k=K, k_prime=KP, d=D)).run(
+        jax.random.PRNGKey(1), fm.data).detail
     return fm, rr
 
 
-def _cfg(**kw):
+def _plan(**kw):
     base = dict(k=K, k_prime=KP, d=D, capacity=256, batch_size=4,
                 bucket_sizes=(32, 64, 128))
     base.update(kw)
-    return StreamConfig(**base)
+    return FederationPlan(**base)
+
+
+def _session(rr, **kw) -> Session:
+    """A serving session over the module fixture's finished round."""
+    return Session.from_round(_plan(**kw), rr)
 
 
 def _requests(fm, count, seed, n_lo=10, n_hi=120):
@@ -43,13 +47,13 @@ def _requests(fm, count, seed, n_lo=10, n_hi=120):
 def test_service_serves_heterogeneous_requests(fixture_round):
     """Mixed (n, k') requests land in the right clusters; reports fold."""
     fm, rr = fixture_round
-    svc = AttachService.from_round(rr, _cfg())
+    sess = _session(rr)
     reqs, truths, kvs = _requests(fm, 9, seed=3)
-    labels = svc.serve(reqs, kvs)
+    labels = sess.serve(reqs, kvs)
     for lbl, truth, req in zip(labels, truths, reqs):
         assert lbl.shape == (req.shape[0],)
         assert clustering_accuracy(lbl, truth, K) > 0.97
-    st = svc.stats()
+    st = sess.stats()
     Z = fm.data.shape[0]
     assert st["served_devices"] == 9
     assert st["served_points"] == sum(r.shape[0] for r in reqs)
@@ -64,7 +68,7 @@ def test_participating_device_attach_matches_round(fixture_round):
     Z = fm.data.shape[0]
     # The round's per-device local-solve keys (fed.engine.local_stage).
     keys = jax.random.split(jax.random.PRNGKey(1), Z)
-    attach = make_kfed_attach(rr.agg.tau_centers, KP)
+    attach = Session.from_tau(_plan(), rr.agg.tau_centers).attach_fn()
     for z in [0, 5, Z - 1]:
         pts = attach(keys[z], fm.data[z])
         np.testing.assert_array_equal(np.asarray(pts),
@@ -76,9 +80,9 @@ def test_batched_service_matches_round_labels(fixture_round):
     when fed participating devices' own data (fresh local solves —
     label agreement, the Theorem 3.2 guarantee on separated data)."""
     fm, rr = fixture_round
-    svc = AttachService.from_round(rr, _cfg(bucket_sizes=(128,)))
+    sess = _session(rr, bucket_sizes=(128,))
     zs = [1, 4, 7, 10]
-    labels = svc.serve([np.asarray(fm.data[z]) for z in zs])
+    labels = sess.serve([np.asarray(fm.data[z]) for z in zs])
     for lbl, z in zip(labels, zs):
         np.testing.assert_array_equal(lbl, np.asarray(rr.labels[z]))
 
@@ -89,38 +93,37 @@ def test_batched_vs_one_at_a_time_bitwise(fixture_round):
     never by batch composition."""
     fm, rr = fixture_round
     reqs, _, kvs = _requests(fm, 7, seed=5)
-    batched = AttachService.from_round(rr, _cfg(batch_size=4))
-    single = AttachService.from_round(rr, _cfg(batch_size=1))
+    batched = _session(rr, batch_size=4)
+    single = _session(rr, batch_size=1)
     out_b = batched.serve(reqs, kvs)
     out_s = single.serve(reqs, kvs)
     for a, b in zip(out_b, out_s):
         np.testing.assert_array_equal(a, b)
     # The folded server states agree bitwise too.
-    for la, lb in zip(jax.tree.leaves(batched.state),
-                      jax.tree.leaves(single.state)):
+    for la, lb in zip(jax.tree.leaves(batched.service.state),
+                      jax.tree.leaves(single.service.state)):
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 
 
 def test_checkpoint_restore_serve_bitwise(fixture_round, tmp_path):
     """Crash recovery: checkpoint mid-stream, restore, serve the rest —
     bitwise identical labels AND fold state vs the uninterrupted
-    service (acceptance criterion)."""
+    session (acceptance criterion)."""
     fm, rr = fixture_round
-    cfg = _cfg(refresh_every=6)  # cross a refresh boundary mid-stream
-    live = AttachService.from_round(rr, cfg)
+    live = _session(rr, refresh_every=6)  # cross a refresh mid-stream
     reqs, _, kvs = _requests(fm, 10, seed=9)
     live.serve(reqs[:5], kvs[:5])
     path = str(tmp_path / "attach_ck.npz")
     live.save(path)
-    restored = AttachService.restore(path, cfg)
-    np.testing.assert_array_equal(np.asarray(live.tau),
-                                  np.asarray(restored.tau))
+    restored = Session.restore(path, live.plan)
+    np.testing.assert_array_equal(np.asarray(live.tau_centers),
+                                  np.asarray(restored.tau_centers))
     out_live = live.serve(reqs[5:], kvs[5:])
     out_rest = restored.serve(reqs[5:], kvs[5:])
     for a, b in zip(out_live, out_rest):
         np.testing.assert_array_equal(a, b)
-    for la, lb in zip(jax.tree.leaves(live.state),
-                      jax.tree.leaves(restored.state)):
+    for la, lb in zip(jax.tree.leaves(live.service.state),
+                      jax.tree.leaves(restored.service.state)):
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
     assert restored.stats()["served_devices"] == 10  # 5 restored + 5 new
 
@@ -129,33 +132,33 @@ def test_refresh_refolds_round_plus_stream(fixture_round):
     """The refresh cadence re-finalizes Algorithm 2 over round + stream
     reports; serving quality holds across the tau swap."""
     fm, rr = fixture_round
-    svc = AttachService.from_round(rr, _cfg(refresh_every=3))
+    sess = _session(rr, refresh_every=3)
     reqs, truths, kvs = _requests(fm, 8, seed=13)
-    labels = svc.serve(reqs, kvs)
+    labels = sess.serve(reqs, kvs)
     for lbl, truth in zip(labels, truths):
         assert clustering_accuracy(lbl, truth, K) > 0.97
-    st = svc.stats()
+    st = sess.stats()
     assert st["since_refresh"] < 3  # cadence fired
-    assert np.all(np.isfinite(np.asarray(svc.tau)))
+    assert np.all(np.isfinite(np.asarray(sess.tau_centers)))
     # An explicit refresh equals finalize over the current fold state.
     from repro.core import server as S
-    agg = S.finalize(svc.state, K)
-    svc.refresh()
-    np.testing.assert_array_equal(np.asarray(svc.tau),
+    agg = S.finalize(sess.service.state, K)
+    sess.refresh()
+    np.testing.assert_array_equal(np.asarray(sess.tau_centers),
                                   np.asarray(agg.tau_centers))
 
 
 def test_capacity_overflow_serves_without_folding(fixture_round):
     """Requests past the fold capacity are still served (Theorem 3.2
-    needs no state), just not folded."""
+    needs no state), just not folded (the drop admission policy)."""
     fm, rr = fixture_round
     Z = fm.data.shape[0]
-    svc = AttachService.from_round(rr, _cfg(capacity=Z + 2))
+    sess = _session(rr, capacity=Z + 2)
     reqs, truths, kvs = _requests(fm, 5, seed=17)
-    labels = svc.serve(reqs, kvs)
+    labels = sess.serve(reqs, kvs)
     for lbl, truth in zip(labels, truths):
         assert clustering_accuracy(lbl, truth, K) > 0.97
-    assert svc.stats()["folded"] == Z + 2
+    assert sess.stats()["folded"] == Z + 2
 
 
 def test_submit_interleaved_with_serve_not_lost(fixture_round):
@@ -163,12 +166,12 @@ def test_submit_interleaved_with_serve_not_lost(fixture_round):
     already pending from submit(): they stay queued for the next
     flush()."""
     fm, rr = fixture_round
-    svc = AttachService.from_round(rr, _cfg())
+    sess = _session(rr)
     reqs, truths, kvs = _requests(fm, 2, seed=21)
-    rid0 = svc.submit(reqs[0], kvs[0])
-    svc.serve([reqs[1]], [kvs[1]])  # flushes rid0 too, must not drop it
-    assert svc.stats()["undelivered"] == 1
-    got = svc.flush()
+    rid0 = sess.submit(reqs[0], kvs[0])
+    sess.serve([reqs[1]], [kvs[1]])  # flushes rid0 too, must not drop it
+    assert sess.stats()["undelivered"] == 1
+    got = sess.flush()
     assert set(got) == {rid0}
     assert clustering_accuracy(got[rid0], truths[0], K) > 0.97
 
@@ -178,10 +181,11 @@ def test_flush_failure_requeues_and_keeps_results(fixture_round,
     """A batch failure mid-flush must not lose work: computed results
     stay in the undelivered buffer, unserved requests requeue."""
     fm, rr = fixture_round
-    svc = AttachService.from_round(rr, _cfg(batch_size=1))
+    sess = _session(rr, batch_size=1)
     reqs, truths, kvs = _requests(fm, 2, seed=23, n_lo=10, n_hi=20)
     for r, kv in zip(reqs, kvs):
-        svc.submit(r, kv)
+        sess.submit(r, kv)
+    svc = sess.service
     orig, calls = svc._serve_batch, []
 
     def boom(batch, n_pad, out):
@@ -192,11 +196,11 @@ def test_flush_failure_requeues_and_keeps_results(fixture_round,
 
     monkeypatch.setattr(svc, "_serve_batch", boom)
     with pytest.raises(RuntimeError):
-        svc.flush()
-    st = svc.stats()
+        sess.flush()
+    st = sess.stats()
     assert st["pending"] == 1 and st["undelivered"] == 1
     monkeypatch.setattr(svc, "_serve_batch", orig)
-    got = svc.flush()  # retry serves the requeued request, delivers both
+    got = sess.flush()  # retry serves the requeued request, delivers both
     assert len(got) == 2
     for lbl, truth in zip(got.values(), truths):
         assert lbl.shape[0] == truth.shape[0]
