@@ -108,6 +108,11 @@ def main() -> None:
                 "jax": jax.__version__,
                 "backend": jax.default_backend(),
                 "device_count": jax.device_count(),
+                # Interprets the serve-plane speedup rows: sharding the
+                # batch axis over forced host devices is bounded by the
+                # physical core count, not the device count.
+                "cpu_count": os.cpu_count(),
+                "xla_flags": os.environ.get("XLA_FLAGS", ""),
             },
         }
         path = _json_path(args.json, stamp)

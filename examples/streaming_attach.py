@@ -10,7 +10,15 @@ keeps tau tracking the population. Mid-stream the session checkpoints
 and a restored replica proves bitwise-identical serving (crash
 recovery).
 
+The second half demonstrates the serve plane (DESIGN.md §11): the same
+stream served with ``serve_axes`` sharding the request batch over a
+mesh and ``refresh="async"`` double-buffering the tau swap — every
+label comes back stamped with the tau version that produced it.
+
   PYTHONPATH=src python examples/streaming_attach.py
+  # shard the serve plane over 8 forced host devices:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/streaming_attach.py
 """
 import os
 import tempfile
@@ -20,6 +28,7 @@ import numpy as np
 
 from repro.data.gaussian import late_device_stream, structured_devices
 from repro.fed.api import FederationPlan, Session
+from repro.utils.compat import make_mesh
 from repro.utils.metrics import clustering_accuracy
 
 
@@ -57,6 +66,35 @@ def main():
     print(f"checkpoint -> restore -> serve bitwise identical: {same}")
     assert same
     print(f"stats: {sess.stats()}")
+
+    # -- The serve plane: sharded batch axis + async versioned refresh.
+    # serve_axes shard_maps the (batch, n_pad, d) step over the mesh
+    # (tau replicated); refresh="async" builds the standby tau buffer
+    # while serving continues and commits the swap — one atomic version
+    # bump — at the next flush boundary. Labels are bitwise identical
+    # to single-host serving for a fixed tau version.
+    mesh = make_mesh((jax.device_count(),), ("data",))
+    plane_plan = FederationPlan(k=k, k_prime=kp, d=d, capacity=1024,
+                                batch_size=4 * jax.device_count(),
+                                bucket_sizes=(32, 128),
+                                refresh_every=6, refresh="async",
+                                serve_axes=("data",))
+    psess = Session.from_round(plane_plan, rr.detail, mesh=mesh)
+    late = late_device_stream(fm.means, kp, 16, seed=23,
+                              n_range=(16, 120))
+    first = psess.serve_versioned([r[0] for r in late[:8]],
+                                  [r[2] for r in late[:8]])
+    second = psess.serve_versioned([r[0] for r in late[8:]],
+                                   [r[2] for r in late[8:]])
+    st = psess.stats()
+    print(f"serve plane: {st['serve_shards']} shard(s) over "
+          f"{mesh.shape}, async refresh -> versions "
+          f"{sorted({v for _, v in first})} then "
+          f"{sorted({v for _, v in second})} "
+          f"(tau version now {st['tau_version']})")
+    acc = float(np.mean([clustering_accuracy(l, t[1], k)
+                         for (l, _), t in zip(first + second, late)]))
+    print(f"serve-plane mean accuracy: {100 * acc:.2f}%")
 
 
 if __name__ == "__main__":

@@ -78,6 +78,16 @@ def load_pytree(path: str, like, shardings=None):
     return tree
 
 
+def npz_keys(path: str) -> set:
+    """The flattened key paths present in a checkpoint — how restore
+    paths branch between schema generations (e.g. the streaming
+    service's single-tau v1 npz vs the double-buffered ``tau_bufs`` /
+    ``tau_meta`` v2 schema, DESIGN.md §11) without loading any array
+    data."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    return set(data.files)
+
+
 def checkpoint_step(path: str) -> Optional[int]:
     data = np.load(path if path.endswith(".npz") else path + ".npz")
     return int(data["__step__"]) if "__step__" in data else None

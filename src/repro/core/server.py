@@ -280,6 +280,35 @@ def aggregate_incremental(state: ServerState, device_ids, centers,
                        state.received.at[ids].set(True, mode="drop"))
 
 
+def aggregate_incremental_sharded(state: ServerState, device_ids,
+                                  centers, mask, axes,
+                                  weights=None) -> ServerState:
+    """The collective path of :func:`aggregate_incremental` — the fold
+    of the sharded serve plane (DESIGN.md §11).
+
+    Runs INSIDE shard_map: ``state`` is replicated, ``device_ids`` /
+    ``centers`` / ``mask`` / ``weights`` are this shard's slice of the
+    report batch. The batch is transported with one tiled all_gather —
+    O(B·k'·d), the reports themselves, NEVER the O(capacity·k'·d) fold
+    state — and then every shard applies the identical scatter through
+    :func:`aggregate_incremental`, which stays the single fold
+    primitive. Gathering preserves the global batch order, so the
+    result is BITWISE identical to folding the unsharded batch.
+
+    Ids at or beyond the state capacity are dropped (the declined /
+    padding sentinel of the serve plane); negative ids are not allowed
+    — they would wrap per numpy indexing rules.
+    """
+    ids = jax.lax.all_gather(jnp.asarray(device_ids, jnp.int32), axes,
+                             axis=0, tiled=True)
+    centers = jax.lax.all_gather(centers, axes, axis=0, tiled=True)
+    mask = jax.lax.all_gather(mask, axes, axis=0, tiled=True)
+    w = (None if weights is None
+         else jax.lax.all_gather(weights.astype(jnp.float32), axes,
+                                 axis=0, tiled=True))
+    return aggregate_incremental(state, ids, centers, mask, weights=w)
+
+
 def finalize(state: ServerState, k: int, *,
              weighted: bool = False) -> KFedAggregate:
     """Run Algorithm 2 over every report received so far. Devices that

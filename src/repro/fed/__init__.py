@@ -11,6 +11,7 @@ from repro.fed.api import (  # noqa: F401
     Session,
     SessionError,
 )
+from repro.fed.plane import ServePlane, TauBuffer  # noqa: F401
 from repro.fed.policy import (  # noqa: F401
     FoldPolicy,
     POLICIES,

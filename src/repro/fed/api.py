@@ -82,8 +82,14 @@ class FederationPlan:
                ``policy_seed`` keys the reservoir), requests padded into
                ``bucket_sizes`` point buckets and served ``batch_size``
                at a time, tau re-finalized every ``refresh_every`` folds
-               (0 = never), ``checkpoint`` the default save/restore
-               path.
+               (0 = never) with a ``refresh`` swap mode (``sync`` swaps
+               tau immediately; ``async`` double-buffers — the standby
+               builds while serving continues and the versioned swap
+               commits at the next flush boundary), ``serve_axes`` the
+               mesh axes the serve plane shards the request batch over
+               (None = single host; dispatched by ``Session.attach`` /
+               ``serve``/``flush`` exactly like ``topology`` dispatches
+               ``run``), ``checkpoint`` the default save/restore path.
     """
     k: int
     k_prime: int
@@ -97,6 +103,8 @@ class FederationPlan:
     batch_size: int = 8
     bucket_sizes: Tuple[int, ...] = (64, 256, 1024)
     refresh_every: int = 0
+    refresh: str = "sync"
+    serve_axes: Optional[Tuple[str, ...]] = None
     fold_reports: bool = True
     fold_policy: str = "drop"
     policy_seed: int = 0
@@ -119,6 +127,14 @@ class FederationPlan:
         if self.fold_capacity is not None and self.fold_capacity < 1:
             _bad("fold_capacity", self.fold_capacity,
                  "must be None (infer the device count) or an int >= 1")
+        if isinstance(self.serve_axes, str):
+            object.__setattr__(self, "serve_axes", (self.serve_axes,))
+        if self.serve_axes is not None and (
+                not self.serve_axes
+                or not all(isinstance(a, str) for a in self.serve_axes)):
+            _bad("serve_axes", self.serve_axes,
+                 "must be None (single-host serving) or a non-empty "
+                 "tuple of mesh axis names, e.g. ('data',)")
         if not isinstance(self.local_kw, Mapping):
             _bad("local_kw", self.local_kw,
                  "must be a mapping of Algorithm 1 options")
@@ -140,7 +156,7 @@ class FederationPlan:
             k=self.k, k_prime=self.k_prime, d=self.d,
             capacity=self.capacity, batch_size=self.batch_size,
             bucket_sizes=tuple(self.bucket_sizes),
-            refresh_every=self.refresh_every,
+            refresh_every=self.refresh_every, refresh=self.refresh,
             fold_reports=self.fold_reports,
             weight_by_core_counts=self.weight_by_core_counts,
             fold_policy=self.fold_policy, policy_seed=self.policy_seed,
@@ -208,6 +224,16 @@ class Session:
                 _bad("mesh_axes", tuple(plan.mesh_axes),
                      f"axes {missing} not in the mesh (available: "
                      f"{list(mesh.shape)})")
+        if plan.serve_axes is not None:
+            # The serve plane shards the request batch axis; validate
+            # its mesh mapping NOW, not at the first (lazy) serve —
+            # one rule set, owned by the plane.
+            from repro.fed.plane import ServePlane, ServePlaneError
+            try:
+                ServePlane.validate_mesh_axes(
+                    mesh, tuple(plan.serve_axes), plan.batch_size)
+            except ServePlaneError as e:
+                raise PlanError(str(e)) from None
         self.plan = plan
         self.mesh = mesh
         self._seed = int(seed)
@@ -340,7 +366,8 @@ class Session:
             cfg = self.plan.stream_config()
             if self._round is not None:
                 self._svc = AttachService._from_round(
-                    self._round, cfg, seed=self._seed)
+                    self._round, cfg, seed=self._seed, mesh=self.mesh,
+                    serve_axes=self.plan.serve_axes)
             elif self._tau is not None:
                 if self.plan.refresh_every:
                     import warnings
@@ -353,7 +380,9 @@ class Session:
                         "Session.from_round, or set refresh_every=0 "
                         "to keep tau fixed.", UserWarning, stacklevel=3)
                 self._svc = AttachService(cfg, self._tau,
-                                          seed=self._seed)
+                                          seed=self._seed,
+                                          mesh=self.mesh,
+                                          serve_axes=self.plan.serve_axes)
             else:
                 raise SessionError(
                     "streaming needs a finalized round: call run() or "
@@ -379,8 +408,15 @@ class Session:
 
     def serve(self, datas, k_valid=None) -> List[np.ndarray]:
         """Serve a batch of late devices (bucketed/padded, one jitted
-        step); reports fold by the plan's admission policy."""
+        step on the plan's serve plane — single-host, or sharded over
+        ``serve_axes``); reports fold by the plan's admission policy."""
         return self.service.serve(datas, k_valid)
+
+    def serve_versioned(self, datas, k_valid=None):
+        """Like :meth:`serve`, returning (labels, tau_version) pairs:
+        the version identifies exactly which double-buffered tau swap
+        each request was served under (DESIGN.md §11)."""
+        return self.service.serve_versioned(datas, k_valid)
 
     def submit(self, data, k_valid: Optional[int] = None) -> int:
         return self.service.submit(data, k_valid)
@@ -388,10 +424,23 @@ class Session:
     def flush(self):
         return self.service.flush()
 
+    def flush_versioned(self):
+        """{request_id: (labels, tau_version)} for every pending
+        request; a flush boundary is where a staged async refresh
+        commits its atomic version bump."""
+        return self.service.flush_versioned()
+
     def refresh(self):
         """Re-finalize Algorithm 2 over all folded reports and swap in
-        fresh tau centers."""
+        fresh tau centers now (one atomic version bump, regardless of
+        the plan's cadence ``refresh`` mode)."""
         return self.service.refresh()
+
+    @property
+    def tau_version(self) -> int:
+        """The serving layer's current tau version (bumps once per
+        committed refresh swap)."""
+        return self.service.tau_version
 
     def stats(self) -> dict:
         return self.service.stats()
@@ -430,7 +479,9 @@ class Session:
         """Rebuild a session from a checkpoint; restore + serve is
         bitwise identical to the uninterrupted session."""
         sess = cls(plan, mesh, seed=seed)
-        sess._svc = AttachService._restore(path, plan.stream_config())
+        sess._svc = AttachService._restore(path, plan.stream_config(),
+                                           mesh=mesh,
+                                           serve_axes=plan.serve_axes)
         sess._tau = sess._svc.tau
         return sess
 

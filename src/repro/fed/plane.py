@@ -1,0 +1,269 @@
+"""The sharded streaming serve plane (DESIGN.md §11).
+
+Everything the streaming layer (``fed/stream.py``, §9) executes on
+device routes through this module, so ONE knob — ``serve_axes`` on the
+``FederationPlan`` — decides whether the hot serving path runs on a
+single host or shard_mapped over a mesh:
+
+  * **serve step** — the jitted (batch local Algorithm 1 solve +
+    Theorem 3.2 attach) over a fixed ``(batch_size, n_pad, d)`` request
+    tensor. The request batch axis is embarrassingly parallel, so the
+    sharded plane splits it over the ``serve_axes`` mesh axes with the
+    tau centers replicated (``P()``); per-request results are bitwise
+    identical to the unsharded step because every request's computation
+    is a function of its own (key, data, k_valid) only.
+  * **fold scatter** — the per-slot scatter of served reports into the
+    replicated incremental server state. ``server.aggregate_incremental``
+    stays the single fold primitive; the sharded plane runs its
+    collective sibling ``server.aggregate_incremental_sharded`` (each
+    shard scatters ITS slice of the batch, disjoint slots combine with
+    an exact psum). Slot admission itself stays host-side in
+    ``fed/policy.py`` and is shard-deterministic by contract — the plane
+    only ever executes an already-decided ``(B,)`` slot vector.
+  * **double-buffered tau** (:class:`TauBuffer`) — serving reads
+    ``bufs[active]``; a refresh builds the standby buffer while serving
+    continues, and the swap is an atomic version bump. Every served
+    label maps to exactly one tau version; both buffers + the version
+    counter ride the §9 checkpoint so a restore mid-window replays the
+    same version assignments bitwise.
+
+The plane is deliberately free of service bookkeeping (queues, buckets,
+policies, checkpoints live in ``fed/stream.py``): it owns exactly the
+two device computations of the hot path and their mesh mapping.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import server
+from repro.core.local_kmeans import batched_local_kmeans
+from repro.kernels import ops
+from repro.utils.compat import shard_map as _shard_map
+
+__all__ = ["ServePlane", "ServePlaneError", "TauBuffer"]
+
+
+class ServePlaneError(ValueError):
+    """A serve-plane configuration failed validation (named, with the
+    accepted values) — raised at construction, never inside tracing."""
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered, versioned tau.
+# ---------------------------------------------------------------------------
+
+
+class TauBuffer(NamedTuple):
+    """Double-buffered tau centers with an atomic version counter.
+
+    ``bufs[active]`` is what the serve step reads; ``bufs[1 - active]``
+    is the standby a refresh writes into. ``stage`` fills the standby
+    without touching serving (the async-refresh build phase); ``commit``
+    is the atomic swap: active flips and ``version`` bumps by one, so a
+    request's recorded version identifies exactly which tau buffer
+    produced its labels. ``swap_now`` = stage + commit (the synchronous
+    refresh). Immutable — every transition returns a new TauBuffer, and
+    the whole triple serializes into the service checkpoint.
+    """
+    bufs: jax.Array      # (2, k, d) f32
+    active: int          # which buffer serves
+    version: int         # monotone; bumps exactly once per commit
+    pending: bool        # standby staged, swap deferred to a boundary
+
+    @classmethod
+    def fresh(cls, tau) -> "TauBuffer":
+        t = jnp.asarray(tau, jnp.float32)
+        return cls(jnp.stack([t, t]), 0, 0, False)
+
+    @property
+    def tau(self) -> jax.Array:
+        return self.bufs[self.active]
+
+    @property
+    def standby(self) -> jax.Array:
+        return self.bufs[1 - self.active]
+
+    def stage(self, new_tau) -> "TauBuffer":
+        """Write the standby buffer; serving keeps reading the active
+        one until :meth:`commit`."""
+        t = jnp.asarray(new_tau, jnp.float32)
+        bufs = jnp.stack([self.bufs[self.active], t]
+                         if self.active == 0 else [t, self.bufs[self.active]])
+        return TauBuffer(bufs, self.active, self.version, True)
+
+    def commit(self) -> "TauBuffer":
+        """The atomic swap: activate the standby, bump the version."""
+        return TauBuffer(self.bufs, 1 - self.active, self.version + 1,
+                         False)
+
+    def swap_now(self, new_tau) -> "TauBuffer":
+        return self.stage(new_tau).commit()
+
+    # -- checkpoint plumbing (npz-able arrays) --------------------------
+    def meta_array(self):
+        import numpy as np
+        return np.asarray([self.active, self.version, int(self.pending)],
+                          np.int64)
+
+    @classmethod
+    def from_arrays(cls, bufs, meta) -> "TauBuffer":
+        import numpy as np
+        m = np.asarray(meta)
+        return cls(jnp.asarray(bufs, jnp.float32), int(m[0]), int(m[1]),
+                   bool(m[2]))
+
+
+# ---------------------------------------------------------------------------
+# The plane: serve step + fold scatter, single-host or shard_mapped.
+# ---------------------------------------------------------------------------
+
+
+def _make_step(cfg):
+    """The ONE serve-step body (shared verbatim by both planes): vmapped
+    Algorithm 1 over the request batch + Theorem 3.2 attach against the
+    replicated tau + Definition 3.3 induced labels."""
+
+    def step(tau, keys, data, point_mask, k_valid):
+        loc = batched_local_kmeans(keys, data, k_max=cfg.k_prime,
+                                   k_valid=k_valid,
+                                   point_mask=point_mask,
+                                   **cfg.local_kw)
+        ctr = jax.vmap(
+            lambda c, m: server.assign_new_device(c, m, tau))(
+                loc.centers, loc.center_mask)
+        labels = server.induced_labels(ctr, loc.assign)
+        return (labels, loc.centers, loc.center_mask,
+                server.core_weights(loc.core_counts))
+
+    return step
+
+
+class ServePlane:
+    """Executes the streaming hot path for an ``AttachService``.
+
+    ``serve_axes=None`` is the single-host plane: ``step`` is exactly
+    the historical jitted serve step and ``fold`` is one
+    ``server.aggregate_incremental`` scatter — bitwise identical to the
+    pre-plane streaming layer. With ``serve_axes`` (and a mesh), both
+    are shard_mapped: the request batch axis splits over the named mesh
+    axes, tau and the fold state stay replicated, and the fold runs
+    through ``server.aggregate_incremental_sharded``.
+
+    The fold contract is fixed-shape: a ``(B,)`` slot vector aligned
+    with the batch, where an out-of-capacity sentinel (>= capacity)
+    marks declined/padding entries — the scatter drops them
+    (``mode="drop"``), so the fold never recompiles as admission
+    decisions vary.
+    """
+
+    @staticmethod
+    def validate_mesh_axes(mesh, axes, batch_size: int) -> int:
+        """THE serve-axes validation (shared by the eager Session check
+        and plane construction — one rule set, never two). Returns the
+        shard count. Raises :class:`ServePlaneError` naming the field
+        and the accepted values."""
+        if not axes or not all(isinstance(a, str) for a in axes):
+            raise ServePlaneError(
+                f"serve_axes={axes!r} is invalid: must be None "
+                f"(single-host serving) or a non-empty tuple of mesh "
+                f"axis names, e.g. ('data',)")
+        if mesh is None:
+            raise ServePlaneError(
+                f"serve_axes={tuple(axes)!r} needs a mesh: "
+                f"Session(plan, mesh=...)")
+        missing = [a for a in axes if a not in mesh.shape]
+        if missing:
+            raise ServePlaneError(
+                f"serve_axes={tuple(axes)!r}: axes {missing} not in "
+                f"the mesh (available: {list(mesh.shape)})")
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if batch_size % n:
+            raise ServePlaneError(
+                f"batch_size={batch_size} is invalid: must be "
+                f"divisible by the serve_axes shard count {n} "
+                f"(axes {tuple(axes)})")
+        return n
+
+    def __init__(self, cfg, mesh=None, serve_axes=None):
+        self.cfg = cfg
+        axes = tuple(serve_axes) if serve_axes else None
+        n = (self.validate_mesh_axes(mesh, axes, cfg.batch_size)
+             if axes else 1)
+        self.mesh = mesh
+        self.axes = axes
+        self.n_shards = n
+        # The RECOMMENDED per-shard row-chunk budget (kernels/ops.py
+        # hint, surfaced in stats()): callers streaming large point
+        # sets next to this plane (e.g. attach_fn-scale labeling)
+        # should chunk at this, not the global threshold, so the
+        # aggregate footprint across concurrent shards stays bounded.
+        self.chunk_rows = ops.plan_chunk_rows(self.n_shards)
+
+        step = _make_step(cfg)
+        if axes:
+            from jax.sharding import NamedSharding
+            spec = P(axes)
+            self._batch_sharding = NamedSharding(mesh, spec)
+            step_sharded = _shard_map(
+                step, mesh=mesh,
+                in_specs=(P(), spec, spec, spec, spec),
+                out_specs=(spec, spec, spec, spec))
+            self._step = jax.jit(step_sharded)
+
+            def fold_sharded(state, slots, centers, cmask, weights):
+                return server.aggregate_incremental_sharded(
+                    state, slots, centers, cmask, axes, weights=weights)
+
+            self._fold_mesh = jax.jit(_shard_map(
+                fold_sharded, mesh=mesh,
+                in_specs=(P(), spec, spec, spec, spec),
+                out_specs=P()))
+        else:
+            self._step = jax.jit(step)
+            self._fold_mesh = None
+            self._batch_sharding = None
+
+    # ------------------------------------------------------------------
+    def step(self, tau, keys, data, point_mask, k_valid):
+        """Serve one fixed-shape (B, n_pad, d) batch. Returns
+        (labels (B, n_pad), centers (B, k', d), center_mask (B, k'),
+        core weights (B, k')) — sharded over the batch axis on the
+        sharded plane, bitwise identical per request either way."""
+        if self._batch_sharding is not None:
+            # Host batches land directly in their sharded placement —
+            # one host->shard copy each, not a device-0 bounce plus an
+            # all-to-all reshard inside the jitted step.
+            sh = self._batch_sharding
+            keys, data, point_mask, k_valid = (
+                jax.device_put(keys, sh), jax.device_put(data, sh),
+                jax.device_put(point_mask, sh),
+                jax.device_put(k_valid, sh))
+        return self._step(tau, keys, data, point_mask, k_valid)
+
+    def fold(self, state, slots, centers, cmask, weights=None):
+        """Scatter one batch of already-admitted reports into the
+        replicated fold state. ``slots``: (B,) int32, entries >= the
+        state capacity are dropped (declined / padding / within-batch
+        evictions). Lengths other than ``batch_size`` (e.g. round
+        seeding) always take the single-host scatter — only the steady
+        fixed-shape batch rides the mesh."""
+        if weights is None:
+            # The explicit form of aggregate_incremental's default —
+            # same scattered values, one jit signature for both cases.
+            weights = jnp.ones(jnp.shape(cmask), jnp.float32)
+        if (self._fold_mesh is not None
+                and int(slots.shape[0]) == self.cfg.batch_size):
+            return self._fold_mesh(state, slots, centers, cmask, weights)
+        return server.aggregate_incremental(state, slots, centers, cmask,
+                                            weights=weights)
+
+    def describe(self) -> dict:
+        return {"serve_axes": list(self.axes) if self.axes else None,
+                "serve_shards": self.n_shards,
+                "chunk_rows": self.chunk_rows}

@@ -55,6 +55,44 @@ class FoldPolicy:
     def admit(self, rid: int, weight: float = 1.0) -> Optional[int]:
         raise NotImplementedError
 
+    def admit_batch(self, rids, weights=None):
+        """Admission for one serve batch, IN GLOBAL REQUEST ORDER — the
+        one entry point the serve planes call (DESIGN.md §11).
+
+        Returns ``(slots, granted)``: a ``(len(rids),)`` int64 slot
+        vector with -1 for declined requests, and the number of
+        admissions GRANTED by the policy (what the refresh cadence
+        counts — identical to running the sequential admit loop). When
+        a later admission in the batch evicts a slot an earlier one was
+        granted, the earlier entry is reset to -1 (its scatter is
+        suppressed, though it still counted as granted), so executing
+        the whole vector as ONE fold — in any per-slot order, on any
+        number of shards — lands exactly the reports a sequential
+        admit-then-fold loop would have kept.
+
+        Shard-determinism contract: the result is a function of the
+        persisted policy state and ``(rids, weights)`` ONLY. Policies
+        never see the mesh, so a sharded plane and a single-host plane
+        replaying the same request stream make identical admission
+        decisions — this is what makes the sharded fold state (and a
+        checkpoint written by either plane) bitwise interchangeable.
+        """
+        slots = np.full((len(rids),), -1, np.int64)
+        owner: Dict[int, int] = {}      # slot -> batch index holding it
+        granted = 0
+        for i, rid in enumerate(rids):
+            w = 1.0 if weights is None else float(weights[i])
+            slot = self.admit(int(rid), w)
+            if slot is None:
+                continue
+            granted += 1
+            prev = owner.get(slot)
+            if prev is not None:        # within-batch eviction
+                slots[prev] = -1
+            owner[slot] = i
+            slots[i] = slot
+        return slots, granted
+
     # -- checkpoint plumbing (npz-able arrays; {} for stateless) --------
     def state_like(self) -> Dict[str, np.ndarray]:
         """Zero-filled arrays matching :meth:`state_arrays` (restore

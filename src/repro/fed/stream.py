@@ -1,4 +1,4 @@
-"""Streaming post-round attachment service (DESIGN.md §9).
+"""Streaming post-round attachment service (DESIGN.md §9, §11).
 
 Everything after the one communication round: a finalized k-FED round
 leaves k tau centers, and from then on the paper's Theorem 3.2 promises
@@ -9,29 +9,44 @@ This module turns that promise into a serving layer:
     bucketed by padded point count, padded into fixed ``(B, n_pad, d)``
     shapes with point masks, and served by ONE jitted step that vmaps
     the Algorithm 1 local solve over the request batch and attaches via
-    the Theorem 3.2 nearest-center rule;
+    the Theorem 3.2 nearest-center rule. The step (and the fold
+    scatter) execute on a ``fed/plane.ServePlane`` — single-host by
+    default, shard_mapped over the plan's ``serve_axes`` mesh axes when
+    set (the request batch axis is embarrassingly parallel; tau and the
+    fold state stay replicated);
   * **online refresh** — each served report (Theta, mask, |S_r|) can be
     folded into the incremental server state
     (``server.aggregate_incremental``), and on a configurable cadence
     the round is re-finalized so the cached tau centers track the
     population (the membership-update problem of Holzer et al. 2023 /
-    Garst & Reinders 2023), still with one uplink per device ever;
-  * **crash recovery** — the full service state (tau centers, fold
-    state, counters, key seed) checkpoints through
+    Garst & Reinders 2023), still with one uplink per device ever. tau
+    is double-buffered and versioned (``fed/plane.TauBuffer``):
+    ``refresh="sync"`` swaps immediately between batches, while
+    ``refresh="async"`` builds the standby buffer without interrupting
+    serving and commits the swap — one atomic version bump — at the
+    next flush boundary. Every served label records the tau version
+    that produced it;
+  * **crash recovery** — the full service state (both tau buffers +
+    version, fold state, counters, key seed) checkpoints through
     ``checkpoint/store.py``; restore + serve is bitwise identical to
-    the uninterrupted service because request keys are derived from the
-    persisted request-id counter, never from wall clock.
+    the uninterrupted service — including mid-refresh-window version
+    assignments — because request keys are derived from the persisted
+    request-id counter, never from wall clock.
 
 Fold-slot admission is a pluggable ``FoldPolicy`` (``fed/policy.py``):
 ``drop`` (slot == request id, over-capacity ids served-not-folded — the
 historical behavior), ``lru`` (evict the least-recently-folded slot),
-or ``weighted_reservoir`` (A-ES sampling by report mass). Eviction is a
-slot overwrite, so ``server.aggregate_incremental`` stays the single
-fold primitive. In-flight (submitted, unflushed) requests are NOT part
-of a checkpoint — clients re-submit on failover.
+or ``weighted_reservoir`` (A-ES sampling by report mass). Admission is
+host-side and shard-deterministic (``FoldPolicy.admit_batch``);
+eviction is a slot overwrite, so ``server.aggregate_incremental`` stays
+the single fold primitive (the sharded plane runs its collective
+sibling ``aggregate_incremental_sharded`` — bitwise the same state).
+In-flight (submitted, unflushed) requests are NOT part of a checkpoint
+— clients re-submit on failover.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -39,15 +54,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.store import load_pytree, save_pytree
+from repro.checkpoint.store import load_pytree, npz_keys, save_pytree
 from repro.core import server
-from repro.core.local_kmeans import batched_local_kmeans
+from repro.fed.plane import ServePlane, ServePlaneError, TauBuffer
 from repro.fed.policy import FoldPolicy, make_policy
 from repro.utils.deprecation import warn_legacy
 
-
-def _round_up(v: int, m: int) -> int:
-    return ((v + m - 1) // m) * m
+REFRESH_MODES = ("sync", "async")
 
 
 class StreamConfigError(ValueError):
@@ -70,6 +83,7 @@ class StreamConfig:
     batch_size: int = 8         # requests per jitted serve step
     bucket_sizes: Tuple[int, ...] = (64, 256, 1024)  # n^(z) pad buckets
     refresh_every: int = 0      # re-finalize after this many folds; 0 = never
+    refresh: str = "sync"       # tau swap: sync (immediate) | async
     fold_reports: bool = True   # fold served reports into the server state
     weight_by_core_counts: bool = False
     fold_policy: str = "drop"   # admission: drop | lru | weighted_reservoir
@@ -93,6 +107,9 @@ class StreamConfig:
         if self.refresh_every < 0:
             _bad("refresh_every", self.refresh_every,
                  "must be >= 0 (0 disables the refresh cadence)")
+        if self.refresh not in REFRESH_MODES:
+            _bad("refresh", self.refresh,
+                 f"accepted values are {list(REFRESH_MODES)}")
         if (not self.bucket_sizes
                 or any(int(b) < 1 for b in self.bucket_sizes)
                 or list(self.bucket_sizes)
@@ -113,7 +130,10 @@ class AttachService:
     """Serves batches of late-joining devices against a finalized round.
 
     Construct with :meth:`from_round` (seeds the fold state with the
-    round's own reports) or :meth:`restore` (from a checkpoint).
+    round's own reports) or :meth:`restore` (from a checkpoint). Pass
+    ``mesh`` + ``serve_axes`` to run the hot path on the sharded serve
+    plane (DESIGN.md §11) — per-request labels are bitwise identical to
+    the single-host plane for a fixed tau version.
     """
 
     def __init__(self, cfg: StreamConfig, tau_centers, *,
@@ -121,10 +141,17 @@ class AttachService:
                  policy: Optional[FoldPolicy] = None,
                  seed: int = 0, next_id: int = 0,
                  since_refresh: int = 0, served_devices: int = 0,
-                 served_points: int = 0):
+                 served_points: int = 0, mesh=None, serve_axes=None,
+                 tau_buffer: Optional[TauBuffer] = None):
         self.cfg = cfg
-        self.tau = jnp.asarray(tau_centers, jnp.float32)
-        assert self.tau.shape == (cfg.k, cfg.d), self.tau.shape
+        try:
+            self.plane = ServePlane(cfg, mesh=mesh, serve_axes=serve_axes)
+        except ServePlaneError as e:
+            raise StreamConfigError(str(e)) from None
+        self._taubuf = (tau_buffer if tau_buffer is not None
+                        else TauBuffer.fresh(tau_centers))
+        assert self._taubuf.bufs.shape == (2, cfg.k, cfg.d), \
+            self._taubuf.bufs.shape
         self.state = (server.init_state(cfg.capacity, cfg.k_prime, cfg.d)
                       if state is None
                       else jax.tree.map(jnp.asarray, state))
@@ -137,8 +164,9 @@ class AttachService:
         self._served_devices = int(served_devices)
         self._served_points = int(served_points)
         self._pending: List[Tuple[int, np.ndarray, int]] = []
-        self._done: Dict[int, np.ndarray] = {}  # served, not yet delivered
-        self._step = jax.jit(self._make_step())
+        # served, not yet delivered: rid -> (labels, tau version)
+        self._done: Dict[int, Tuple[np.ndarray, int]] = {}
+        self._oversized_warned = False
 
     # ------------------------------------------------------------- build --
 
@@ -152,15 +180,16 @@ class AttachService:
         return cls._from_round(rr, cfg, seed=seed)
 
     @classmethod
-    def _from_round(cls, rr, cfg: StreamConfig, *,
-                    seed: int = 0) -> "AttachService":
+    def _from_round(cls, rr, cfg: StreamConfig, *, seed: int = 0,
+                    mesh=None, serve_axes=None) -> "AttachService":
         """Seed the service from a finished round result: cache its tau
         centers and fold the participating devices' reports so a later
         refresh re-finalizes over round + streamed devices."""
         Z = int(rr.device_centers.shape[0])
         if cfg.fold_policy == "drop":
             assert cfg.capacity >= Z, (cfg.capacity, Z)
-        svc = cls(cfg, rr.agg.tau_centers, seed=seed, next_id=Z)
+        svc = cls(cfg, rr.agg.tau_centers, seed=seed, next_id=Z,
+                  mesh=mesh, serve_axes=serve_axes)
         if cfg.fold_reports:
             ids = np.nonzero(np.asarray(rr.participated))[0]
             if ids.size:
@@ -173,24 +202,16 @@ class AttachService:
                     cw if cfg.weight_by_core_counts else None)
         return svc
 
-    def _make_step(self):
-        cfg = self.cfg
-
-        def step(tau, keys, data, point_mask, k_valid):
-            loc = batched_local_kmeans(keys, data, k_max=cfg.k_prime,
-                                       k_valid=k_valid,
-                                       point_mask=point_mask,
-                                       **cfg.local_kw)
-            ctr = jax.vmap(
-                lambda c, m: server.assign_new_device(c, m, tau))(
-                    loc.centers, loc.center_mask)
-            labels = server.induced_labels(ctr, loc.assign)
-            return (labels, loc.centers, loc.center_mask,
-                    server.core_weights(loc.core_counts))
-
-        return step
-
     # ------------------------------------------------------------- serve --
+
+    @property
+    def tau(self) -> jax.Array:
+        """The ACTIVE tau buffer (what the serve step reads)."""
+        return self._taubuf.tau
+
+    @property
+    def tau_version(self) -> int:
+        return self._taubuf.version
 
     def submit(self, data, k_valid: Optional[int] = None) -> int:
         """Enqueue one device's (n, d) data; returns its request id (the
@@ -208,50 +229,115 @@ class AttachService:
         for b in self.cfg.bucket_sizes:
             if n <= b:
                 return b
-        return _round_up(n, self.cfg.bucket_sizes[-1])
+        # Above the ladder: geometric (doubling) buckets bound the
+        # number of distinct jitted pad shapes to O(log n_max / top)
+        # instead of one recompile per distinct rounded-up n.
+        b = self.cfg.bucket_sizes[-1]
+        while b < n:
+            b *= 2
+        if not self._oversized_warned:
+            self._oversized_warned = True
+            warnings.warn(
+                f"attach request with n={n} points exceeds the largest "
+                f"configured bucket ({self.cfg.bucket_sizes[-1]}); "
+                f"padding to a geometric bucket of {b}. Add larger "
+                f"bucket_sizes to the plan to avoid oversized pads.",
+                UserWarning, stacklevel=3)
+        return b
 
     def flush(self) -> Dict[int, np.ndarray]:
         """Serve every pending request; returns {request_id: (n,) labels}.
+        See :meth:`flush_versioned` for the tau version each request was
+        served under."""
+        return {rid: lbl
+                for rid, (lbl, _) in self.flush_versioned().items()}
+
+    def flush_versioned(self) -> Dict[int, Tuple[np.ndarray, int]]:
+        """Serve every pending request; returns
+        {request_id: ((n,) labels, tau_version)}.
 
         Requests are grouped by pad bucket and served in fixed
         (batch_size, n_pad, d) shapes — short batches pad by repeating
         the last real request (discarded). Served reports fold into the
-        incremental server state, triggering a refresh on cadence.
+        incremental server state, triggering a refresh on cadence. A
+        flush boundary is where a staged async tau swap commits, so
+        every request in one flush-and-refresh window maps to exactly
+        one tau version.
         """
+        if self._taubuf.pending:
+            self._taubuf = self._taubuf.commit()
         pending, self._pending = self._pending, []
         buckets: Dict[int, list] = {}
         for item in pending:
             buckets.setdefault(self._bucket(item[1].shape[0]), []).append(
                 item)
         out, self._done = self._done, {}  # undelivered earlier results
+        # Two-phase pipeline: phase 1 DISPATCHES every batch (serve
+        # step, fold scatter, staged refresh — all asynchronous, chained
+        # by dataflow), phase 2 materializes labels on host. The host
+        # never sits between consecutive device batches, which is what
+        # keeps a sharded plane's shards saturated.
+        staged: List[tuple] = []
         try:
             for n_pad in sorted(buckets):
                 group = buckets[n_pad]
                 B = self.cfg.batch_size
                 for lo in range(0, len(group), B):
-                    self._serve_batch(group[lo:lo + B], n_pad, out)
+                    self._serve_batch(group[lo:lo + B], n_pad, staged)
+            self._deliver(staged, out)
         except BaseException:
-            # A failed batch must not lose work: computed results go
-            # back to the undelivered buffer, unserved requests requeue.
+            # A failed batch must not lose work: every dispatched batch
+            # that still materializes drains into the undelivered
+            # buffer; everything else (unserved, or failed async)
+            # requeues by request id.
+            for entry in staged:
+                if entry[0][0][0] in out:
+                    continue  # already delivered before the failure
+                try:
+                    self._deliver([entry], out)
+                except Exception:
+                    pass  # its rids stay out of `out` -> requeued
             self._done.update(out)
             self._pending = [it for it in pending
                              if it[0] not in out] + self._pending
             raise
         return out
 
+    def _deliver(self, staged, out) -> None:
+        """Phase 2 of a flush: gather each dispatched batch's labels to
+        host and hand them (with their tau version) to the caller."""
+        for batch, labels_dev, version in staged:
+            labels = np.asarray(labels_dev)
+            for i, (rid, arr, _) in enumerate(batch):
+                out[rid] = (labels[i, :arr.shape[0]], version)
+                self._served_devices += 1
+                self._served_points += arr.shape[0]
+
     def serve(self, datas, k_valid=None) -> List[np.ndarray]:
         """Submit + flush convenience: one labels array per input.
         Results of OTHER requests already pending stay queued for the
         next :meth:`flush`."""
+        return [lbl for lbl, _ in self.serve_versioned(datas, k_valid)]
+
+    def serve_versioned(self, datas,
+                        k_valid=None) -> List[Tuple[np.ndarray, int]]:
+        """Like :meth:`serve`, returning (labels, tau_version) pairs —
+        the version identifies exactly which tau buffer produced each
+        request's attachment."""
         kvs = ([None] * len(datas) if k_valid is None else list(k_valid))
         assert len(kvs) == len(datas), (len(kvs), len(datas))
         rids = [self.submit(d, kv) for d, kv in zip(datas, kvs)]
-        got = self.flush()
+        got = self.flush_versioned()
         mine = [got.pop(r) for r in rids]
         self._done.update(got)
         return mine
 
-    def _serve_batch(self, batch, n_pad: int, out: Dict[int, np.ndarray]):
+    def _serve_batch(self, batch, n_pad: int, staged) -> None:
+        """Phase 1 of a flush: dispatch one batch's serve step + fold
+        (+ cadence refresh) and stage its device-side labels. Nothing
+        here waits on the device unless the admission policy needs
+        report weights (``needs_weight`` policies synchronize once per
+        batch)."""
         cfg = self.cfg
         B = cfg.batch_size
         data = np.zeros((B, n_pad, cfg.d), np.float32)
@@ -267,65 +353,83 @@ class AttachService:
             rids[i] = rid
         keys = jax.vmap(lambda r: jax.random.fold_in(self._base_key, r))(
             jnp.asarray(rids, jnp.uint32))
-        labels, centers, cmask, weights = self._step(
+        version = self._taubuf.version
+        labels, centers, cmask, weights = self.plane.step(
             self.tau, keys, jnp.asarray(data), jnp.asarray(pmask),
             jnp.asarray(kv))
-        labels = np.asarray(labels)
-        for i, (rid, arr, _) in enumerate(batch):
-            out[rid] = labels[i, :arr.shape[0]]
-            self._served_devices += 1
-            self._served_points += arr.shape[0]
         if cfg.fold_reports:
             self._fold(batch, rids, centers, cmask, weights)
+        staged.append((batch, labels, version))
 
-    def _admit_and_fold(self, rids, dev_w, centers, cmask,
-                        fold_w) -> int:
+    # -------------------------------------------------------------- fold --
+
+    def _scatter_slots(self, slots: np.ndarray, total: int) -> jax.Array:
+        """Admission decisions -> the plane's fixed-shape fold vector:
+        declined (-1) and padding entries become the out-of-capacity
+        sentinel the scatter drops (negative ids would WRAP per numpy
+        indexing — never pass them to a scatter)."""
+        full = np.full((total,), self.cfg.capacity, np.int64)
+        full[:len(slots)] = np.where(slots < 0, self.cfg.capacity, slots)
+        return jnp.asarray(full, jnp.int32)
+
+    def _admit_and_fold(self, rids, dev_w, centers, cmask, fold_w,
+                        total: Optional[int] = None) -> int:
         """THE admission step shared by round seeding and streaming:
-        each request id goes through the policy, the admitted reports
-        scatter into their granted slots (a later admit within the
-        group may evict an earlier one's slot — last write wins), and
-        ``server.aggregate_incremental`` stays the single fold
-        primitive. Returns the number of admitted reports."""
-        admitted, slot_of = 0, {}
-        for i, rid in enumerate(rids):
-            slot = self.policy.admit(
-                int(rid), 1.0 if dev_w is None else float(dev_w[i]))
-            if slot is not None:
-                admitted += 1
-                slot_of[slot] = i
-        if slot_of:
-            items = sorted(slot_of.items(), key=lambda kv: kv[1])
-            sel = jnp.asarray([i for _, i in items], jnp.int32)
-            slots = jnp.asarray([s for s, _ in items], jnp.int32)
-            self.state = server.aggregate_incremental(
-                self.state, slots, centers[sel], cmask[sel],
-                weights=None if fold_w is None else fold_w[sel])
-        return admitted
+        the batch goes through ``FoldPolicy.admit_batch`` (global
+        request order, within-batch evictions suppressed), and the
+        granted reports scatter into their slots through the serve
+        plane — ``server.aggregate_incremental`` stays the single fold
+        primitive (its collective sibling on the sharded plane).
+        ``total`` pads the slot vector past ``len(rids)`` (the serve
+        batch's repeat-padding rows, which never fold). Returns the
+        number of GRANTED admissions (the refresh-cadence count)."""
+        slots, granted = self.policy.admit_batch(rids, dev_w)
+        if granted:
+            self.state = self.plane.fold(
+                self.state,
+                self._scatter_slots(slots, total or len(rids)),
+                centers, cmask, weights=fold_w)
+        return granted
 
     def _fold(self, batch, rids, centers, cmask, weights):
-        dev_w = (np.asarray(jnp.sum(weights, axis=1))
+        dev_w = (np.asarray(jnp.sum(weights, axis=1))[:len(batch)]
                  if self.policy.needs_weight else None)
         admitted = self._admit_and_fold(
             rids[:len(batch)], dev_w, centers, cmask,
-            weights if self.cfg.weight_by_core_counts else None)
+            weights if self.cfg.weight_by_core_counts else None,
+            total=len(rids))
         if not admitted:
             return
         self._since_refresh += admitted
         if self.cfg.refresh_every and (
                 self._since_refresh >= self.cfg.refresh_every):
-            self.refresh()
+            if self.cfg.refresh == "sync":
+                self.refresh()
+            else:
+                self._stage_refresh()
 
     # ----------------------------------------------------------- refresh --
 
     def refresh(self) -> server.KFedAggregate:
         """Re-finalize Algorithm 2 over every folded report (round
-        devices + streamed attachments) and swap in the new tau centers.
-        tau is a traced argument of the serve step, so no recompile."""
+        devices + streamed attachments) and swap in the new tau centers
+        NOW (one atomic version bump). tau is a traced argument of the
+        serve step, so no recompile."""
         agg = server.finalize(self.state, self.cfg.k,
                               weighted=self.cfg.weight_by_core_counts)
-        self.tau = jnp.asarray(agg.tau_centers, jnp.float32)
+        self._taubuf = self._taubuf.swap_now(agg.tau_centers)
         self._since_refresh = 0
         return agg
+
+    def _stage_refresh(self) -> None:
+        """The async half of the refresh: build the STANDBY tau buffer
+        (jax dispatches the re-finalization asynchronously, so serving
+        against the active buffer continues while it computes) and
+        defer the version-bump swap to the next flush boundary."""
+        agg = server.finalize(self.state, self.cfg.k,
+                              weighted=self.cfg.weight_by_core_counts)
+        self._taubuf = self._taubuf.stage(agg.tau_centers)
+        self._since_refresh = 0
 
     # -------------------------------------------------------- checkpoint --
 
@@ -335,16 +439,18 @@ class AttachService:
                            self._base_seed], np.int64)
 
     def save(self, path: str) -> str:
-        """Checkpoint tau + fold state + counters + admission-policy
-        identity and state (npz via ``checkpoint.store``). Pending
-        requests are not persisted."""
+        """Checkpoint both tau buffers + version, fold state, counters,
+        and admission-policy identity/state (npz via
+        ``checkpoint.store``). Pending requests are not persisted."""
         from repro.fed.policy import POLICY_IDS
-        return save_pytree(path, {"tau": self.tau, "server": self.state,
-                                  "counters": self._counters(),
-                                  "policy_id": np.asarray(
-                                      POLICY_IDS[self.policy.name],
-                                      np.int64),
-                                  "policy": self.policy.state_arrays()})
+        return save_pytree(path, {
+            "tau_bufs": self._taubuf.bufs,
+            "tau_meta": self._taubuf.meta_array(),
+            "server": self.state,
+            "counters": self._counters(),
+            "policy_id": np.asarray(POLICY_IDS[self.policy.name],
+                                    np.int64),
+            "policy": self.policy.state_arrays()})
 
     @classmethod
     def restore(cls, path: str, cfg: StreamConfig) -> "AttachService":
@@ -353,40 +459,57 @@ class AttachService:
         return cls._restore(path, cfg)
 
     @classmethod
-    def _restore(cls, path: str, cfg: StreamConfig) -> "AttachService":
+    def _restore(cls, path: str, cfg: StreamConfig, *, mesh=None,
+                 serve_axes=None) -> "AttachService":
         from repro.fed.policy import POLICY_IDS
         policy = make_policy(cfg.fold_policy, cfg.capacity,
                              seed=cfg.policy_seed)
+        keys = npz_keys(path)
         # Refuse a policy mismatch up front (named error, not a bare
         # KeyError / silent state corruption): the checkpoint's slot
         # bookkeeping is only meaningful under the policy that wrote
         # it. Checkpoints from before the policy layer existed could
         # only have been written under the drop rule.
-        data = np.load(path if path.endswith(".npz") else path + ".npz")
-        saved = (int(data["policy_id"]) if "policy_id" in data
-                 else POLICY_IDS["drop"])
+        if "policy_id" in keys:
+            data = np.load(path if path.endswith(".npz")
+                           else path + ".npz")
+            saved = int(data["policy_id"])
+        else:
+            saved = POLICY_IDS["drop"]
         if saved != POLICY_IDS[cfg.fold_policy]:
             names = {v: n for n, v in POLICY_IDS.items()}
             raise StreamConfigError(
                 f"StreamConfig.fold_policy={cfg.fold_policy!r} does not "
                 f"match the checkpoint at {path!r}, which was saved "
                 f"under fold_policy={names.get(saved, saved)!r}")
+        # Schema v2 carries the double-buffered tau; v1 (pre-plane)
+        # checkpoints hold one tau — restored as version 0 with both
+        # buffers equal, so old checkpoints keep replaying bitwise.
+        v2 = "tau_bufs" in keys
         like = {
-            "tau": jnp.zeros((cfg.k, cfg.d), jnp.float32),
             "server": server.init_state(cfg.capacity, cfg.k_prime, cfg.d),
             "counters": np.zeros((5,), np.int64),
             "policy": policy.state_like(),
         }
-        if "policy_id" in data:
+        if v2:
+            like["tau_bufs"] = jnp.zeros((2, cfg.k, cfg.d), jnp.float32)
+            like["tau_meta"] = np.zeros((3,), np.int64)
+        else:
+            like["tau"] = jnp.zeros((cfg.k, cfg.d), jnp.float32)
+        if "policy_id" in keys:
             like["policy_id"] = np.zeros((), np.int64)
         tree = load_pytree(path, like)
         if tree["policy"]:
             policy.load_state(tree["policy"])
+        taubuf = (TauBuffer.from_arrays(tree["tau_bufs"], tree["tau_meta"])
+                  if v2 else TauBuffer.fresh(tree["tau"]))
         cnt = np.asarray(tree["counters"])
-        return cls(cfg, tree["tau"], state=tree["server"], policy=policy,
+        return cls(cfg, taubuf.tau, tau_buffer=taubuf,
+                   state=tree["server"], policy=policy,
                    seed=int(cnt[4]), next_id=int(cnt[0]),
                    since_refresh=int(cnt[1]), served_devices=int(cnt[2]),
-                   served_points=int(cnt[3]))
+                   served_points=int(cnt[3]), mesh=mesh,
+                   serve_axes=serve_axes)
 
     # ------------------------------------------------------------- stats --
 
@@ -400,4 +523,7 @@ class AttachService:
             "pending": len(self._pending),
             "undelivered": len(self._done),
             "since_refresh": self._since_refresh,
+            "tau_version": self._taubuf.version,
+            "refresh_pending": self._taubuf.pending,
+            **self.plane.describe(),
         }

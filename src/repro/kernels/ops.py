@@ -115,6 +115,23 @@ def assign_argmin(x: jax.Array, c: jax.Array,
     return _assign_argmin_one(x, c, c_mask)
 
 
+# Floor of the per-shard chunk budget: below this the per-launch
+# overhead of lax.map tiles dominates any footprint saving.
+_MIN_CHUNK_ROWS = 4096
+
+
+def plan_chunk_rows(n_shards: int = 1) -> int:
+    """Row-chunk budget for shard-parallel callers (the serve plane,
+    DESIGN.md §11): ``n_shards`` concurrent shards each streaming
+    assignment chunks should divide the global ``chunk_rows`` threshold
+    between them, so the AGGREGATE in-flight footprint stays bounded by
+    one single-host chunk no matter how wide the mesh. Floored at
+    ``_MIN_CHUNK_ROWS`` so tiny per-shard batches never degenerate into
+    per-row kernel launches."""
+    base = _STATE["chunk_rows"] or (1 << 18)
+    return max(_MIN_CHUNK_ROWS, base // max(1, int(n_shards)))
+
+
 def kmeans_update(x: jax.Array, assign: jax.Array, k: int,
                   weights: Optional[jax.Array] = None):
     if _STATE["impl"] == "pallas":

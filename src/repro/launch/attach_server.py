@@ -1,29 +1,28 @@
 """Attachment-server entry point: run one k-FED round, then serve a
 stream of late-joining devices — all through one declarative
-``FederationPlan`` + ``Session`` (DESIGN.md §10).
+``FederationPlan`` + ``Session`` (DESIGN.md §10–§11).
 
 Demonstrates the full post-round serving vertical — batched/bucketed
 Theorem 3.2 attachment, incremental folding with an online refresh
-cadence and a pluggable fold-slot admission policy, and checkpointed
-crash recovery (the restored session replays the remaining stream
-bitwise-identically).
+cadence and a pluggable fold-slot admission policy, checkpointed crash
+recovery (the restored session replays the remaining stream
+bitwise-identically), and the sharded serve plane: ``--serve-axes``
+shard_maps the request batch over a mesh while ``--refresh async``
+double-buffers the tau swap so re-finalization overlaps serving.
 
   PYTHONPATH=src python -m repro.launch.attach_server \
       --requests 48 --batch-size 8 --refresh-every 16 \
       --fold-policy lru --checkpoint /tmp/attach.npz
+
+  # sharded plane over 8 forced host devices, async tau refresh
+  PYTHONPATH=src python -m repro.launch.attach_server \
+      --force-host-devices 8 --serve-axes data --refresh async
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
-
-import jax
-import numpy as np
-
-from repro.data.gaussian import late_device_stream, structured_devices
-from repro.fed.api import FederationPlan, Session
-from repro.fed.policy import POLICIES
-from repro.utils.metrics import clustering_accuracy
 
 
 def main() -> None:
@@ -35,9 +34,25 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=48)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--refresh-every", type=int, default=16)
+    ap.add_argument("--refresh", default="sync",
+                    choices=("sync", "async"),
+                    help="tau swap mode: sync swaps between batches; "
+                         "async double-buffers and commits the "
+                         "versioned swap at the next flush boundary")
+    ap.add_argument("--serve-axes", default=None, metavar="AXES",
+                    help="comma-separated mesh axes to shard the serve "
+                         "plane's request batch over (e.g. 'data'); "
+                         "default: single-host serving")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    metavar="N",
+                    help="force N XLA host-platform devices (must be "
+                         "set before the first jax computation; use "
+                         "with --serve-axes to shard on CPU)")
     ap.add_argument("--capacity", type=int, default=4096)
+    # literal choices (not imported from fed.policy) so argparse rejects
+    # typos BEFORE jax loads; fed/policy.py POLICIES is the source.
     ap.add_argument("--fold-policy", default="drop",
-                    choices=sorted(POLICIES),
+                    choices=("drop", "lru", "weighted_reservoir"),
                     help="fold-slot admission: drop (served-not-folded "
                          "past capacity), lru, or weighted_reservoir")
     ap.add_argument("--checkpoint", default=None, metavar="PATH",
@@ -46,16 +61,37 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.force_host_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count="
+            f"{args.force_host_devices}")
+
+    # jax is imported (and its backend initialized) only AFTER the
+    # forced-device flag is in the environment.
+    import jax
+    import numpy as np
+
+    from repro.data.gaussian import late_device_stream, structured_devices
+    from repro.fed.api import FederationPlan, Session
+    from repro.utils.compat import make_mesh
+    from repro.utils.metrics import clustering_accuracy
+
     k, kp, d = args.k, args.k_prime, args.d
     fm = structured_devices(jax.random.PRNGKey(args.seed), k=k, d=d,
                             k_prime=kp, m0=args.devices_per_group,
                             n_per_comp_dev=25, sep=60.0)
+    serve_axes = (tuple(args.serve_axes.split(","))
+                  if args.serve_axes else None)
+    mesh = (make_mesh((jax.device_count(),), ("data",))
+            if serve_axes else None)
     plan = FederationPlan(k=k, k_prime=kp, d=d, capacity=args.capacity,
                           batch_size=args.batch_size,
                           refresh_every=args.refresh_every,
+                          refresh=args.refresh, serve_axes=serve_axes,
                           fold_policy=args.fold_policy,
                           checkpoint=args.checkpoint)
-    sess = Session(plan)
+    sess = Session(plan, mesh=mesh)
     rr = sess.run(jax.random.PRNGKey(args.seed + 1), fm.data)
     Z = fm.data.shape[0]
     acc0 = clustering_accuracy(np.asarray(rr.labels),
@@ -67,27 +103,31 @@ def main() -> None:
 
     half = len(stream) // 2
     t0 = time.perf_counter()
-    out = sess.serve([r[0] for r in stream[:half]],
-                     [r[2] for r in stream[:half]])
+    out = sess.serve_versioned([r[0] for r in stream[:half]],
+                               [r[2] for r in stream[:half]])
     dt = time.perf_counter() - t0
     pts = sum(r[0].shape[0] for r in stream[:half])
     accs = [clustering_accuracy(lbl, r[1], k)
-            for lbl, r in zip(out, stream[:half])]
+            for (lbl, _), r in zip(out, stream[:half])]
+    st = sess.stats()
+    versions = sorted({v for _, v in out})
     print(f"served {half} devices / {pts} points in {dt:.2f}s "
-          f"({half / dt:.1f} dev/s, {pts / dt:.0f} pts/s), "
+          f"({half / dt:.1f} dev/s, {pts / dt:.0f} pts/s) on "
+          f"{st['serve_shards']} serve shard(s), "
+          f"tau versions {versions}, "
           f"mean accuracy {100 * float(np.mean(accs)):.2f}%")
 
     if args.checkpoint:
         sess.save()
-        restored = Session.restore(args.checkpoint, plan)
-        rest_live = sess.serve([r[0] for r in stream[half:]],
-                               [r[2] for r in stream[half:]])
-        rest_ck = restored.serve([r[0] for r in stream[half:]],
-                                 [r[2] for r in stream[half:]])
-        same = all(np.array_equal(a, b)
-                   for a, b in zip(rest_live, rest_ck))
-        print(f"checkpoint -> restore -> serve: bitwise identical to "
-              f"uninterrupted session: {same}")
+        restored = Session.restore(args.checkpoint, plan, mesh=mesh)
+        rest_live = sess.serve_versioned([r[0] for r in stream[half:]],
+                                         [r[2] for r in stream[half:]])
+        rest_ck = restored.serve_versioned([r[0] for r in stream[half:]],
+                                           [r[2] for r in stream[half:]])
+        same = all(np.array_equal(a, b) and va == vb
+                   for (a, va), (b, vb) in zip(rest_live, rest_ck))
+        print(f"checkpoint -> restore -> serve: bitwise identical "
+              f"labels AND tau versions vs uninterrupted session: {same}")
         assert same
     else:
         sess.serve([r[0] for r in stream[half:]],
@@ -96,7 +136,8 @@ def main() -> None:
     st = sess.stats()
     print(f"stats: {st['served_devices']} served, {st['folded']} folded "
           f"(capacity {st['capacity']}, policy {st['fold_policy']}), "
-          f"refresh cadence {args.refresh_every}")
+          f"refresh cadence {args.refresh_every} ({args.refresh}), "
+          f"final tau version {st['tau_version']}")
 
 
 if __name__ == "__main__":
