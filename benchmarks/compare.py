@@ -1,0 +1,141 @@
+"""Perf-regression comparison over BENCH_*.json records — the CI
+perf-gate's comparator (``.github/workflows/ci.yml``), kept as plain
+unit-testable functions (tests/test_compare.py).
+
+  python -m benchmarks.compare CURRENT.json BASELINE.json \
+      --metric pts_per_s --tolerance 0.40 --require attach_bs,autoscale_
+
+Rows are matched by name; the metric is parsed out of each row's
+``derived`` string (the ``k=v;k=v`` contract of benchmarks/common.py).
+The gate fails (exit 1) when the current value falls more than
+``tolerance`` below the baseline, when a baseline row with the metric
+disappeared from the current record (a silent rename must force a
+baseline refresh, not a vacuous pass), or when a ``--require`` prefix
+matches no compared row (a bench that errored into zero rows must not
+pass the gate). The tolerance is deliberately wide: CI runners are
+2-core machines with real run-to-run drift — the gate exists to catch
+structural regressions (a dead fast path, an accidental recompile per
+flush), not 10% noise.
+
+To refresh the committed baseline after an intentional perf change:
+  python -m benchmarks.run --only attach --json \
+      benchmarks/baselines/BENCH_quick_ci.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, NamedTuple, Tuple
+
+__all__ = ["Comparison", "compare_records", "main", "metric_rows",
+           "parse_derived"]
+
+
+def parse_derived(derived: str) -> Dict[str, float]:
+    """``"a=1.5;b=2;note=text"`` -> ``{"a": 1.5, "b": 2.0}`` (entries
+    that don't parse as floats are simply not metrics)."""
+    out: Dict[str, float] = {}
+    for part in str(derived).split(";"):
+        key, sep, val = part.partition("=")
+        if not sep:
+            continue
+        try:
+            out[key.strip()] = float(val)
+        except ValueError:
+            pass
+    return out
+
+
+def metric_rows(record: dict, metric: str) -> Dict[str, float]:
+    """name -> metric value for every row of a BENCH json record that
+    carries the metric in its derived string."""
+    rows: Dict[str, float] = {}
+    for r in record.get("rows", []):
+        vals = parse_derived(r.get("derived", ""))
+        if metric in vals:
+            rows[str(r.get("name"))] = vals[metric]
+    return rows
+
+
+class Comparison(NamedTuple):
+    name: str
+    baseline: float
+    current: float
+    ratio: float          # current / baseline (higher metric = better)
+    regressed: bool       # current < baseline * (1 - tolerance)
+
+
+def compare_records(current: dict, baseline: dict, *,
+                    metric: str = "pts_per_s",
+                    tolerance: float = 0.40
+                    ) -> Tuple[List[Comparison], List[str]]:
+    """Compare two BENCH records on one higher-is-better metric.
+    Returns ``(comparisons, missing)``: one :class:`Comparison` per row
+    present in BOTH records (sorted by name), and the baseline row
+    names that vanished from the current record."""
+    base = metric_rows(baseline, metric)
+    cur = metric_rows(current, metric)
+    comps = [Comparison(name, base[name], cur[name],
+                        (cur[name] / base[name]) if base[name]
+                        else float("inf"),
+                        cur[name] < base[name] * (1.0 - tolerance))
+             for name in sorted(set(base) & set(cur))]
+    return comps, sorted(set(base) - set(cur))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail if a bench metric regressed vs a baseline")
+    ap.add_argument("current", help="BENCH json of this run")
+    ap.add_argument("baseline", help="committed baseline BENCH json")
+    ap.add_argument("--metric", default="pts_per_s",
+                    help="higher-is-better derived key (default "
+                         "pts_per_s)")
+    ap.add_argument("--tolerance", type=float, default=0.40,
+                    help="allowed fractional drop below baseline "
+                         "(default 0.40)")
+    ap.add_argument("--require", default="",
+                    help="comma-separated row-name prefixes that must "
+                         "each match at least one compared row")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    comps, missing = compare_records(current, baseline,
+                                     metric=args.metric,
+                                     tolerance=args.tolerance)
+    width = max([len(c.name) for c in comps] + [4])
+    print(f"{'row'.ljust(width)}  {'baseline':>12}  {'current':>12}  "
+          f"ratio")
+    for c in comps:
+        flag = "  << REGRESSED" if c.regressed else ""
+        print(f"{c.name.ljust(width)}  {c.baseline:>12.1f}  "
+              f"{c.current:>12.1f}  {c.ratio:5.2f}x{flag}")
+
+    failures = [f"{c.name}: {args.metric} {c.current:.1f} vs baseline "
+                f"{c.baseline:.1f} ({c.ratio:.2f}x < "
+                f"{1 - args.tolerance:.2f}x floor)"
+                for c in comps if c.regressed]
+    failures += [f"{name}: baseline row missing from the current "
+                 f"record (renamed/removed? refresh the baseline)"
+                 for name in missing]
+    for prefix in filter(None, args.require.split(",")):
+        if not any(c.name.startswith(prefix) for c in comps):
+            failures.append(
+                f"--require {prefix!r}: no compared row matches (did "
+                f"the bench error out into zero rows?)")
+    if failures:
+        print(f"\nperf gate FAILED ({args.metric}, tolerance "
+              f"{args.tolerance:.0%}):", file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        return 1
+    print(f"\nperf gate OK: {len(comps)} row(s) within "
+          f"{args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -55,23 +55,25 @@ def load_pytree(path: str, like, shardings=None):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs). ``shardings``: optional matching pytree of
     jax.sharding.Sharding for placement."""
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
-    for path_keys, leaf in paths:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path_keys)
-        arr = data[key]
-        if key + "__dtype__" in data:  # stored as a uint8 byte view
-            import ml_dtypes  # noqa: F401  (registers extended dtypes)
-            arr = arr.view(np.dtype(str(data[key + "__dtype__"])))
-        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
-        target = np.dtype(leaf.dtype)
-        if arr.dtype != target and not (_is_native(arr.dtype)
-                                        and _is_native(target)):
-            # cross-family cast (e.g. bf16 -> f32) goes via float32
-            arr = arr.astype(np.float32)
-        leaves.append(arr.astype(target))
+    with np.load(path if path.endswith(".npz")
+                 else path + ".npz") as data:
+        for path_keys, leaf in paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path_keys)
+            arr = data[key]
+            if key + "__dtype__" in data:  # stored as a uint8 byte view
+                import ml_dtypes  # noqa: F401 (registers ext. dtypes)
+                arr = arr.view(np.dtype(str(data[key + "__dtype__"])))
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape,
+                                                    leaf.shape)
+            target = np.dtype(leaf.dtype)
+            if arr.dtype != target and not (_is_native(arr.dtype)
+                                            and _is_native(target)):
+                # cross-family cast (e.g. bf16 -> f32) goes via float32
+                arr = arr.astype(np.float32)
+            leaves.append(arr.astype(target))
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     if shardings is not None:
         tree = jax.tree.map(jax.device_put, tree, shardings)
@@ -81,13 +83,31 @@ def load_pytree(path: str, like, shardings=None):
 def npz_keys(path: str) -> set:
     """The flattened key paths present in a checkpoint — how restore
     paths branch between schema generations (e.g. the streaming
-    service's single-tau v1 npz vs the double-buffered ``tau_bufs`` /
-    ``tau_meta`` v2 schema, DESIGN.md §11) without loading any array
-    data."""
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
-    return set(data.files)
+    service's single-tau v1 npz, the double-buffered ``tau_bufs`` /
+    ``tau_meta`` v2 schema of DESIGN.md §11, and the v3 schema that
+    adds the ``autoscale_*`` decision arrays of §12) without loading
+    any array data."""
+    with np.load(path if path.endswith(".npz")
+                 else path + ".npz") as data:
+        return set(data.files)
+
+
+def load_extras(path: str, keys) -> dict:
+    """Fetch schema-dependent metadata arrays by flattened key in ONE
+    file open, without a structural template (missing keys are simply
+    omitted — presence doubles as the schema-generation probe). This
+    is how restore paths read generation-specific extras whose shape
+    is not known until the file is opened — the streaming service's
+    ``policy_id`` and the v3 ``autoscale_state`` / ``autoscale_ladder``
+    arrays (the active bucket ladder's length is itself part of the
+    recorded decision) — while ``load_pytree`` keeps its exact-shape
+    contract for the structural state."""
+    with np.load(path if path.endswith(".npz")
+                 else path + ".npz") as data:
+        return {k: data[k] for k in keys if k in data.files}
 
 
 def checkpoint_step(path: str) -> Optional[int]:
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
-    return int(data["__step__"]) if "__step__" in data else None
+    with np.load(path if path.endswith(".npz")
+                 else path + ".npz") as data:
+        return int(data["__step__"]) if "__step__" in data else None

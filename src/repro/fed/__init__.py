@@ -11,6 +11,12 @@ from repro.fed.api import (  # noqa: F401
     Session,
     SessionError,
 )
+from repro.fed.autoscale import (  # noqa: F401
+    AUTOSCALE_POLICIES,
+    AutoscaleController,
+    AutoscaleDecision,
+    QueueSnapshot,
+)
 from repro.fed.plane import ServePlane, TauBuffer  # noqa: F401
 from repro.fed.policy import (  # noqa: F401
     FoldPolicy,

@@ -89,7 +89,13 @@ class FederationPlan:
                mesh axes the serve plane shards the request batch over
                (None = single host; dispatched by ``Session.attach`` /
                ``serve``/``flush`` exactly like ``topology`` dispatches
-               ``run``), ``checkpoint`` the default save/restore path.
+               ``run``), ``autoscale`` the load-adaptive serve-plane
+               controller (``off`` keeps the static configuration;
+               ``latency`` tracks queue depth both ways;
+               ``throughput`` holds full batches across single-flush
+               dips — ``batch_size`` becomes the ceiling and
+               ``serve_axes`` the shard grant, DESIGN.md §12),
+               ``checkpoint`` the default save/restore path.
     """
     k: int
     k_prime: int
@@ -104,6 +110,7 @@ class FederationPlan:
     bucket_sizes: Tuple[int, ...] = (64, 256, 1024)
     refresh_every: int = 0
     refresh: str = "sync"
+    autoscale: str = "off"
     serve_axes: Optional[Tuple[str, ...]] = None
     fold_reports: bool = True
     fold_policy: str = "drop"
@@ -157,7 +164,7 @@ class FederationPlan:
             capacity=self.capacity, batch_size=self.batch_size,
             bucket_sizes=tuple(self.bucket_sizes),
             refresh_every=self.refresh_every, refresh=self.refresh,
-            fold_reports=self.fold_reports,
+            autoscale=self.autoscale, fold_reports=self.fold_reports,
             weight_by_core_counts=self.weight_by_core_counts,
             fold_policy=self.fold_policy, policy_seed=self.policy_seed,
             local_kw=dict(self.local_kw))
@@ -443,6 +450,12 @@ class Session:
         return self.service.tau_version
 
     def stats(self) -> dict:
+        """Live serving counters plus the §12 load telemetry: the
+        ``"autoscale"`` sub-dict carries the controller's current
+        decision (policy, active shards/batch/ladder, decision count)
+        and the last flush's two-phase dispatch/materialize latency,
+        and ``"plane_compiles"`` the serve plane's compiled-signature
+        count (flat in steady state)."""
         return self.service.stats()
 
     def attach_fn(self):

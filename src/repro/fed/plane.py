@@ -26,6 +26,15 @@ single host or shard_mapped over a mesh:
     label maps to exactly one tau version; both buffers + the version
     counter ride the §9 checkpoint so a restore mid-window replays the
     same version assignments bitwise.
+  * **shard-count switching** (§12) — ``serve_axes`` GRANTS up to
+    ``n_shards`` devices; the load-adaptive controller
+    (``fed/autoscale.py``) may execute any flush on fewer
+    (``shards=`` on :meth:`step`/:meth:`fold`), down to the single-host
+    plane at 1. Each active shard count gets its own compiled
+    step/fold (a sub-mesh over the first ``s`` granted devices), cached
+    forever alongside every (batch, bucket) shape it serves —
+    ``compile_count`` tracks first-seen (kind, shards, shape)
+    signatures, so steady-state scaling provably never recompiles.
 
 The plane is deliberately free of service bookkeeping (queues, buckets,
 policies, checkpoints live in ``fed/stream.py``): it owns exactly the
@@ -37,6 +46,7 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.core import server
@@ -204,66 +214,147 @@ class ServePlane:
         # should chunk at this, not the global threshold, so the
         # aggregate footprint across concurrent shards stays bounded.
         self.chunk_rows = ops.plan_chunk_rows(self.n_shards)
+        # Per-active-shard-count compiled entries (the §12 multi-spec
+        # cache): s -> (step_jit, fold_jit | None, sharding | None).
+        # Entries are built once and kept forever; together with jax's
+        # shape-keyed jit cache, every (shards, batch, bucket) triple
+        # compiles exactly once. ``compile_count`` counts first-seen
+        # (kind, shards, shape) signatures — what the autoscale tests
+        # and the benchmark assert stays flat in steady state.
+        self._planes = {}
+        self._signatures = set()
+        self.compile_count = 0
+        self._plane_for(n)
 
-        step = _make_step(cfg)
-        if axes:
+    # ------------------------------------------------------------------
+    def _submesh(self, s: int):
+        """A mesh over the first ``s`` granted devices (single serve
+        axis only — a multi-axis grant has no canonical sub-grant and
+        the controller never asks for one)."""
+        return Mesh(self.mesh.devices.flatten()[:s], self.axes)
+
+    def _plane_for(self, s: int):
+        """The compiled (step, fold, sharding) entry for an active
+        shard count ``s`` — built on first use, cached forever."""
+        entry = self._planes.get(s)
+        if entry is not None:
+            return entry
+        if not (1 <= s <= self.n_shards):
+            raise ServePlaneError(
+                f"shards={s} is invalid: the plan's serve_axes grant "
+                f"1..{self.n_shards} active shards")
+        if s > 1 and s != self.n_shards and len(self.axes) > 1:
+            raise ServePlaneError(
+                f"shards={s} is invalid: multi-axis serve_axes "
+                f"{self.axes!r} only switch between 1 and the full "
+                f"grant ({self.n_shards})")
+        step = _make_step(self.cfg)
+        if s == 1:
+            entry = (jax.jit(step), None, None, None)
+        else:
             from jax.sharding import NamedSharding
+            mesh = self.mesh if s == self.n_shards else self._submesh(s)
+            axes = self.axes
             spec = P(axes)
-            self._batch_sharding = NamedSharding(mesh, spec)
             step_sharded = _shard_map(
                 step, mesh=mesh,
                 in_specs=(P(), spec, spec, spec, spec),
                 out_specs=(spec, spec, spec, spec))
-            self._step = jax.jit(step_sharded)
 
             def fold_sharded(state, slots, centers, cmask, weights):
                 return server.aggregate_incremental_sharded(
                     state, slots, centers, cmask, axes, weights=weights)
 
-            self._fold_mesh = jax.jit(_shard_map(
+            fold_mesh = jax.jit(_shard_map(
                 fold_sharded, mesh=mesh,
                 in_specs=(P(), spec, spec, spec, spec),
                 out_specs=P()))
-        else:
-            self._step = jax.jit(step)
-            self._fold_mesh = None
-            self._batch_sharding = None
+            entry = (jax.jit(step_sharded), fold_mesh,
+                     NamedSharding(mesh, spec),
+                     NamedSharding(mesh, P()))
+        self._planes[s] = entry
+        return entry
 
-    # ------------------------------------------------------------------
-    def step(self, tau, keys, data, point_mask, k_valid):
+    def _count(self, kind: str, s: int, shape) -> None:
+        sig = (kind, s, tuple(shape))
+        if sig not in self._signatures:
+            self._signatures.add(sig)
+            self.compile_count += 1
+
+    def step(self, tau, keys, data, point_mask, k_valid, shards=None):
         """Serve one fixed-shape (B, n_pad, d) batch. Returns
         (labels (B, n_pad), centers (B, k', d), center_mask (B, k'),
         core weights (B, k')) — sharded over the batch axis on the
-        sharded plane, bitwise identical per request either way."""
-        if self._batch_sharding is not None:
+        sharded plane, bitwise identical per request at ANY active
+        shard count (``shards``, default: the full grant)."""
+        s = self.n_shards if shards is None else int(shards)
+        step_fn, _, sharding, state_sh = self._plane_for(s)
+        self._count("step", s, data.shape)
+        if sharding is not None:
             # Host batches land directly in their sharded placement —
             # one host->shard copy each, not a device-0 bounce plus an
-            # all-to-all reshard inside the jitted step.
-            sh = self._batch_sharding
-            keys, data, point_mask, k_valid = (
-                jax.device_put(keys, sh), jax.device_put(data, sh),
-                jax.device_put(point_mask, sh),
-                jax.device_put(k_valid, sh))
-        return self._step(tau, keys, data, point_mask, k_valid)
+            # all-to-all reshard inside the jitted step. tau rides
+            # along replicated (k x d — bytes) so a buffer committed
+            # elsewhere by a refresh can never clash with the batch's
+            # device set when the active shard count switches.
+            tau, keys, data, point_mask, k_valid = (
+                jax.device_put(tau, state_sh),
+                jax.device_put(keys, sharding),
+                jax.device_put(data, sharding),
+                jax.device_put(point_mask, sharding),
+                jax.device_put(k_valid, sharding))
+        elif self.axes:
+            tau = jax.device_put(tau, self.mesh.devices.flatten()[0])
+        return step_fn(tau, keys, data, point_mask, k_valid)
 
-    def fold(self, state, slots, centers, cmask, weights=None):
+    def localize(self, x):
+        """Pull a (small) array stranded on an active sub-mesh — e.g. a
+        tau re-finalized from a sharded fold state — back to one
+        canonical device, so the double-buffer stack and later steps at
+        OTHER shard counts never mix incompatible device sets."""
+        if self.axes:
+            return jax.device_put(jnp.asarray(x),
+                                  self.mesh.devices.flatten()[0])
+        return jnp.asarray(x)
+
+    def fold(self, state, slots, centers, cmask, weights=None,
+             shards=None):
         """Scatter one batch of already-admitted reports into the
         replicated fold state. ``slots``: (B,) int32, entries >= the
         state capacity are dropped (declined / padding / within-batch
-        evictions). Lengths other than ``batch_size`` (e.g. round
-        seeding) always take the single-host scatter — only the steady
-        fixed-shape batch rides the mesh."""
+        evictions). ``shards`` is the flush decision's active count;
+        with the default (None), only the steady plan-shaped batch
+        rides the mesh — other lengths (e.g. round seeding) take the
+        single-host scatter, as before the controller existed."""
         if weights is None:
             # The explicit form of aggregate_incremental's default —
             # same scattered values, one jit signature for both cases.
             weights = jnp.ones(jnp.shape(cmask), jnp.float32)
-        if (self._fold_mesh is not None
-                and int(slots.shape[0]) == self.cfg.batch_size):
-            return self._fold_mesh(state, slots, centers, cmask, weights)
+        B = int(slots.shape[0])
+        if shards is None:
+            s = self.n_shards if B == self.cfg.batch_size else 1
+        else:
+            s = int(shards) if B % max(int(shards), 1) == 0 else 1
+        if s > 1:
+            _, fold_mesh, _, state_sh = self._plane_for(s)
+            self._count("fold", s, (B,) + tuple(centers.shape[1:]))
+            # A shard-count switch strands the state on the PREVIOUS
+            # active sub-mesh; re-place it (replicated) on the target —
+            # a no-op whenever the count is unchanged, one transfer per
+            # switch otherwise.
+            state = jax.device_put(state, state_sh)
+            return fold_mesh(state, slots, centers, cmask, weights)
+        self._count("fold", 1, (B,) + tuple(centers.shape[1:]))
+        if self.axes:
+            # Same stranding in the other direction: a sharded-plane
+            # state dropping to the single-host scatter.
+            state = jax.device_put(state,
+                                   self.mesh.devices.flatten()[0])
         return server.aggregate_incremental(state, slots, centers, cmask,
                                             weights=weights)
 
     def describe(self) -> dict:
         return {"serve_axes": list(self.axes) if self.axes else None,
                 "serve_shards": self.n_shards,
-                "chunk_rows": self.chunk_rows}
+                "chunk_rows": self.chunk_rows,
+                "plane_compiles": self.compile_count}

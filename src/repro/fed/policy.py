@@ -93,6 +93,28 @@ class FoldPolicy:
             slots[i] = slot
         return slots, granted
 
+    def admit_padded(self, rids, weights=None, *, total=None):
+        """:meth:`admit_batch` plus the planes' fixed-shape scatter
+        contract: returns ``((total,) int64 slot vector, granted)``
+        where declined decisions AND the batch's repeat-padding rows
+        (indices past ``len(rids)``) become the out-of-capacity
+        sentinel the ``mode="drop"`` scatter ignores — negative ids
+        would WRAP under numpy indexing, so they never leave the
+        policy layer.
+
+        ``total`` is the serve batch size of the flush that admits
+        these reports. Under load-adaptive batching
+        (``fed/autoscale.py``) it varies per flush decision: the
+        sentinel padding, not a ladder of jit shapes, absorbs whatever
+        partial batch the re-bucketed queue produced, so admission is
+        one fixed-shape vector per batch no matter how the controller
+        re-sized it.
+        """
+        slots, granted = self.admit_batch(rids, weights)
+        full = np.full((total or len(rids),), self.capacity, np.int64)
+        full[:len(slots)] = np.where(slots < 0, self.capacity, slots)
+        return full, granted
+
     # -- checkpoint plumbing (npz-able arrays; {} for stateless) --------
     def state_like(self) -> Dict[str, np.ndarray]:
         """Zero-filled arrays matching :meth:`state_arrays` (restore

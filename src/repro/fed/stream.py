@@ -26,12 +26,22 @@ This module turns that promise into a serving layer:
     serving and commits the swap — one atomic version bump — at the
     next flush boundary. Every served label records the tau version
     that produced it;
+  * **load-adaptive scaling** — at flush boundaries a deterministic
+    controller (``fed/autoscale.py``, DESIGN.md §12) may re-select the
+    active shard count (within the ``serve_axes`` grant), the serve
+    batch size, and the active bucket ladder (re-bucketing queued
+    oversized requests into one coalesced rung under load) from a
+    queue-depth snapshot; every (shards, batch, bucket) triple's step
+    compiles once and is cached, so scaling never recompiles in steady
+    state;
   * **crash recovery** — the full service state (both tau buffers +
-    version, fold state, counters, key seed) checkpoints through
-    ``checkpoint/store.py``; restore + serve is bitwise identical to
-    the uninterrupted service — including mid-refresh-window version
-    assignments — because request keys are derived from the persisted
-    request-id counter, never from wall clock.
+    version, fold state, counters, key seed, autoscale decision state)
+    checkpoints through ``checkpoint/store.py``; restore + serve is
+    bitwise identical to the uninterrupted service — including
+    mid-refresh-window version assignments and the scaling-decision
+    sequence — because request keys are derived from the persisted
+    request-id counter and decisions from deterministic queue
+    snapshots, never from wall clock.
 
 Fold-slot admission is a pluggable ``FoldPolicy`` (``fed/policy.py``):
 ``drop`` (slot == request id, over-capacity ids served-not-folded — the
@@ -46,6 +56,7 @@ In-flight (submitted, unflushed) requests are NOT part of a checkpoint
 """
 from __future__ import annotations
 
+import time
 import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -54,13 +65,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.store import load_pytree, npz_keys, save_pytree
+from repro.checkpoint.store import load_extras, load_pytree, save_pytree
 from repro.core import server
+from repro.fed.autoscale import (AUTOSCALE_IDS, AutoscaleController,
+                                 AutoscaleDecision, FlushTelemetry,
+                                 bucket_of, pow2_ceil, shards_for,
+                                 snapshot_queue)
 from repro.fed.plane import ServePlane, ServePlaneError, TauBuffer
 from repro.fed.policy import FoldPolicy, make_policy
 from repro.utils.deprecation import warn_legacy
 
 REFRESH_MODES = ("sync", "async")
+
+
+class ReproPerfWarning(UserWarning):
+    """A configuration is costing performance without affecting results
+    (e.g. attach requests padding above the configured bucket ladder).
+    Named so ``filterwarnings`` can target exactly this class — silence
+    it deliberately with ``ignore::repro.fed.stream.ReproPerfWarning``
+    (pytest.ini escalates it to an error in the tier-1 suites)."""
 
 
 class StreamConfigError(ValueError):
@@ -84,6 +107,7 @@ class StreamConfig:
     bucket_sizes: Tuple[int, ...] = (64, 256, 1024)  # n^(z) pad buckets
     refresh_every: int = 0      # re-finalize after this many folds; 0 = never
     refresh: str = "sync"       # tau swap: sync (immediate) | async
+    autoscale: str = "off"      # serve-plane scaling: off|latency|throughput
     fold_reports: bool = True   # fold served reports into the server state
     weight_by_core_counts: bool = False
     fold_policy: str = "drop"   # admission: drop | lru | weighted_reservoir
@@ -110,6 +134,16 @@ class StreamConfig:
         if self.refresh not in REFRESH_MODES:
             _bad("refresh", self.refresh,
                  f"accepted values are {list(REFRESH_MODES)}")
+        from repro.fed.autoscale import AUTOSCALE_POLICIES
+        if self.autoscale not in AUTOSCALE_POLICIES:
+            _bad("autoscale", self.autoscale,
+                 f"accepted values are {list(AUTOSCALE_POLICIES)}")
+        if (self.autoscale != "off"
+                and self.batch_size & (self.batch_size - 1)):
+            _bad("batch_size", self.batch_size,
+                 "must be a power of two when autoscale is enabled "
+                 "(the controller re-selects power-of-two batch rungs "
+                 "within it)")
         if (not self.bucket_sizes
                 or any(int(b) < 1 for b in self.bucket_sizes)
                 or list(self.bucket_sizes)
@@ -157,6 +191,15 @@ class AttachService:
                       else jax.tree.map(jnp.asarray, state))
         self.policy = policy or make_policy(cfg.fold_policy, cfg.capacity,
                                             seed=cfg.policy_seed)
+        # The §12 load-adaptive controller: one decision per non-empty
+        # flush, against the devices serve_axes granted. With
+        # autoscale="off" its (static) decision reproduces the
+        # pre-controller behavior bitwise.
+        self.autoscaler = AutoscaleController(
+            cfg.autoscale, max_batch=cfg.batch_size,
+            granted=self.plane.n_shards,
+            n_axes=len(self.plane.axes) if self.plane.axes else 1,
+            base_ladder=tuple(cfg.bucket_sizes))
         self._base_seed = int(seed)
         self._base_key = jax.random.PRNGKey(self._base_seed)
         self._next_id = int(next_id)
@@ -225,24 +268,23 @@ class AttachService:
         self._pending.append((rid, arr, kv))
         return rid
 
-    def _bucket(self, n: int) -> int:
-        for b in self.cfg.bucket_sizes:
-            if n <= b:
-                return b
-        # Above the ladder: geometric (doubling) buckets bound the
-        # number of distinct jitted pad shapes to O(log n_max / top)
-        # instead of one recompile per distinct rounded-up n.
-        b = self.cfg.bucket_sizes[-1]
-        while b < n:
-            b *= 2
-        if not self._oversized_warned:
+    def _bucket(self, n: int, ladder: Optional[Tuple[int, ...]] = None
+                ) -> int:
+        """The pad rung for an n-point request: the flush decision's
+        ACTIVE ladder when given (autoscale may have coalesced the
+        oversized rungs), else the configured base ladder; geometric
+        (doubling) buckets above the top rung bound the distinct jitted
+        pad shapes to O(log n_max / top) instead of one recompile per
+        distinct rounded-up n."""
+        b = bucket_of(n, ladder or self.cfg.bucket_sizes)
+        if n > self.cfg.bucket_sizes[-1] and not self._oversized_warned:
             self._oversized_warned = True
             warnings.warn(
                 f"attach request with n={n} points exceeds the largest "
                 f"configured bucket ({self.cfg.bucket_sizes[-1]}); "
-                f"padding to a geometric bucket of {b}. Add larger "
+                f"padding to an oversized bucket of {b}. Add larger "
                 f"bucket_sizes to the plan to avoid oversized pads.",
-                UserWarning, stacklevel=3)
+                ReproPerfWarning, stacklevel=3)
         return b
 
     def flush(self) -> Dict[int, np.ndarray]:
@@ -267,10 +309,23 @@ class AttachService:
         if self._taubuf.pending:
             self._taubuf = self._taubuf.commit()
         pending, self._pending = self._pending, []
+        # The flush boundary is the ONE place scaling decisions land
+        # (§12): snapshot the queue (depth + base-ladder histogram —
+        # deterministic functions of the request stream, so a restored
+        # service replays the same decision) and let the controller
+        # re-select the active (shards, batch, ladder) triple.
+        decision = self.autoscaler.decision
+        if pending and self.cfg.autoscale != "off":
+            # "off" never reads the snapshot — skip building it so the
+            # default configuration keeps the pre-controller flush cost.
+            decision = self.autoscaler.observe(snapshot_queue(
+                [item[1].shape[0] for item in pending],
+                self.cfg.bucket_sizes))
         buckets: Dict[int, list] = {}
         for item in pending:
-            buckets.setdefault(self._bucket(item[1].shape[0]), []).append(
-                item)
+            buckets.setdefault(
+                self._bucket(item[1].shape[0], decision.ladder),
+                []).append(item)
         out, self._done = self._done, {}  # undelivered earlier results
         # Two-phase pipeline: phase 1 DISPATCHES every batch (serve
         # step, fold scatter, staged refresh — all asynchronous, chained
@@ -278,13 +333,22 @@ class AttachService:
         # never sits between consecutive device batches, which is what
         # keeps a sharded plane's shards saturated.
         staged: List[tuple] = []
+        t0 = time.perf_counter()
         try:
             for n_pad in sorted(buckets):
                 group = buckets[n_pad]
-                B = self.cfg.batch_size
+                B = decision.batch_size
                 for lo in range(0, len(group), B):
-                    self._serve_batch(group[lo:lo + B], n_pad, staged)
+                    self._serve_batch(group[lo:lo + B], n_pad, staged,
+                                      decision)
+            t1 = time.perf_counter()
             self._deliver(staged, out)
+            if pending:
+                self.autoscaler.record(FlushTelemetry(
+                    dispatch_us=int((t1 - t0) * 1e6),
+                    materialize_us=int((time.perf_counter() - t1) * 1e6),
+                    batches=len(staged), requests=len(pending),
+                    points=sum(item[1].shape[0] for item in pending)))
         except BaseException:
             # A failed batch must not lose work: every dispatched batch
             # that still materializes drains into the undelivered
@@ -332,14 +396,28 @@ class AttachService:
         self._done.update(got)
         return mine
 
-    def _serve_batch(self, batch, n_pad: int, staged) -> None:
+    def _serve_batch(self, batch, n_pad: int, staged,
+                     decision: AutoscaleDecision) -> None:
         """Phase 1 of a flush: dispatch one batch's serve step + fold
-        (+ cadence refresh) and stage its device-side labels. Nothing
-        here waits on the device unless the admission policy needs
-        report weights (``needs_weight`` policies synchronize once per
-        batch)."""
+        (+ cadence refresh) at the flush decision's (shards, batch)
+        shape and stage its device-side labels. Nothing here waits on
+        the device unless the admission policy needs report weights
+        (``needs_weight`` policies synchronize once per batch)."""
         cfg = self.cfg
-        B = cfg.batch_size
+        B = decision.batch_size
+        shards = decision.shards
+        if cfg.autoscale != "off":
+            # The decision's batch rung is the FLUSH ceiling; each
+            # bucket group (and a group's last slice) right-sizes to
+            # its own power-of-two rung so mixed-rung traffic never
+            # pads one thin group up to the whole queue's depth —
+            # repeat-padding rows are real compute. Deterministic (a
+            # function of the group size alone), so replay holds; the
+            # active shard count follows the batch down through THE
+            # shard rule (a multi-axis grant has no sub-grant, so a
+            # right-sized group there drops to one shard).
+            B = min(B, pow2_ceil(len(batch)))
+            shards = shards_for(B, shards, self.autoscaler.n_axes)
         data = np.zeros((B, n_pad, cfg.d), np.float32)
         pmask = np.zeros((B, n_pad), bool)
         kv = np.full((B,), cfg.k_prime, np.int32)
@@ -356,48 +434,43 @@ class AttachService:
         version = self._taubuf.version
         labels, centers, cmask, weights = self.plane.step(
             self.tau, keys, jnp.asarray(data), jnp.asarray(pmask),
-            jnp.asarray(kv))
+            jnp.asarray(kv), shards=shards)
         if cfg.fold_reports:
-            self._fold(batch, rids, centers, cmask, weights)
+            self._fold(batch, rids, centers, cmask, weights,
+                       shards=shards)
         staged.append((batch, labels, version))
 
     # -------------------------------------------------------------- fold --
 
-    def _scatter_slots(self, slots: np.ndarray, total: int) -> jax.Array:
-        """Admission decisions -> the plane's fixed-shape fold vector:
-        declined (-1) and padding entries become the out-of-capacity
-        sentinel the scatter drops (negative ids would WRAP per numpy
-        indexing — never pass them to a scatter)."""
-        full = np.full((total,), self.cfg.capacity, np.int64)
-        full[:len(slots)] = np.where(slots < 0, self.cfg.capacity, slots)
-        return jnp.asarray(full, jnp.int32)
-
     def _admit_and_fold(self, rids, dev_w, centers, cmask, fold_w,
-                        total: Optional[int] = None) -> int:
+                        total: Optional[int] = None,
+                        shards: Optional[int] = None) -> int:
         """THE admission step shared by round seeding and streaming:
-        the batch goes through ``FoldPolicy.admit_batch`` (global
-        request order, within-batch evictions suppressed), and the
+        the batch goes through ``FoldPolicy.admit_padded`` (global
+        request order, within-batch evictions suppressed, declined and
+        padding entries already the out-of-capacity sentinel), and the
         granted reports scatter into their slots through the serve
         plane — ``server.aggregate_incremental`` stays the single fold
         primitive (its collective sibling on the sharded plane).
         ``total`` pads the slot vector past ``len(rids)`` (the serve
-        batch's repeat-padding rows, which never fold). Returns the
-        number of GRANTED admissions (the refresh-cadence count)."""
-        slots, granted = self.policy.admit_batch(rids, dev_w)
+        batch's repeat-padding rows, which never fold); ``shards`` is
+        the flush decision's active count. Returns the number of
+        GRANTED admissions (the refresh-cadence count)."""
+        slots, granted = self.policy.admit_padded(rids, dev_w,
+                                                  total=total)
         if granted:
             self.state = self.plane.fold(
-                self.state,
-                self._scatter_slots(slots, total or len(rids)),
-                centers, cmask, weights=fold_w)
+                self.state, jnp.asarray(slots, jnp.int32),
+                centers, cmask, weights=fold_w, shards=shards)
         return granted
 
-    def _fold(self, batch, rids, centers, cmask, weights):
+    def _fold(self, batch, rids, centers, cmask, weights, shards=None):
         dev_w = (np.asarray(jnp.sum(weights, axis=1))[:len(batch)]
                  if self.policy.needs_weight else None)
         admitted = self._admit_and_fold(
             rids[:len(batch)], dev_w, centers, cmask,
             weights if self.cfg.weight_by_core_counts else None,
-            total=len(rids))
+            total=len(rids), shards=shards)
         if not admitted:
             return
         self._since_refresh += admitted
@@ -417,7 +490,8 @@ class AttachService:
         serve step, so no recompile."""
         agg = server.finalize(self.state, self.cfg.k,
                               weighted=self.cfg.weight_by_core_counts)
-        self._taubuf = self._taubuf.swap_now(agg.tau_centers)
+        self._taubuf = self._taubuf.swap_now(
+            self.plane.localize(agg.tau_centers))
         self._since_refresh = 0
         return agg
 
@@ -428,7 +502,8 @@ class AttachService:
         defer the version-bump swap to the next flush boundary."""
         agg = server.finalize(self.state, self.cfg.k,
                               weighted=self.cfg.weight_by_core_counts)
-        self._taubuf = self._taubuf.stage(agg.tau_centers)
+        self._taubuf = self._taubuf.stage(
+            self.plane.localize(agg.tau_centers))
         self._since_refresh = 0
 
     # -------------------------------------------------------- checkpoint --
@@ -440,8 +515,11 @@ class AttachService:
 
     def save(self, path: str) -> str:
         """Checkpoint both tau buffers + version, fold state, counters,
-        and admission-policy identity/state (npz via
-        ``checkpoint.store``). Pending requests are not persisted."""
+        admission-policy identity/state, and — schema v3 — the
+        autoscale controller's decision state next to ``tau_meta``, so
+        a restore replays labels, tau versions, AND scaling decisions
+        bitwise (npz via ``checkpoint.store``). Pending requests are
+        not persisted."""
         from repro.fed.policy import POLICY_IDS
         return save_pytree(path, {
             "tau_bufs": self._taubuf.bufs,
@@ -450,7 +528,10 @@ class AttachService:
             "counters": self._counters(),
             "policy_id": np.asarray(POLICY_IDS[self.policy.name],
                                     np.int64),
-            "policy": self.policy.state_arrays()})
+            "policy": self.policy.state_arrays(),
+            "autoscale_id": np.asarray(AUTOSCALE_IDS[self.cfg.autoscale],
+                                       np.int64),
+            **self.autoscaler.state_arrays()})
 
     @classmethod
     def restore(cls, path: str, cfg: StreamConfig) -> "AttachService":
@@ -464,28 +545,42 @@ class AttachService:
         from repro.fed.policy import POLICY_IDS
         policy = make_policy(cfg.fold_policy, cfg.capacity,
                              seed=cfg.policy_seed)
-        keys = npz_keys(path)
+        # ONE open reads every generation-specific extra; presence of
+        # "tau_bufs" doubles as the v1-vs-v2 schema probe.
+        extras = load_extras(path, ("policy_id", "autoscale_id",
+                                    "autoscale_state",
+                                    "autoscale_ladder", "tau_bufs"))
         # Refuse a policy mismatch up front (named error, not a bare
         # KeyError / silent state corruption): the checkpoint's slot
         # bookkeeping is only meaningful under the policy that wrote
         # it. Checkpoints from before the policy layer existed could
         # only have been written under the drop rule.
-        if "policy_id" in keys:
-            data = np.load(path if path.endswith(".npz")
-                           else path + ".npz")
-            saved = int(data["policy_id"])
-        else:
-            saved = POLICY_IDS["drop"]
+        saved = (int(extras["policy_id"]) if "policy_id" in extras
+                 else POLICY_IDS["drop"])
         if saved != POLICY_IDS[cfg.fold_policy]:
             names = {v: n for n, v in POLICY_IDS.items()}
             raise StreamConfigError(
                 f"StreamConfig.fold_policy={cfg.fold_policy!r} does not "
                 f"match the checkpoint at {path!r}, which was saved "
                 f"under fold_policy={names.get(saved, saved)!r}")
+        # Schema v3 additionally carries the autoscale decision state;
+        # the controller config must match what wrote it, or the
+        # replayed decision sequence (and with it the refresh/version
+        # boundaries) would silently diverge. v1/v2 checkpoints predate
+        # the controller — any autoscale config restores them with a
+        # fresh (static) decision.
+        if "autoscale_id" in extras:
+            saved_as = int(extras["autoscale_id"])
+            if saved_as != AUTOSCALE_IDS[cfg.autoscale]:
+                names = {v: n for n, v in AUTOSCALE_IDS.items()}
+                raise StreamConfigError(
+                    f"StreamConfig.autoscale={cfg.autoscale!r} does not "
+                    f"match the checkpoint at {path!r}, which was saved "
+                    f"under autoscale={names.get(saved_as, saved_as)!r}")
         # Schema v2 carries the double-buffered tau; v1 (pre-plane)
         # checkpoints hold one tau — restored as version 0 with both
         # buffers equal, so old checkpoints keep replaying bitwise.
-        v2 = "tau_bufs" in keys
+        v2 = "tau_bufs" in extras
         like = {
             "server": server.init_state(cfg.capacity, cfg.k_prime, cfg.d),
             "counters": np.zeros((5,), np.int64),
@@ -496,7 +591,7 @@ class AttachService:
             like["tau_meta"] = np.zeros((3,), np.int64)
         else:
             like["tau"] = jnp.zeros((cfg.k, cfg.d), jnp.float32)
-        if "policy_id" in keys:
+        if "policy_id" in extras:
             like["policy_id"] = np.zeros((), np.int64)
         tree = load_pytree(path, like)
         if tree["policy"]:
@@ -504,12 +599,16 @@ class AttachService:
         taubuf = (TauBuffer.from_arrays(tree["tau_bufs"], tree["tau_meta"])
                   if v2 else TauBuffer.fresh(tree["tau"]))
         cnt = np.asarray(tree["counters"])
-        return cls(cfg, taubuf.tau, tau_buffer=taubuf,
-                   state=tree["server"], policy=policy,
-                   seed=int(cnt[4]), next_id=int(cnt[0]),
-                   since_refresh=int(cnt[1]), served_devices=int(cnt[2]),
-                   served_points=int(cnt[3]), mesh=mesh,
-                   serve_axes=serve_axes)
+        svc = cls(cfg, taubuf.tau, tau_buffer=taubuf,
+                  state=tree["server"], policy=policy,
+                  seed=int(cnt[4]), next_id=int(cnt[0]),
+                  since_refresh=int(cnt[1]), served_devices=int(cnt[2]),
+                  served_points=int(cnt[3]), mesh=mesh,
+                  serve_axes=serve_axes)
+        if "autoscale_state" in extras:
+            svc.autoscaler.load_state(extras["autoscale_state"],
+                                      extras["autoscale_ladder"])
+        return svc
 
     # ------------------------------------------------------------- stats --
 
@@ -525,5 +624,6 @@ class AttachService:
             "since_refresh": self._since_refresh,
             "tau_version": self._taubuf.version,
             "refresh_pending": self._taubuf.pending,
+            "autoscale": self.autoscaler.stats(),
             **self.plane.describe(),
         }

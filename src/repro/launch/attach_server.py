@@ -39,6 +39,17 @@ def main() -> None:
                     help="tau swap mode: sync swaps between batches; "
                          "async double-buffers and commits the "
                          "versioned swap at the next flush boundary")
+    # literal choices (not imported from fed.autoscale) so argparse
+    # rejects typos BEFORE jax loads; AUTOSCALE_POLICIES is the source.
+    ap.add_argument("--autoscale", default="off",
+                    choices=("off", "latency", "throughput"),
+                    help="load-adaptive serve plane (DESIGN.md §12): "
+                         "re-select active shards / batch size / "
+                         "bucket ladder from queue depth at flush "
+                         "boundaries (latency tracks the queue both "
+                         "ways; throughput holds full batches across "
+                         "single-flush dips); --batch-size becomes "
+                         "the ceiling and --serve-axes the shard grant")
     ap.add_argument("--serve-axes", default=None, metavar="AXES",
                     help="comma-separated mesh axes to shard the serve "
                          "plane's request batch over (e.g. 'data'); "
@@ -83,12 +94,16 @@ def main() -> None:
                             n_per_comp_dev=25, sep=60.0)
     serve_axes = (tuple(args.serve_axes.split(","))
                   if args.serve_axes else None)
-    mesh = (make_mesh((jax.device_count(),), ("data",))
+    # The mesh takes its axis names FROM --serve-axes (all devices on
+    # the first named axis), so any axis name the user picks works.
+    mesh = (make_mesh((jax.device_count(),)
+                      + (1,) * (len(serve_axes) - 1), serve_axes)
             if serve_axes else None)
     plan = FederationPlan(k=k, k_prime=kp, d=d, capacity=args.capacity,
                           batch_size=args.batch_size,
                           refresh_every=args.refresh_every,
                           refresh=args.refresh, serve_axes=serve_axes,
+                          autoscale=args.autoscale,
                           fold_policy=args.fold_policy,
                           checkpoint=args.checkpoint)
     sess = Session(plan, mesh=mesh)
@@ -138,6 +153,14 @@ def main() -> None:
           f"(capacity {st['capacity']}, policy {st['fold_policy']}), "
           f"refresh cadence {args.refresh_every} ({args.refresh}), "
           f"final tau version {st['tau_version']}")
+    a = st["autoscale"]
+    print(f"autoscale[{a['policy']}]: active shards {a['shards']}/"
+          f"{a['granted_shards']}, batch {a['batch_size']}/"
+          f"{a['max_batch']}, ladder {a['ladder']}, "
+          f"{a['decisions']} decisions, "
+          f"{st['plane_compiles']} compiled signatures, last flush "
+          f"dispatch {a['last_dispatch_us']}us / materialize "
+          f"{a['last_materialize_us']}us")
 
 
 if __name__ == "__main__":

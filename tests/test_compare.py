@@ -1,0 +1,81 @@
+"""benchmarks/compare.py — the CI perf-gate comparator (unit tests:
+the gate's pass/fail logic must be testable without running a bench)."""
+import json
+
+import pytest
+
+from benchmarks.compare import (compare_records, main, metric_rows,
+                                parse_derived)
+
+
+def _rec(rows):
+    return {"rows": [{"bench": "attach", "name": n, "us_per_call": 0.0,
+                      "derived": d} for n, d in rows]}
+
+
+def test_parse_derived_extracts_floats_only():
+    got = parse_derived("pts_per_s=1500;dev_per_s=12.5;bitwise=True")
+    assert got == {"pts_per_s": 1500.0, "dev_per_s": 12.5}
+    assert parse_derived("") == {}
+    assert parse_derived("ERROR:'boom'") == {}
+
+
+def test_metric_rows_filters_to_rows_carrying_the_metric():
+    rec = _rec([("a", "pts_per_s=100"), ("b", "bitwise=True"),
+                ("c", "x=1;pts_per_s=7")])
+    assert metric_rows(rec, "pts_per_s") == {"a": 100.0, "c": 7.0}
+
+
+def test_compare_within_tolerance_passes():
+    base = _rec([("a", "pts_per_s=1000"), ("b", "pts_per_s=500")])
+    cur = _rec([("a", "pts_per_s=700"), ("b", "pts_per_s=800")])
+    comps, missing = compare_records(cur, base, tolerance=0.40)
+    assert missing == []
+    assert [c.regressed for c in comps] == [False, False]
+    assert comps[0].ratio == pytest.approx(0.7)
+
+
+def test_compare_flags_regression_beyond_tolerance():
+    base = _rec([("a", "pts_per_s=1000")])
+    cur = _rec([("a", "pts_per_s=599")])
+    comps, _ = compare_records(cur, base, tolerance=0.40)
+    assert comps[0].regressed
+    comps, _ = compare_records(_rec([("a", "pts_per_s=601")]), base,
+                               tolerance=0.40)
+    assert not comps[0].regressed
+
+
+def test_compare_reports_missing_baseline_rows():
+    base = _rec([("a", "pts_per_s=10"), ("gone", "pts_per_s=10")])
+    cur = _rec([("a", "pts_per_s=10"), ("new", "pts_per_s=10")])
+    comps, missing = compare_records(cur, base)
+    assert [c.name for c in comps] == ["a"]  # new rows aren't gated
+    assert missing == ["gone"]
+
+
+def _write(tmp_path, name, rec):
+    p = tmp_path / name
+    p.write_text(json.dumps(rec))
+    return str(p)
+
+
+def test_main_exit_codes_and_require(tmp_path, capsys):
+    base = _write(tmp_path, "base.json",
+                  _rec([("attach_bs8", "pts_per_s=1000")]))
+    good = _write(tmp_path, "good.json",
+                  _rec([("attach_bs8", "pts_per_s=900")]))
+    bad = _write(tmp_path, "bad.json",
+                 _rec([("attach_bs8", "pts_per_s=100")]))
+    empty = _write(tmp_path, "empty.json",
+                   _rec([("attach_bs8", "ERROR:'boom'")]))
+    assert main([good, base]) == 0
+    assert "perf gate OK" in capsys.readouterr().out
+    assert main([bad, base]) == 1
+    assert "REGRESSED" in capsys.readouterr().out
+    # a bench that errored into zero metric rows: missing baseline row
+    # AND an unmet --require both fail the gate
+    assert main([empty, base, "--require", "attach_bs"]) == 1
+    err = capsys.readouterr().err
+    assert "missing" in err and "attach_bs" in err
+    # tolerance is a knob: the same drop passes at 95%
+    assert main([bad, base, "--tolerance", "0.95"]) == 0

@@ -299,12 +299,14 @@ def test_tau_buffer_transitions():
 def test_oversized_bucket_geometric_ladder_and_warn_once(fixture_round):
     """Requests above the largest bucket pad to a geometric (doubling)
     ladder — O(log) distinct jit shapes instead of one per rounded-up
-    n — and warn exactly once per service."""
+    n — and warn exactly once per service, under the NAMED perf
+    category (``ReproPerfWarning``) so filterwarnings can target it."""
+    from repro.fed.stream import ReproPerfWarning
     fm, rr = fixture_round
     sess = Session.from_round(_plan(bucket_sizes=(32, 64)), rr)
     svc = sess.service
     assert svc._bucket(10) == 32 and svc._bucket(64) == 64
-    with pytest.warns(UserWarning, match="largest configured bucket"):
+    with pytest.warns(ReproPerfWarning, match="largest configured bucket"):
         assert svc._bucket(65) == 128
     assert svc._bucket(129) == 256
     assert svc._bucket(300) == 512

@@ -188,11 +188,11 @@ def test_flush_failure_requeues_and_keeps_results(fixture_round,
     svc = sess.service
     orig, calls = svc._serve_batch, []
 
-    def boom(batch, n_pad, out):
+    def boom(batch, n_pad, out, decision):
         if calls:
             raise RuntimeError("boom")
         calls.append(1)
-        orig(batch, n_pad, out)
+        orig(batch, n_pad, out, decision)
 
     monkeypatch.setattr(svc, "_serve_batch", boom)
     with pytest.raises(RuntimeError):
