@@ -1,18 +1,47 @@
-"""Roofline report: reads the dry-run JSONL artifacts (produced by
-``python -m repro.launch.dryrun --all --out results_single.jsonl``) and
-emits one row per (arch x shape) with the three terms + bottleneck."""
+"""Analytic roofline bench — the deterministic half of the CI perf gate.
+
+Two row families, both instruction-count-deterministic (no timing, so
+they are meaningful even on the noisy 2-core CI box):
+
+1. ``roofline_serve_*``: the serve step (``fed.plane._make_step``) is
+   compiled at a fixed shape and fed through
+   ``launch.hlo_analysis.analyze`` — FLOPs and bytes-accessed per
+   attached point and their arithmetic intensity ``ai``. A drop in ai
+   means the compiled step got more HBM-bound (a dead fusion, a new
+   materialization, an accidental f64 upcast); instruction counts do
+   not jitter run-to-run, so the gate tolerance can be tight.
+2. ``roofline_attach_kernel_*`` + ``roofline_serve_fusion_gain``: the
+   kernel-boundary HBM traffic model of ``kernels/solve_attach``
+   (``hbm_bytes`` vs ``hbm_bytes_legacy``) — bytes per attached point
+   of the fused solve+attach kernel vs the pre-fusion three-dispatch
+   Lloyd loop at the same iteration bound, and the saved fraction
+   (``bytes_saved_frac``) the acceptance gate pins at >= 25%.
+
+The historical dry-run artifact report (one row per arch x shape from
+``results_*.jsonl``) is kept when those files are present.
+
+Refresh the committed baseline after an intentional change:
+  PYTHONPATH=src python -m benchmarks.run --only roofline --json \
+      benchmarks/baselines/BENCH_roofline_ci.json
+"""
 from __future__ import annotations
 
 import json
 import os
+import time
 
 from benchmarks.common import row
 
 ARTIFACTS = ["results_single.jsonl", "results_multipod.jsonl",
              "results_kfed.jsonl", "results_perf.jsonl"]
 
+# (B, n, d, k, k_prime, max_iters) — smoke is the committed-baseline /
+# CI shape; full is closer to a production serve bucket.
+_SMOKE = (8, 256, 64, 16, 4, 8)
+_FULL = (8, 1024, 256, 64, 8, 8)
 
-def run(full: bool = False):
+
+def _artifact_rows():
     rows = []
     for path in ARTIFACTS:
         if not os.path.exists(path):
@@ -28,7 +57,7 @@ def run(full: bool = False):
                 continue
             if r["status"] != "ok":
                 rows.append(row(f"roofline_{arch}_{shape}_{mesh}", 0,
-                                f"ERROR"))
+                                "ERROR"))
                 continue
             derived = (f"compute={r['compute_s']:.4f};"
                        f"memory={r['memory_s']:.4f};"
@@ -42,6 +71,104 @@ def run(full: bool = False):
             rows.append(row(
                 f"roofline_{arch}_{shape}_{mesh}",
                 r.get("t_compile_s", 0) * 1e6, derived))
-    if not rows:
-        rows.append(row("roofline", 0, "no_artifacts_found_run_dryrun"))
+    return rows
+
+
+def _legacy_step(cfg):
+    """The pre-fusion three-stage serve step (what _make_step compiled
+    before kernels/solve_attach existed) — the compiled-HLO anchor the
+    fused step's rows are read against."""
+    import jax
+    from repro.core import server
+    from repro.core.local_kmeans import batched_local_kmeans
+
+    def step(tau, keys, data, point_mask, k_valid):
+        loc = batched_local_kmeans(keys, data, k_max=cfg.k_prime,
+                                   k_valid=k_valid,
+                                   point_mask=point_mask, **cfg.local_kw)
+        ctr = jax.vmap(
+            lambda c, m: server.assign_new_device(c, m, tau))(
+                loc.centers, loc.center_mask)
+        labels = server.induced_labels(ctr, loc.assign)
+        return (labels, loc.centers, loc.center_mask,
+                server.core_weights(loc.core_counts))
+
+    return step
+
+
+def _compiled_row(name, step, B, n, d, k):
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.hlo_analysis import analyze
+    from repro.launch.roofline import roofline_terms
+
+    sds = jax.ShapeDtypeStruct
+    args = (sds((k, d), jnp.float32), sds((B, 2), jnp.uint32),
+            sds((B, n, d), jnp.float32), sds((B, n), jnp.bool_),
+            sds((B,), jnp.int32))
+    t0 = time.time()
+    compiled = jax.jit(step).lower(*args).compile()
+    us = (time.time() - t0) * 1e6
+    hc = analyze(compiled.as_text())
+    flops = float(hc["flops"]) + float(hc.get("flops_f32", 0.0))
+    byt = float(hc["bytes"])
+    pts = B * n
+    terms = roofline_terms(flops, byt, float(hc["coll_bytes"]))
+    return row(name, us,
+               f"flops_per_pt={flops / pts:.1f};"
+               f"bytes_per_pt={byt / pts:.1f};"
+               f"ai={flops / max(byt, 1.0):.4f};"
+               f"bottleneck={terms['bottleneck']}")
+
+
+def _serve_step_rows(full: bool):
+    from repro.fed.plane import _make_step
+    from repro.fed.stream import StreamConfig
+
+    B, n, d, k, kp, iters = _FULL if full else _SMOKE
+    rows = []
+    for dt in ("f32", "bf16"):
+        cfg = StreamConfig(k=k, k_prime=kp, d=d, capacity=64,
+                           batch_size=B, bucket_sizes=(n,),
+                           serve_dtype=dt,
+                           local_kw={"max_iters": iters})
+        rows.append(_compiled_row(f"roofline_serve_fused_{dt}",
+                                  _make_step(cfg), B, n, d, k))
+        if dt == "f32":
+            rows.append(_compiled_row("roofline_serve_legacy_f32",
+                                      _legacy_step(cfg), B, n, d, k))
+    return rows
+
+
+def _analytic_rows(full: bool):
+    from repro.kernels.solve_attach import (hbm_bytes, hbm_bytes_legacy,
+                                            kernel_flops)
+
+    B, n, d, k, kp, iters = _FULL if full else _SMOKE
+    pts = B * n
+    rows = []
+    byts = {}
+    for dt in ("f32", "bf16"):
+        b = hbm_bytes(B, n, d, kp, k, dt)
+        fl = kernel_flops(B, n, d, kp, k, iters, dt)
+        byts[dt] = b
+        rows.append(row(
+            f"roofline_attach_kernel_{dt}", 0,
+            f"bytes_per_pt={b / pts:.1f};ai={fl / b:.4f}"))
+    legacy = hbm_bytes_legacy(B, n, d, kp, k, iters)
+    fl = kernel_flops(B, n, d, kp, k, iters)
+    rows.append(row(
+        "roofline_attach_kernel_legacy", 0,
+        f"bytes_per_pt={legacy / pts:.1f};ai={fl / legacy:.4f}"))
+    rows.append(row(
+        "roofline_serve_fusion_gain", 0,
+        f"bytes_saved_frac={1.0 - byts['f32'] / legacy:.4f};"
+        f"bf16_bytes_saved_frac={1.0 - byts['bf16'] / legacy:.4f};"
+        f"lloyd_iter_bound={iters}"))
+    return rows
+
+
+def run(full: bool = False):
+    rows = _serve_step_rows(full) + _analytic_rows(full)
+    rows += _artifact_rows()
     return rows

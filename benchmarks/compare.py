@@ -5,6 +5,9 @@ unit-testable functions (tests/test_compare.py).
   python -m benchmarks.compare CURRENT.json BASELINE.json \
       --metric pts_per_s --tolerance 0.40 --require attach_bs,autoscale_
 
+``--metric`` takes a comma-separated list (e.g. ``ai,bytes_saved_frac``
+for the analytic roofline gate): each metric is compared independently
+over the rows that carry it, and the gate fails if ANY regresses.
 Rows are matched by name; the metric is parsed out of each row's
 ``derived`` string (the ``k=v;k=v`` contract of benchmarks/common.py).
 The gate fails (exit 1) when the current value falls more than
@@ -90,8 +93,8 @@ def main(argv=None) -> int:
     ap.add_argument("current", help="BENCH json of this run")
     ap.add_argument("baseline", help="committed baseline BENCH json")
     ap.add_argument("--metric", default="pts_per_s",
-                    help="higher-is-better derived key (default "
-                         "pts_per_s)")
+                    help="comma-separated higher-is-better derived "
+                         "key(s) (default pts_per_s)")
     ap.add_argument("--tolerance", type=float, default=0.40,
                     help="allowed fractional drop below baseline "
                          "(default 0.40)")
@@ -103,26 +106,32 @@ def main(argv=None) -> int:
         current = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
-    comps, missing = compare_records(current, baseline,
-                                     metric=args.metric,
-                                     tolerance=args.tolerance)
-    width = max([len(c.name) for c in comps] + [4])
-    print(f"{'row'.ljust(width)}  {'baseline':>12}  {'current':>12}  "
-          f"ratio")
-    for c in comps:
-        flag = "  << REGRESSED" if c.regressed else ""
-        print(f"{c.name.ljust(width)}  {c.baseline:>12.1f}  "
-              f"{c.current:>12.1f}  {c.ratio:5.2f}x{flag}")
-
-    failures = [f"{c.name}: {args.metric} {c.current:.1f} vs baseline "
-                f"{c.baseline:.1f} ({c.ratio:.2f}x < "
-                f"{1 - args.tolerance:.2f}x floor)"
-                for c in comps if c.regressed]
-    failures += [f"{name}: baseline row missing from the current "
-                 f"record (renamed/removed? refresh the baseline)"
-                 for name in missing]
+    metrics = [m for m in args.metric.split(",") if m]
+    failures: List[str] = []
+    all_comps: List[Comparison] = []
+    for metric in metrics:
+        comps, missing = compare_records(current, baseline,
+                                         metric=metric,
+                                         tolerance=args.tolerance)
+        all_comps += comps
+        width = max([len(c.name) for c in comps] + [4])
+        print(f"[{metric}]")
+        print(f"{'row'.ljust(width)}  {'baseline':>12}  {'current':>12}  "
+              f"ratio")
+        for c in comps:
+            flag = "  << REGRESSED" if c.regressed else ""
+            print(f"{c.name.ljust(width)}  {c.baseline:>12.1f}  "
+                  f"{c.current:>12.1f}  {c.ratio:5.2f}x{flag}")
+        failures += [f"{c.name}: {metric} {c.current:.1f} vs baseline "
+                     f"{c.baseline:.1f} ({c.ratio:.2f}x < "
+                     f"{1 - args.tolerance:.2f}x floor)"
+                     for c in comps if c.regressed]
+        failures += [f"{name}: baseline row with {metric} missing from "
+                     f"the current record (renamed/removed? refresh "
+                     f"the baseline)"
+                     for name in missing]
     for prefix in filter(None, args.require.split(",")):
-        if not any(c.name.startswith(prefix) for c in comps):
+        if not any(c.name.startswith(prefix) for c in all_comps):
             failures.append(
                 f"--require {prefix!r}: no compared row matches (did "
                 f"the bench error out into zero rows?)")
@@ -132,7 +141,7 @@ def main(argv=None) -> int:
         for f_ in failures:
             print(f"  - {f_}", file=sys.stderr)
         return 1
-    print(f"\nperf gate OK: {len(comps)} row(s) within "
+    print(f"\nperf gate OK: {len(all_comps)} row comparison(s) within "
           f"{args.tolerance:.0%} of baseline")
     return 0
 

@@ -84,6 +84,28 @@ def lloyd(x: jax.Array, centers0: jax.Array, *,
     return LloydResult(centers, assign, iters, done)
 
 
+def lloyd_attach(x: jax.Array, centers0: jax.Array, tau: jax.Array, *,
+                 center_mask: Optional[jax.Array] = None,
+                 point_mask: Optional[jax.Array] = None,
+                 max_iters: int = 100, serve_dtype: str = "f32"):
+    """FUSED serve step (DESIGN.md §13): the ``lloyd`` convergence loop
+    of Algorithm 1 step 4, the Theorem 3.2 attach of its converged
+    centers against ``tau``, and the Definition 3.3 induced point
+    labels — one kernel dispatch per request batch instead of three.
+
+    Batched: x (B, n, d), centers0 (B, k', d), tau (k, d) shared.
+    Returns (labels (B, n) i32 — tau-indexed, -1 for masked points;
+    min_sq_dist (B, n) f32; centers (B, k', d) f32; center_labels
+    (B, k') i32). With ``serve_dtype="f32"`` the outputs are bitwise
+    identical to the staged ``lloyd`` -> ``server.assign_new_device``
+    -> ``server.induced_labels`` composition; ``"bf16"`` stores
+    x/centers/tau in bfloat16 with f32 accumulation (tolerance-bounded,
+    see tests/test_solve_attach.py).
+    """
+    return ops.solve_attach(x, centers0, tau, center_mask, point_mask,
+                            max_iters=max_iters, dtype=serve_dtype)
+
+
 def kmeans_pp_init(key: jax.Array, x: jax.Array, k: int, *,
                    point_mask: Optional[jax.Array] = None,
                    k_valid: Optional[jax.Array] = None):

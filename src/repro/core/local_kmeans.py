@@ -77,13 +77,32 @@ class LocalKMeansResult(NamedTuple):
     core_counts: jax.Array   # (k_max,) |S_r| from the 1/3-margin step
 
 
-def local_kmeans(key: jax.Array, A: jax.Array, *, k_max: int,
-                 k_valid: Optional[jax.Array] = None,
-                 point_mask: Optional[jax.Array] = None,
-                 approx_iters: int = 8, max_iters: int = 100,
-                 use_subspace_iteration: bool = False) -> LocalKMeansResult:
-    """Algorithm 1 on one device. ``k_max`` static; ``k_valid`` may be a
-    traced per-device k^(z) <= k_max."""
+class LocalPrepared(NamedTuple):
+    """Steps 1-3 of Algorithm 1: the core-set re-centered seeds that the
+    step-4 convergence loop (now fused with the Theorem 3.2 attach in
+    ``core.lloyd.lloyd_attach`` on the serve path) starts from."""
+    theta: jax.Array         # (k_max, d) f32 core-set means
+    center_mask: jax.Array   # (k_max,) bool
+    core_counts: jax.Array   # (k_max,) |S_r| from the 1/3-margin step
+
+
+def split_local_kw(local_kw: dict):
+    """Split a ``local_kmeans``-style kwargs dict into the kwargs of
+    :func:`local_prepare` (steps 1-3) and the step-4 ``max_iters``
+    bound consumed by the fused solve+attach."""
+    kw = dict(local_kw)
+    return kw, int(kw.pop("max_iters", 100))
+
+
+def local_prepare(key: jax.Array, A: jax.Array, *, k_max: int,
+                  k_valid: Optional[jax.Array] = None,
+                  point_mask: Optional[jax.Array] = None,
+                  approx_iters: int = 8,
+                  use_subspace_iteration: bool = False) -> LocalPrepared:
+    """Algorithm 1 steps 1-3 on one device: spectral projection,
+    k-means++ + approximate Lloyd on the projected data, and the
+    1/3-margin core-set re-centering. Bitwise-identical to the first
+    three steps of :func:`local_kmeans` (it IS them, factored out)."""
     n, d = A.shape
     kv = jnp.asarray(k_max if k_valid is None else k_valid, jnp.int32)
     pm = jnp.ones((n,), bool) if point_mask is None else point_mask
@@ -109,22 +128,49 @@ def local_kmeans(key: jax.Array, A: jax.Array, *, k_max: int,
     core_assign = jnp.where(in_core, r, -1)
     theta, core_counts = update_centers(A.astype(jnp.float32), core_assign,
                                         k_max, nu.astype(jnp.float32))
+    return LocalPrepared(theta, cmask, core_counts)
+
+
+def local_kmeans(key: jax.Array, A: jax.Array, *, k_max: int,
+                 k_valid: Optional[jax.Array] = None,
+                 point_mask: Optional[jax.Array] = None,
+                 approx_iters: int = 8, max_iters: int = 100,
+                 use_subspace_iteration: bool = False) -> LocalKMeansResult:
+    """Algorithm 1 on one device. ``k_max`` static; ``k_valid`` may be a
+    traced per-device k^(z) <= k_max."""
+    n, d = A.shape
+    pm = jnp.ones((n,), bool) if point_mask is None else point_mask
+    prep = local_prepare(key, A, k_max=k_max, k_valid=k_valid,
+                         point_mask=pm, approx_iters=approx_iters,
+                         use_subspace_iteration=use_subspace_iteration)
 
     # -- Step 4: Lloyd on the original data until convergence.
-    res = lloyd(A.astype(jnp.float32), theta, center_mask=cmask,
-                point_mask=pm, max_iters=max_iters)
-    return LocalKMeansResult(res.centers.astype(A.dtype), cmask,
-                             res.assign, core_counts)
+    res = lloyd(A.astype(jnp.float32), prep.theta,
+                center_mask=prep.center_mask, point_mask=pm,
+                max_iters=max_iters)
+    return LocalKMeansResult(res.centers.astype(A.dtype), prep.center_mask,
+                             res.assign, prep.core_counts)
 
 
-def batched_local_kmeans(keys, data, *, k_max: int, k_valid=None,
-                         point_mask=None, **kw):
-    """vmap of Algorithm 1 over the device axis: data (Z, n, d)."""
-    fn = lambda key, A, kv, pm: local_kmeans(
+def _batched(fn, keys, data, k_max, k_valid, point_mask, kw):
+    wrapped = lambda key, A, kv, pm: fn(
         key, A, k_max=k_max, k_valid=kv, point_mask=pm, **kw)
     Z = data.shape[0]
     if k_valid is None:
         k_valid = jnp.full((Z,), k_max, jnp.int32)
     if point_mask is None:
         point_mask = jnp.ones(data.shape[:2], bool)
-    return jax.vmap(fn)(keys, data, k_valid, point_mask)
+    return jax.vmap(wrapped)(keys, data, k_valid, point_mask)
+
+
+def batched_local_kmeans(keys, data, *, k_max: int, k_valid=None,
+                         point_mask=None, **kw):
+    """vmap of Algorithm 1 over the device axis: data (Z, n, d)."""
+    return _batched(local_kmeans, keys, data, k_max, k_valid, point_mask, kw)
+
+
+def batched_local_prepare(keys, data, *, k_max: int, k_valid=None,
+                          point_mask=None, **kw):
+    """vmap of Algorithm 1 steps 1-3 over the device axis (the serve
+    plane pairs this with the fused ``lloyd_attach``)."""
+    return _batched(local_prepare, keys, data, k_max, k_valid, point_mask, kw)

@@ -95,6 +95,9 @@ class FederationPlan:
                ``throughput`` holds full batches across single-flush
                dips — ``batch_size`` becomes the ceiling and
                ``serve_axes`` the shard grant, DESIGN.md §12),
+               ``serve_dtype`` the fused solve+attach storage precision
+               (``f32`` bitwise vs the staged step; ``bf16`` bfloat16
+               storage with f32 accumulation, DESIGN.md §13),
                ``checkpoint`` the default save/restore path.
     """
     k: int
@@ -115,6 +118,7 @@ class FederationPlan:
     fold_reports: bool = True
     fold_policy: str = "drop"
     policy_seed: int = 0
+    serve_dtype: str = "f32"
     checkpoint: Optional[str] = None
 
     def __post_init__(self):
@@ -167,6 +171,7 @@ class FederationPlan:
             autoscale=self.autoscale, fold_reports=self.fold_reports,
             weight_by_core_counts=self.weight_by_core_counts,
             fold_policy=self.fold_policy, policy_seed=self.policy_seed,
+            serve_dtype=self.serve_dtype,
             local_kw=dict(self.local_kw))
 
     def with_options(self, **kw) -> "FederationPlan":
@@ -461,17 +466,23 @@ class Session:
     def attach_fn(self):
         """A jitted ``(key, device_data) -> point labels`` closure over
         the CURRENT tau centers — the single-device serving path the
-        legacy ``launch.serve.make_kfed_attach`` is a shim of."""
-        from repro.core.local_kmeans import local_kmeans
+        legacy ``launch.serve.make_kfed_attach`` is a shim of. Runs the
+        same fused solve+attach as the serve plane (DESIGN.md §13), so
+        ``plan.serve_dtype`` applies here too."""
+        from repro.core.lloyd import lloyd_attach
+        from repro.core.local_kmeans import local_prepare, split_local_kw
         tau = jnp.asarray(self.tau_centers)
         kp = self.plan.k_prime
-        local_kw = dict(self.plan.local_kw)
+        prep_kw, max_iters = split_local_kw(dict(self.plan.local_kw))
+        serve_dtype = self.plan.serve_dtype
 
         def attach(key, device_data):
-            loc = local_kmeans(key, device_data, k_max=kp, **local_kw)
-            lbl = server.assign_new_device(loc.centers, loc.center_mask,
-                                           tau)
-            return server.induced_labels(lbl[None], loc.assign[None])[0]
+            prep = local_prepare(key, device_data, k_max=kp, **prep_kw)
+            labels, _, _, _ = lloyd_attach(
+                device_data[None], prep.theta[None], tau,
+                center_mask=prep.center_mask[None],
+                max_iters=max_iters, serve_dtype=serve_dtype)
+            return labels[0]
 
         return jax.jit(attach)
 

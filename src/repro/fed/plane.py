@@ -50,7 +50,8 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.core import server
-from repro.core.local_kmeans import batched_local_kmeans
+from repro.core.lloyd import lloyd_attach
+from repro.core.local_kmeans import batched_local_prepare, split_local_kw
 from repro.kernels import ops
 from repro.utils.compat import shard_map as _shard_map
 
@@ -134,20 +135,24 @@ class TauBuffer(NamedTuple):
 
 def _make_step(cfg):
     """The ONE serve-step body (shared verbatim by both planes): vmapped
-    Algorithm 1 over the request batch + Theorem 3.2 attach against the
-    replicated tau + Definition 3.3 induced labels."""
+    Algorithm 1 steps 1-3 over the request batch, then the FUSED
+    bounded-Lloyd solve + Theorem 3.2 attach against the replicated tau
+    + Definition 3.3 induced labels in a single ``lloyd_attach``
+    dispatch (kernels/solve_attach, DESIGN.md §13). ``cfg.serve_dtype``
+    selects f32 (bitwise vs the pre-fusion staged step) or bf16 storage
+    with f32 accumulation."""
+    prep_kw, max_iters = split_local_kw(cfg.local_kw)
 
     def step(tau, keys, data, point_mask, k_valid):
-        loc = batched_local_kmeans(keys, data, k_max=cfg.k_prime,
-                                   k_valid=k_valid,
-                                   point_mask=point_mask,
-                                   **cfg.local_kw)
-        ctr = jax.vmap(
-            lambda c, m: server.assign_new_device(c, m, tau))(
-                loc.centers, loc.center_mask)
-        labels = server.induced_labels(ctr, loc.assign)
-        return (labels, loc.centers, loc.center_mask,
-                server.core_weights(loc.core_counts))
+        prep = batched_local_prepare(keys, data, k_max=cfg.k_prime,
+                                     k_valid=k_valid,
+                                     point_mask=point_mask, **prep_kw)
+        labels, _, centers, _ = lloyd_attach(
+            data, prep.theta, tau, center_mask=prep.center_mask,
+            point_mask=point_mask, max_iters=max_iters,
+            serve_dtype=cfg.serve_dtype)
+        return (labels, centers, prep.center_mask,
+                server.core_weights(prep.core_counts))
 
     return step
 

@@ -112,6 +112,7 @@ class StreamConfig:
     weight_by_core_counts: bool = False
     fold_policy: str = "drop"   # admission: drop | lru | weighted_reservoir
     policy_seed: int = 0        # weighted_reservoir key seed
+    serve_dtype: str = "f32"    # fused-step storage: f32 (bitwise) | bf16
     local_kw: dict = field(default_factory=dict)  # Algorithm 1 options
 
     def __post_init__(self):
@@ -158,6 +159,14 @@ class StreamConfig:
             _bad("policy_seed", self.policy_seed,
                  "must be a non-negative int (seeds the "
                  "weighted_reservoir keys)")
+        from repro.kernels.ref import SOLVE_ATTACH_DTYPES
+        if self.serve_dtype not in SOLVE_ATTACH_DTYPES:
+            _bad("serve_dtype", self.serve_dtype,
+                 f"accepted values are {list(SOLVE_ATTACH_DTYPES)} "
+                 "(f32 keeps the fused serve step bitwise-identical to "
+                 "the staged path; bf16 stores points/centers/tau in "
+                 "bfloat16 with f32 accumulation — tolerance-bounded, "
+                 "see DESIGN.md §13)")
 
 
 class AttachService:

@@ -132,6 +132,25 @@ def plan_chunk_rows(n_shards: int = 1) -> int:
     return max(_MIN_CHUNK_ROWS, base // max(1, int(n_shards)))
 
 
+def solve_attach(x: jax.Array, centers0: jax.Array, tau: jax.Array,
+                 center_mask: Optional[jax.Array] = None,
+                 point_mask: Optional[jax.Array] = None,
+                 *, max_iters: int = 100, dtype: str = "f32"):
+    """Fused serve-step primitive (DESIGN.md §13): bounded Lloyd local
+    solve + Theorem 3.2 attach against ``tau`` + Definition 3.3 induced
+    labels for a (B, n, d) request batch, in one dispatch. ``dtype``:
+    "f32" (bitwise vs the staged composition) or "bf16" (bf16 storage,
+    f32 accumulation). Returns (labels, min_sq_dist, centers,
+    center_labels)."""
+    if _STATE["impl"] == "pallas":
+        from repro.kernels.solve_attach import solve_attach_fused
+        return solve_attach_fused(x, centers0, tau, center_mask,
+                                  point_mask, max_iters=max_iters,
+                                  dtype=dtype, interpret=_interpret())
+    return _ref.solve_attach(x, centers0, tau, center_mask, point_mask,
+                             max_iters=max_iters, dtype=dtype)
+
+
 def kmeans_update(x: jax.Array, assign: jax.Array, k: int,
                   weights: Optional[jax.Array] = None):
     if _STATE["impl"] == "pallas":

@@ -46,6 +46,71 @@ def kmeans_update(x: jax.Array, assign: jax.Array, k: int,
     return sums, counts
 
 
+SOLVE_ATTACH_DTYPES = ("f32", "bf16")
+
+
+def solve_attach(x: jax.Array, centers0: jax.Array, tau: jax.Array,
+                 center_mask: jax.Array | None = None,
+                 point_mask: jax.Array | None = None,
+                 *, max_iters: int = 100, dtype: str = "f32"):
+    """Oracle for ``kernels/solve_attach.solve_attach_fused`` — the FUSED
+    serve step (DESIGN.md §13): bounded Lloyd local solve (Algorithm 1
+    step 4) + Theorem 3.2 attach of the converged local centers against
+    ``tau`` + Definition 3.3 induced point labels, as one primitive.
+
+    x: (B, n, d); centers0: (B, k', d); tau: (k, d) — shared across the
+    batch; center_mask: (B, k') bool; point_mask: (B, n) bool.
+    Returns (labels (B, n) i32, min_sq_dist (B, n) f32,
+    centers (B, k', d) f32, center_labels (B, k') i32).
+
+    ``dtype="f32"`` is bitwise-identical to the staged composition
+    ``core.lloyd.lloyd`` -> ``server.assign_new_device`` ->
+    ``server.induced_labels`` on this backend (same primitives, same
+    order). ``dtype="bf16"`` stores x / centers / tau in bfloat16
+    between iterations and accumulates every distance and center-sum
+    contraction in f32 (tolerance-bounded against the f32 oracle; see
+    tests/test_solve_attach.py).
+    """
+    assert dtype in SOLVE_ATTACH_DTYPES, dtype
+    store = jnp.float32 if dtype == "f32" else jnp.bfloat16
+    B, n, _ = x.shape
+    kp = centers0.shape[1]
+    cm = jnp.ones((B, kp), bool) if center_mask is None else center_mask
+    pm = jnp.ones((B, n), bool) if point_mask is None else point_mask
+    taus = tau.astype(store)
+
+    def one(x1, c0, cm1, pm1):
+        def assign(centers):
+            idx, mind = assign_argmin(x1, centers, cm1)
+            return jnp.where(pm1, idx, -1), jnp.where(pm1, mind, 0.0)
+
+        def cond(state):
+            _, _, it, done = state
+            return (~done) & (it < max_iters)
+
+        def body(state):
+            centers, prev, it, _ = state
+            a, _ = assign(centers)
+            sums, cnt = kmeans_update(x1, a, kp)
+            new = sums / jnp.maximum(cnt, 1.0)[:, None]
+            new = jnp.where((cnt > 0)[:, None], new,
+                            centers.astype(jnp.float32))
+            return (new.astype(centers.dtype), a, it + 1,
+                    jnp.all(a == prev))
+
+        a0 = jnp.full((x1.shape[0],), -2, jnp.int32)
+        centers, _, _, _ = jax.lax.while_loop(
+            cond, body, (c0, a0, jnp.int32(0), jnp.bool_(False)))
+        a, mind = assign(centers)
+        ctr, _ = assign_argmin(centers, taus)
+        ctr = jnp.where(cm1, ctr, -1)
+        safe = jnp.clip(a, 0, kp - 1)
+        lbl = jnp.where(a >= 0, ctr[safe], -1)
+        return lbl, mind, centers.astype(jnp.float32), ctr
+
+    return jax.vmap(one)(x.astype(store), centers0.astype(store), cm, pm)
+
+
 def swa_decode_attention(q: jax.Array, kw: jax.Array, vw: jax.Array,
                          bias: jax.Array, scale: float) -> jax.Array:
     """Sliding-window decode attention (one query token per sequence).

@@ -59,10 +59,12 @@ def _sds_tree(tree):
 
 
 def lower_one(arch: str, shape_name: str, multi_pod: bool, *,
-              verbose: bool = True, keep: dict | None = None):
+              verbose: bool = True, keep: dict | None = None,
+              hw: str | None = None):
     """Returns a result dict (ok or error) for one combination.
     ``keep``: optional dict that receives the lowered/compiled objects
-    (used by perf_probe)."""
+    (used by perf_probe). ``hw``: named hardware profile for the
+    roofline terms (None = REPRO_HW_PROFILE / tpu_v5e)."""
     t0 = time.time()
     shape = SHAPES[shape_name]
     if (arch, shape_name) in SKIPS:
@@ -150,7 +152,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool, *,
     except Exception:
         jfl = {}
         flops_eff = flops
-    terms = roofline_terms(flops_eff, bytes_accessed, cbytes)
+    terms = roofline_terms(flops_eff, bytes_accessed, cbytes, hw=hw)
     hlo_total_flops = flops * chips
     mem_fields = {}
     if mem is not None:
@@ -219,6 +221,11 @@ def main():
                                                          "both"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None)
+    from repro.launch.roofline import HW_PROFILES
+    ap.add_argument("--hw-profile", default=None,
+                    choices=sorted(HW_PROFILES),
+                    help="hardware profile for the roofline terms "
+                         "(default: REPRO_HW_PROFILE or tpu_v5e)")
     args = ap.parse_args()
 
     archs = list_archs() if (args.all or args.arch is None) else [args.arch]
@@ -232,7 +239,7 @@ def main():
         for shape in shapes:
             for mp in meshes:
                 try:
-                    r = lower_one(arch, shape, mp)
+                    r = lower_one(arch, shape, mp, hw=args.hw_profile)
                 except Exception as e:
                     r = {"arch": arch, "shape": shape,
                          "mesh": "multi" if mp else "single",

@@ -110,13 +110,13 @@ def lower_lloyd_baseline(mesh, axes, *, Z, n, d, k, iters=25, **_):
     return jax.jit(fn).lower(key, data)
 
 
-def analyze_one(name, lowered, mesh, verbose=True):
+def analyze_one(name, lowered, mesh, verbose=True, hw=None):
     t0 = time.time()
     compiled = lowered.compile()
     t_compile = time.time() - t0
     hc = analyze(compiled.as_text())
     terms = roofline_terms(hc["flops"] + hc.get("flops_f32", 0.0),
-                           hc["bytes"], hc["coll_bytes"])
+                           hc["bytes"], hc["coll_bytes"], hw=hw)
     mem = compiled.memory_analysis()
     chips = int(np.prod(list(mesh.shape.values())))
     rec = {
@@ -150,6 +150,11 @@ def main():
                     choices=["single", "multi", "both"])
     ap.add_argument("--out", default=None)
     ap.add_argument("--skip-baseline", action="store_true")
+    from repro.launch.roofline import HW_PROFILES
+    ap.add_argument("--hw-profile", default=None,
+                    choices=sorted(HW_PROFILES),
+                    help="hardware profile for the roofline terms "
+                         "(default: REPRO_HW_PROFILE or tpu_v5e)")
     args = ap.parse_args()
     multis = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
@@ -167,7 +172,7 @@ def main():
         for name, make in todo:
             try:
                 lowered = make(mesh, axes, **SCENARIO)
-                rec = analyze_one(name, lowered, mesh)
+                rec = analyze_one(name, lowered, mesh, hw=args.hw_profile)
             except Exception as e:
                 import traceback
                 rec = {"arch": name, "shape": "fedcluster_prod",

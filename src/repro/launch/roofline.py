@@ -2,28 +2,57 @@
 
 Terms per (arch, shape, mesh), all in seconds per step, per chip:
 
-  compute    = HLO_FLOPs            / peak_FLOPs          (197 TF bf16)
-  memory     = HLO_bytes_accessed   / HBM_bandwidth       (819 GB/s)
-  collective = collective_bytes     / ICI_link_bandwidth  (~50 GB/s/link)
+  compute    = HLO_FLOPs            / peak_FLOPs
+  memory     = HLO_bytes_accessed   / HBM_bandwidth
+  collective = collective_bytes     / ICI_link_bandwidth
 
 ``cost_analysis()`` on the compiled executable is already per-device
 (post-SPMD-partitioning). Collective bytes are NOT in cost_analysis: we
 parse the partitioned HLO and sum operand sizes of every all-gather /
 all-reduce / reduce-scatter / all-to-all / collective-permute op.
+
+Hardware constants come from named profiles (``HW_PROFILES``); pass
+``hw=`` to :func:`roofline_terms`, a profile name to
+:func:`hw_profile`, or set ``REPRO_HW_PROFILE`` (the dry-run CLIs also
+take ``--hw-profile``). The module-level ``HW`` dict remains the
+default-profile alias for back-compat.
 """
 from __future__ import annotations
 
+import os
 import re
 from collections import defaultdict
-from typing import Dict
+from typing import Dict, Optional, Union
 
 import numpy as np
 
-HW = {
-    "peak_flops": 197e12,   # TPU v5e bf16 per chip
-    "hbm_bw": 819e9,        # bytes/s per chip
-    "link_bw": 50e9,        # bytes/s per ICI link
+# Peak dense-matmul FLOPs (bf16), HBM bytes/s per chip, and bytes/s per
+# interconnect link. Public vendor numbers; "cpu_ci" is a deliberately
+# round model of the 2-core CI box so its rows are stable.
+HW_PROFILES: Dict[str, Dict[str, float]] = {
+    "tpu_v5e": {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9},
+    "tpu_v5p": {"peak_flops": 459e12, "hbm_bw": 2765e9, "link_bw": 100e9},
+    "tpu_v4": {"peak_flops": 275e12, "hbm_bw": 1228e9, "link_bw": 50e9},
+    "cpu_ci": {"peak_flops": 1e11, "hbm_bw": 10e9, "link_bw": 1e9},
 }
+DEFAULT_HW_PROFILE = "tpu_v5e"
+
+
+def hw_profile(name: Optional[str] = None) -> Dict[str, float]:
+    """Resolve a named hardware profile. ``None`` falls back to the
+    ``REPRO_HW_PROFILE`` env var, then to ``tpu_v5e``."""
+    name = name or os.environ.get("REPRO_HW_PROFILE") or DEFAULT_HW_PROFILE
+    if name not in HW_PROFILES:
+        raise KeyError(
+            f"unknown hardware profile {name!r}: accepted profiles are "
+            f"{sorted(HW_PROFILES)}")
+    return HW_PROFILES[name]
+
+
+# Back-compat alias: the historical module constant IS the default
+# profile's table (same dict object — monkeypatching HW still works for
+# callers that predate profiles).
+HW = HW_PROFILES[DEFAULT_HW_PROFILE]
 
 _DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
                 "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -69,10 +98,17 @@ def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
 
 
 def roofline_terms(flops: float, bytes_accessed: float,
-                   collective_bytes: float) -> Dict[str, float]:
-    compute = flops / HW["peak_flops"]
-    memory = bytes_accessed / HW["hbm_bw"]
-    collective = collective_bytes / HW["link_bw"]
+                   collective_bytes: float,
+                   hw: Union[None, str, Dict[str, float]] = None
+                   ) -> Dict[str, float]:
+    """Roofline time terms. ``hw``: a profile name, a profile dict, or
+    None (the ``REPRO_HW_PROFILE``/default resolution of
+    :func:`hw_profile`; historically the hardcoded v5e table)."""
+    if not isinstance(hw, dict):
+        hw = hw_profile(hw)
+    compute = flops / hw["peak_flops"]
+    memory = bytes_accessed / hw["hbm_bw"]
+    collective = collective_bytes / hw["link_bw"]
     terms = {"compute_s": compute, "memory_s": memory,
              "collective_s": collective}
     dom = max(terms, key=terms.get)

@@ -79,3 +79,39 @@ def test_main_exit_codes_and_require(tmp_path, capsys):
     assert "missing" in err and "attach_bs" in err
     # tolerance is a knob: the same drop passes at 95%
     assert main([bad, base, "--tolerance", "0.95"]) == 0
+
+
+def test_main_multi_metric(tmp_path, capsys):
+    """--metric takes a comma list (the analytic roofline gate runs
+    ai,bytes_saved_frac): each metric gates independently over the rows
+    that carry it, a regression in ANY fails, and --require prefixes
+    match against the union of compared rows."""
+    base = _write(tmp_path, "mm_base.json", _rec([
+        ("roofline_serve_fused_f32", "ai=0.80;bytes_per_pt=100"),
+        ("roofline_serve_fusion_gain", "bytes_saved_frac=0.94")]))
+    good = _write(tmp_path, "mm_good.json", _rec([
+        ("roofline_serve_fused_f32", "ai=0.79;bytes_per_pt=101"),
+        ("roofline_serve_fusion_gain", "bytes_saved_frac=0.93")]))
+    bad_ai = _write(tmp_path, "mm_bad_ai.json", _rec([
+        ("roofline_serve_fused_f32", "ai=0.40;bytes_per_pt=100"),
+        ("roofline_serve_fusion_gain", "bytes_saved_frac=0.94")]))
+    bad_frac = _write(tmp_path, "mm_bad_frac.json", _rec([
+        ("roofline_serve_fused_f32", "ai=0.80;bytes_per_pt=100"),
+        ("roofline_serve_fusion_gain", "bytes_saved_frac=0.10")]))
+
+    args = ["--metric", "ai,bytes_saved_frac", "--tolerance", "0.10"]
+    assert main([good, base] + args) == 0
+    out = capsys.readouterr().out
+    assert "[ai]" in out and "[bytes_saved_frac]" in out  # per-metric tables
+    # a regression in EITHER metric fails the gate
+    assert main([bad_ai, base] + args) == 1
+    assert "ai 0.4" in capsys.readouterr().err
+    assert main([bad_frac, base] + args) == 1
+    assert "bytes_saved_frac" in capsys.readouterr().err
+    # --require matches the union across metrics: the gain row carries
+    # no ai, but the require prefix is still satisfied via its metric
+    assert main([good, base] + args
+                + ["--require",
+                   "roofline_serve_fused,roofline_serve_fusion_gain"]) == 0
+    assert main([good, base] + args + ["--require", "nonexistent_"]) == 1
+    assert "--require" in capsys.readouterr().err

@@ -406,3 +406,56 @@ def test_admit_batch_equals_sequential_admits():
                 want[i] = s
             np.testing.assert_array_equal(got, want)
             assert granted == want_granted  # cadence counts grants
+
+
+# --------------------------------------- fused step under shard_map ---
+
+
+def test_fused_step_matches_staged_step_sharded():
+    """DESIGN.md §13 acceptance: the fused solve+attach serve step is
+    bitwise identical to the pre-fusion three-stage composition UNDER
+    THE PLANE'S OWN SHARDING — shard_mapped over the full mesh exactly
+    as ServePlane._plane_for wires it (the CI mesh job runs this at 2
+    and 8 forced devices; at 1 device both reduce to the jitted step)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.local_kmeans import batched_local_kmeans
+    from repro.fed.plane import _make_step
+    from repro.utils.compat import shard_map as _shard_map
+
+    B, n = 2 * NDEV, 48
+    cfg = _plan(batch_size=B, bucket_sizes=(n,),
+                local_kw={"approx_iters": 2, "max_iters": 7},
+                serve_axes=("data",) if NDEV > 1 else None).stream_config()
+
+    def legacy(tau, keys, data, point_mask, k_valid):
+        loc = batched_local_kmeans(keys, data, k_max=cfg.k_prime,
+                                   k_valid=k_valid, point_mask=point_mask,
+                                   **cfg.local_kw)
+        ctr = jax.vmap(lambda c, m: S.assign_new_device(c, m, tau))(
+            loc.centers, loc.center_mask)
+        labels = S.induced_labels(ctr, loc.assign)
+        return (labels, loc.centers, loc.center_mask,
+                S.core_weights(loc.core_counts))
+
+    fused = _make_step(cfg)
+    if NDEV > 1:
+        spec = P(("data",))
+        specs = dict(in_specs=(P(), spec, spec, spec, spec),
+                     out_specs=(spec, spec, spec, spec))
+        mesh = _mesh()
+        fused = _shard_map(fused, mesh=mesh, **specs)
+        legacy = _shard_map(legacy, mesh=mesh, **specs)
+
+    rng = np.random.default_rng(NDEV)
+    tau = jnp.asarray(rng.normal(size=(K, D)) * 4, jnp.float32)
+    data = jnp.asarray(rng.normal(size=(B, n, D)) * 3, jnp.float32)
+    pm = jnp.asarray(rng.random((B, n)) < 0.9)
+    kv = jnp.asarray(rng.integers(1, KP + 1, size=(B,)), jnp.int32)
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(
+        jax.random.PRNGKey(5), jnp.arange(B))
+
+    got = jax.jit(fused)(tau, keys, data, pm, kv)
+    want = jax.jit(legacy)(tau, keys, data, pm, kv)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
