@@ -1,0 +1,86 @@
+"""Drift-adaptation benchmark (DESIGN.md §14): a piecewise-stationary
+request stream — phase 1 drawn from the round's own mixture, phase 2
+from a freshly resampled mixture (same k, new means) — served by a
+frozen-tau session vs a ``drift="split_merge"`` session refreshing on
+its fold cadence. Rows report serving throughput (pts_per_s) and the
+tail mislabel rate (1 - Hungarian clustering accuracy over the second
+half of phase 2, after the drift layer has had evidence to act on);
+``drift_adaptation`` distills the comparison into one gate-able
+``mislabel_gain`` ratio (frozen/drift, > 1 means adaptation helped —
+the PR's acceptance criterion, asserted in-row like the autoscaler's
+steady-state recompile count). Both the throughput rows and the gain
+ratio are compared against the committed baseline by the CI perf gate
+(``benchmarks/compare.py``); the gain is deterministic (fixed seeds,
+no timing in its definition), so regressions in it are structural,
+never noise."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.data.gaussian import late_device_stream, structured_devices
+from repro.fed.api import FederationPlan, Session
+from repro.utils.metrics import clustering_accuracy
+
+K, KP, D = 16, 4, 24
+
+
+def _phase_stream(means, count, seed):
+    s = late_device_stream(means, KP, count, seed, n_range=(20, 60))
+    return ([r[0] for r in s], [r[1] for r in s], [r[2] for r in s])
+
+
+def _serve_phase(sess, reqs, truths, kvs, chunk):
+    """Timed chunked serve; returns (tail mislabel rate, pts/sec)."""
+    labels = []
+    t0 = time.perf_counter()
+    for lo in range(0, len(reqs), chunk):
+        labels += sess.serve(reqs[lo:lo + chunk], kvs[lo:lo + chunk])
+    dt = time.perf_counter() - t0
+    errs = [1.0 - clustering_accuracy(lbl, tr, K)
+            for lbl, tr in zip(labels, truths)]
+    tail = errs[len(errs) // 2:]  # judge after refreshes had evidence
+    pts = sum(r.shape[0] for r in reqs)
+    return float(np.mean(tail)), pts / dt, dt
+
+
+def run(full: bool):
+    chunk = 8
+    p1, p2 = (16, 96) if full else (16, 48)
+    fm = structured_devices(jax.random.PRNGKey(0), k=K, d=D, k_prime=KP,
+                            m0=4, n_per_comp_dev=25, sep=60.0)
+    rr = Session(FederationPlan(k=K, k_prime=KP, d=D)).run(
+        jax.random.PRNGKey(1), fm.data).detail
+    rng = np.random.default_rng(7)
+    new_means = rng.normal(size=(K, D)).astype(np.float32) * 40.0
+    reqs1, _, kvs1 = _phase_stream(np.asarray(fm.means), p1, 5)
+    reqs2, truths2, kvs2 = _phase_stream(new_means, p2, 11)
+    configs = (
+        ("frozen", dict(refresh_every=0)),
+        ("split_merge", dict(refresh_every=chunk, drift="split_merge",
+                             drift_half_life=4 * chunk,
+                             drift_retire_frac=0.2)),
+    )
+    rows, mis = [], {}
+    for name, kw in configs:
+        plan = FederationPlan(k=K, k_prime=KP, d=D, capacity=512,
+                              batch_size=chunk, bucket_sizes=(64,), **kw)
+        sess = Session.from_round(plan, rr)
+        # Phase 1 (stationary): compile warmup + the stale evidence the
+        # drift layer must later decay away. Untimed.
+        for lo in range(0, p1, chunk):
+            sess.serve(reqs1[lo:lo + chunk], kvs1[lo:lo + chunk])
+        m, pps, dt = _serve_phase(sess, reqs2, truths2, kvs2, chunk)
+        mis[name] = m
+        rows.append(row(
+            f"drift_serve_{name}", dt / p2 * 1e6,
+            f"pts_per_s={pps:.0f};mislabel={m:.4f};"
+            f"tau_version={sess.tau_version}"))
+    eps = 1e-3  # keep the ratio finite when drift mislabels nothing
+    gain = (mis["frozen"] + eps) / (mis["split_merge"] + eps)
+    assert mis["split_merge"] <= mis["frozen"], mis  # acceptance bar
+    rows.append(row("drift_adaptation", 0, f"mislabel_gain={gain:.2f}"))
+    return rows

@@ -30,6 +30,7 @@ BENCHES = {
     "attach": "benchmarks.bench_attach_throughput",
     "ablation_moe": "benchmarks.bench_ablation_moe",
     "roofline": "benchmarks.bench_roofline",
+    "drift": "benchmarks.bench_drift",
 }
 
 

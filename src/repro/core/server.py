@@ -62,8 +62,14 @@ def lloyd_round(x: jax.Array, fm: jax.Array, M: jax.Array, k: int, *,
     sums, cnt = ops.kmeans_update(x.astype(jnp.float32), labels, k, w)
     sums = reducer.psum(sums)
     cnt = reducer.psum(cnt)
+    # Divide by the ACTUAL mass whenever it is positive. Historically
+    # this clamped to max(cnt, 1): identical for unweighted counts and
+    # the >= 1 core-set weights, but fractional masses (decayed fold
+    # weights can land in (0, 1)) would silently shrink the mean toward
+    # the origin instead of averaging — and a zero-mass center must
+    # keep its seed coordinates, never divide 0/0 into NaN.
     tau = jnp.where((cnt > 0)[:, None],
-                    sums / jnp.maximum(cnt, 1.0)[:, None],
+                    sums / jnp.where(cnt > 0, cnt, 1.0)[:, None],
                     M.astype(jnp.float32))
     return tau, labels
 
@@ -245,11 +251,18 @@ class ServerState(NamedTuple):
     """Fold state of the asynchronous server: device reports buffered by
     device id. Because the buffer position is the device id, folding the
     same cohorts in ANY order yields the same state — and therefore a
-    bitwise-identical finalized clustering."""
+    bitwise-identical finalized clustering.
+
+    ``epoch`` timestamps each slot with the request-id epoch its report
+    was folded at (default: the id itself). It is inert metadata until a
+    finalize asks for ``decay`` — the lazy exponential down-weighting of
+    the drift layer (DESIGN.md §14) — so the fold stays one scatter and
+    non-drift paths are untouched by its presence."""
     centers: jax.Array    # (Z, k', d) buffered Theta^(z)
     mask: jax.Array       # (Z, k') center validity of received reports
     weights: jax.Array    # (Z, k') f32 per-center weights (1.0 default)
     received: jax.Array   # (Z,) bool — device has reported this round
+    epoch: jax.Array      # (Z,) i32 request-id epoch of the fold
 
 
 def init_state(Z: int, k_prime: int, d: int,
@@ -257,32 +270,38 @@ def init_state(Z: int, k_prime: int, d: int,
     return ServerState(jnp.zeros((Z, k_prime, d), dtype),
                        jnp.zeros((Z, k_prime), bool),
                        jnp.ones((Z, k_prime), jnp.float32),
-                       jnp.zeros((Z,), bool))
+                       jnp.zeros((Z,), bool),
+                       jnp.zeros((Z,), jnp.int32))
 
 
 def aggregate_incremental(state: ServerState, device_ids, centers,
-                          mask, weights=None) -> ServerState:
+                          mask, weights=None, epochs=None) -> ServerState:
     """Fold one cohort's report into the server state.
 
     device_ids: (B,) int; centers: (B, k', d); mask: (B, k'). Cohorts may
     arrive in any order and across any number of calls; re-delivery of a
-    device report is idempotent.
+    device report is idempotent. ``epochs``: optional (B,) request-id
+    epochs stamped on the slots (default: the ids themselves — correct
+    whenever the slot IS the request id; policies that remap ids to
+    slots must pass the real request ids).
     """
     ids = jnp.asarray(device_ids, jnp.int32)
     w = (jnp.ones(jnp.shape(mask), jnp.float32) if weights is None
          else weights.astype(jnp.float32))
+    e = ids if epochs is None else jnp.asarray(epochs, jnp.int32)
     # mode="drop": an id beyond the state's capacity is ignored instead
     # of clipping onto (and corrupting) the last slot — the streaming
     # service relies on over-capacity reports being served-not-folded.
     return ServerState(state.centers.at[ids].set(centers, mode="drop"),
                        state.mask.at[ids].set(mask, mode="drop"),
                        state.weights.at[ids].set(w, mode="drop"),
-                       state.received.at[ids].set(True, mode="drop"))
+                       state.received.at[ids].set(True, mode="drop"),
+                       state.epoch.at[ids].set(e, mode="drop"))
 
 
 def aggregate_incremental_sharded(state: ServerState, device_ids,
                                   centers, mask, axes,
-                                  weights=None) -> ServerState:
+                                  weights=None, epochs=None) -> ServerState:
     """The collective path of :func:`aggregate_incremental` — the fold
     of the sharded serve plane (DESIGN.md §11).
 
@@ -306,14 +325,127 @@ def aggregate_incremental_sharded(state: ServerState, device_ids,
     w = (None if weights is None
          else jax.lax.all_gather(weights.astype(jnp.float32), axes,
                                  axis=0, tiled=True))
-    return aggregate_incremental(state, ids, centers, mask, weights=w)
+    e = (None if epochs is None
+         else jax.lax.all_gather(jnp.asarray(epochs, jnp.int32), axes,
+                                 axis=0, tiled=True))
+    return aggregate_incremental(state, ids, centers, mask, weights=w,
+                                 epochs=e)
 
 
-def finalize(state: ServerState, k: int, *,
-             weighted: bool = False) -> KFedAggregate:
+# ---------------------------------------------------------------------------
+# Drift layer: lazy exponential decay + mass-driven split/retire
+# (DESIGN.md §14). Pure functions of the fold state — the hot-path
+# scatter never pays for any of this.
+# ---------------------------------------------------------------------------
+
+
+def decay_factors(epoch: jax.Array, now_epoch, half_life) -> jax.Array:
+    """Per-slot exponential decay 2^(-(now - epoch) / half_life): a slot
+    folded ``half_life`` requests ago carries half its original mass.
+    Deterministic in (epoch, now_epoch) — replays bitwise."""
+    age = (jnp.asarray(now_epoch, jnp.int32)
+           - epoch.astype(jnp.int32)).astype(jnp.float32)
+    return jnp.exp2(-age / jnp.float32(half_life))
+
+
+def decayed_evidence(state: ServerState, now_epoch, half_life):
+    """The (mask, weights) the drift finalize sees: received reports with
+    their fold weights scaled by :func:`decay_factors`. Slots whose
+    decayed weight underflows to exactly 0 are masked OUT — a zero-mass
+    center must never seed or anchor a cluster (it would divide 0/0 into
+    NaN and poison tau on the next refresh)."""
+    fac = decay_factors(state.epoch, now_epoch, half_life)
+    w = state.weights * fac[:, None]
+    mask = state.mask & state.received[:, None] & (w > 0)
+    return mask, w
+
+
+def finalize(state: ServerState, k: int, *, weighted: bool = False,
+             decay=None) -> KFedAggregate:
     """Run Algorithm 2 over every report received so far. Devices that
     never reported are masked out (their labels come out -1); attach them
-    post-hoc with :func:`attach_absent_devices`."""
-    mask = state.mask & state.received[:, None]
-    return aggregate(state.centers, mask, k,
-                     weights=state.weights if weighted else None)
+    post-hoc with :func:`attach_absent_devices`.
+
+    ``decay``: optional ``(now_epoch, half_life)`` — weight every slot by
+    its exponential age factor (always weighted; ``weighted`` then only
+    controls whether the core-count weights also participate, which they
+    do by construction since decay scales ``state.weights``)."""
+    if decay is None:
+        mask = state.mask & state.received[:, None]
+        return aggregate(state.centers, mask, k,
+                         weights=state.weights if weighted else None)
+    now_epoch, half_life = decay
+    mask, w = decayed_evidence(state, now_epoch, half_life)
+    # Zero the masked slots' coordinates as well as their weights: a
+    # zero weight alone does not neutralize non-finite garbage (0 * NaN
+    # is NaN straight through the weighted Lloyd sums).
+    centers = jnp.where(mask[..., None], state.centers,
+                        jnp.zeros_like(state.centers))
+    return aggregate(centers, mask, k, weights=w)
+
+
+def center_mass(agg: KFedAggregate, mask: jax.Array,
+                weights: jax.Array) -> jax.Array:
+    """Per-center attached fold mass: the sum of (decayed) slot weights
+    whose device centers labeled into each tau center. (k,) f32."""
+    k = agg.tau_centers.shape[0]
+    lbl = agg.center_labels.reshape(-1)
+    w = jnp.where(mask.reshape(-1) & (lbl >= 0), weights.reshape(-1), 0.0)
+    return jnp.zeros((k,), jnp.float32).at[jnp.clip(lbl, 0, k - 1)].add(w)
+
+
+def split_retire(flat: jax.Array, fm: jax.Array, agg: KFedAggregate,
+                 mass: jax.Array, k: int, *, split_factor: float,
+                 retire_frac: float, max_moves: int,
+                 weights: Optional[jax.Array] = None):
+    """Mass-driven center split/retire at a flush boundary.
+
+    Centers with mass below ``retire_frac`` of the mean are starved;
+    centers above ``split_factor`` times the mean are over-massed. Up to
+    ``max_moves`` starved centers (poorest first) are RE-SEEDED from the
+    residual report of a donor over-massed center (fattest first): the
+    donor's farthest attached report — the Algorithm 2 max-min rule
+    restricted to one cluster — becomes the new seed, then ONE
+    :func:`lloyd_round` re-anchors all k centers. Deterministic: stable
+    sorts, first-occurrence argmax, no RNG — split/retire decisions
+    replay bitwise from a checkpoint.
+
+    ``flat``: (Z*k', d) device centers; ``fm``: (Z*k',) evidence mask;
+    ``weights``: optional (Z*k',) Lloyd weights. Returns
+    ``(tau (k, d) f32, moved (k,) bool, donors (k,) i32, n_moves i32)``
+    — with zero moves ``tau`` equals ``agg.tau_centers`` exactly.
+    """
+    mass = mass.astype(jnp.float32)
+    mean = jnp.sum(mass) / jnp.float32(k)
+    starved = mass < jnp.float32(retire_frac) * mean
+    over = mass > jnp.float32(split_factor) * mean
+    n_mv = jnp.minimum(
+        jnp.minimum(jnp.sum(starved), jnp.sum(over)),
+        jnp.int32(max_moves)).astype(jnp.int32)
+
+    # Rank starved ascending by mass, donors descending; pair rank j of
+    # each with rank j of the other. jnp.argsort is stable, so ties
+    # resolve to the lowest center index — deterministic.
+    skey = jnp.where(starved, mass, jnp.inf)
+    okey = jnp.where(over, -mass, jnp.inf)
+    sorder = jnp.argsort(skey)
+    oorder = jnp.argsort(okey).astype(jnp.int32)
+    srank = jnp.zeros((k,), jnp.int32).at[sorder].set(
+        jnp.arange(k, dtype=jnp.int32))
+    donors = oorder[jnp.clip(srank, 0, k - 1)]
+    take = starved & (srank < n_mv)
+
+    # Residual re-seed: within each donor cluster, the attached report
+    # farthest from its tau center (max-min restricted to the cluster).
+    lbl = agg.center_labels.reshape(-1)
+    d2 = ops.pairwise_sq_dists(flat.astype(jnp.float32),
+                               agg.tau_centers.astype(jnp.float32))
+    attached = (lbl[:, None] == jnp.arange(k)[None, :]) & fm[:, None]
+    scores = jnp.where(attached, d2, -jnp.inf)
+    reseed_idx = jnp.argmax(scores, axis=0)                # (k,) per center
+    M1 = jnp.where(take[:, None], flat[reseed_idx[donors]],
+                   agg.tau_centers).astype(jnp.float32)
+
+    tau2, _ = lloyd_round(flat, fm, M1, k, weights=weights)
+    tau = jnp.where(n_mv > 0, tau2, agg.tau_centers.astype(jnp.float32))
+    return tau, take, jnp.where(take, donors, -1), n_mv

@@ -99,6 +99,20 @@ class FederationPlan:
                (``f32`` bitwise vs the staged step; ``bf16`` bfloat16
                storage with f32 accumulation, DESIGN.md §13),
                ``checkpoint`` the default save/restore path.
+    Drift:     ``drift`` turns the long-running service's online drift
+               adaptation on (DESIGN.md §14): ``off`` (default — every
+               path bitwise-identical to a plan without the field),
+               ``decay`` (each fold slot's weight decays by
+               2^(-age/``drift_half_life``), age in requests since its
+               fold; fully-decayed slots drop out of refreshes), or
+               ``split_merge`` (decay, plus at refresh boundaries up to
+               ``drift_max_moves`` centers starved below
+               ``drift_retire_frac`` x mean mass are retired and
+               re-seeded from the residual reports of centers above
+               ``drift_split_factor`` x mean — committed through the
+               TauBuffer as one atomic versioned bump, replayed bitwise
+               from checkpoints). Under ``weighted_reservoir`` the
+               admission key also uses the decayed mass.
     """
     k: int
     k_prime: int
@@ -119,6 +133,11 @@ class FederationPlan:
     fold_policy: str = "drop"
     policy_seed: int = 0
     serve_dtype: str = "f32"
+    drift: str = "off"
+    drift_half_life: int = 0
+    drift_split_factor: float = 2.0
+    drift_retire_frac: float = 0.1
+    drift_max_moves: int = 1
     checkpoint: Optional[str] = None
 
     def __post_init__(self):
@@ -172,6 +191,10 @@ class FederationPlan:
             weight_by_core_counts=self.weight_by_core_counts,
             fold_policy=self.fold_policy, policy_seed=self.policy_seed,
             serve_dtype=self.serve_dtype,
+            drift=self.drift, drift_half_life=self.drift_half_life,
+            drift_split_factor=self.drift_split_factor,
+            drift_retire_frac=self.drift_retire_frac,
+            drift_max_moves=self.drift_max_moves,
             local_kw=dict(self.local_kw))
 
     def with_options(self, **kw) -> "FederationPlan":

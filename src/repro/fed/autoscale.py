@@ -86,9 +86,17 @@ class QueueSnapshot(NamedTuple):
     """The DETERMINISTIC flush-boundary telemetry decisions may read:
     a pure function of the queued request stream (depth + histogram
     over the base ladder's pad rungs), so an interrupted and an
-    uninterrupted run observe identical snapshots."""
+    uninterrupted run observe identical snapshots.
+
+    ``mass`` is the drift layer's per-center decayed fold-mass
+    histogram (DESIGN.md §14) — empty when ``drift="off"``, otherwise
+    a pure function of the folded stream, so it keeps the replay
+    contract. Today's policies ignore it; it is the "state evolves at
+    flush boundaries" hook the ROADMAP's predictive-scaling item
+    needs (e.g. scale ahead of a mass-imbalance-triggered split)."""
     pending: int                              # queue depth at the boundary
     hist: Tuple[Tuple[int, int], ...]         # ascending (rung, count)
+    mass: Tuple[float, ...] = ()              # per-center decayed fold mass
 
 
 class FlushTelemetry(NamedTuple):
@@ -112,16 +120,18 @@ class AutoscaleDecision(NamedTuple):
     seq: int
 
 
-def snapshot_queue(pending_ns, base_ladder) -> QueueSnapshot:
+def snapshot_queue(pending_ns, base_ladder, mass=()) -> QueueSnapshot:
     """Histogram the queued point counts over the base ladder's rungs
     (geometric rungs above the top) — the controller's one view of the
-    queue."""
+    queue. ``mass``: the drift layer's per-center fold-mass histogram
+    (empty outside drift mode)."""
     hist: Dict[int, int] = {}
     for n in pending_ns:
         b = bucket_of(int(n), tuple(base_ladder))
         hist[b] = hist.get(b, 0) + 1
     return QueueSnapshot(pending=len(pending_ns),
-                         hist=tuple(sorted(hist.items())))
+                         hist=tuple(sorted(hist.items())),
+                         mass=tuple(float(m) for m in mass))
 
 
 def pow2_ceil(x: int) -> int:

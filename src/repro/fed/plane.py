@@ -266,13 +266,15 @@ class ServePlane:
                 in_specs=(P(), spec, spec, spec, spec),
                 out_specs=(spec, spec, spec, spec))
 
-            def fold_sharded(state, slots, centers, cmask, weights):
+            def fold_sharded(state, slots, centers, cmask, weights,
+                             epochs):
                 return server.aggregate_incremental_sharded(
-                    state, slots, centers, cmask, axes, weights=weights)
+                    state, slots, centers, cmask, axes, weights=weights,
+                    epochs=epochs)
 
             fold_mesh = jax.jit(_shard_map(
                 fold_sharded, mesh=mesh,
-                in_specs=(P(), spec, spec, spec, spec),
+                in_specs=(P(), spec, spec, spec, spec, spec),
                 out_specs=P()))
             entry = (jax.jit(step_sharded), fold_mesh,
                      NamedSharding(mesh, spec),
@@ -323,18 +325,26 @@ class ServePlane:
         return jnp.asarray(x)
 
     def fold(self, state, slots, centers, cmask, weights=None,
-             shards=None):
+             shards=None, epochs=None):
         """Scatter one batch of already-admitted reports into the
         replicated fold state. ``slots``: (B,) int32, entries >= the
         state capacity are dropped (declined / padding / within-batch
         evictions). ``shards`` is the flush decision's active count;
         with the default (None), only the steady plan-shaped batch
         rides the mesh — other lengths (e.g. round seeding) take the
-        single-host scatter, as before the controller existed."""
+        single-host scatter, as before the controller existed.
+        ``epochs``: optional (B,) request-id epochs stamped on the
+        slots for the drift layer (default: the slot ids, matching
+        ``aggregate_incremental``)."""
         if weights is None:
             # The explicit form of aggregate_incremental's default —
             # same scattered values, one jit signature for both cases.
             weights = jnp.ones(jnp.shape(cmask), jnp.float32)
+        if epochs is None:
+            # Likewise the explicit epochs default (the slot ids).
+            epochs = jnp.asarray(slots, jnp.int32)
+        else:
+            epochs = jnp.asarray(epochs, jnp.int32)
         B = int(slots.shape[0])
         if shards is None:
             s = self.n_shards if B == self.cfg.batch_size else 1
@@ -348,7 +358,8 @@ class ServePlane:
             # a no-op whenever the count is unchanged, one transfer per
             # switch otherwise.
             state = jax.device_put(state, state_sh)
-            return fold_mesh(state, slots, centers, cmask, weights)
+            return fold_mesh(state, slots, centers, cmask, weights,
+                             epochs)
         self._count("fold", 1, (B,) + tuple(centers.shape[1:]))
         if self.axes:
             # Same stranding in the other direction: a sharded-plane
@@ -356,7 +367,7 @@ class ServePlane:
             state = jax.device_put(state,
                                    self.mesh.devices.flatten()[0])
         return server.aggregate_incremental(state, slots, centers, cmask,
-                                            weights=weights)
+                                            weights=weights, epochs=epochs)
 
     def describe(self) -> dict:
         return {"serve_axes": list(self.axes) if self.axes else None,

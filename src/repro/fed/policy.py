@@ -77,7 +77,14 @@ class FoldPolicy:
         decisions — this is what makes the sharded fold state (and a
         checkpoint written by either plane) bitwise interchangeable.
         """
-        slots = np.full((len(rids),), -1, np.int64)
+        # Record only the FINAL owner of every slot and rebuild the
+        # vector from that map at the end. The earlier in-place rule
+        # (zap slots[prev] when slot is re-granted, then write
+        # slots[i]) could leave a stale alias behind on degenerate
+        # batches — e.g. every row a duplicate of one hot id bouncing
+        # through the same slot — double-scattering a live slot. An
+        # owner map cannot alias: each slot appears at most once by
+        # construction.
         owner: Dict[int, int] = {}      # slot -> batch index holding it
         granted = 0
         for i, rid in enumerate(rids):
@@ -86,10 +93,9 @@ class FoldPolicy:
             if slot is None:
                 continue
             granted += 1
-            prev = owner.get(slot)
-            if prev is not None:        # within-batch eviction
-                slots[prev] = -1
-            owner[slot] = i
+            owner[slot] = i             # within-batch eviction = rebind
+        slots = np.full((len(rids),), -1, np.int64)
+        for slot, i in owner.items():
             slots[i] = slot
         return slots, granted
 
@@ -197,21 +203,37 @@ class WeightedReservoirPolicy(FoldPolicy):
     (property-tested): the held set equals the exact top-``capacity``
     of all distinct ids by (key, id), independent of arrival order;
     re-delivery of a held id keeps its slot.
+
+    With ``half_life`` > 0 (the drift layer, DESIGN.md §14) the
+    effective A-ES weight is the DECAYED fold mass
+    w * 2^(-rid / half_life): the key becomes u^(1/(w * 2^(-rid/h))),
+    computed in the log domain as log(u) * 2^(rid/h) / w so late (large
+    rid) requests never underflow. The log map is monotone, so the
+    bigger-is-better ordering — and every tie rule below — is
+    unchanged; ``half_life=0`` reproduces the undecayed key bitwise.
     """
 
     name = "weighted_reservoir"
     needs_weight = True
     _EPS = 1e-9
 
-    def __init__(self, capacity: int, seed: int = 0):
+    def __init__(self, capacity: int, seed: int = 0, half_life: int = 0):
         super().__init__(capacity)
         self.seed = int(seed)
+        self.half_life = int(half_life)
         self._slot_rid = np.full((self.capacity,), -1, np.int64)
         self._slot_key = np.full((self.capacity,), -np.inf, np.float64)
         self._index: Dict[int, int] = {}
 
     def key_of(self, rid: int, weight: float) -> float:
         u = np.random.default_rng((self.seed, int(rid))).random()
+        if self.half_life > 0:
+            # log-domain decayed key: log(u) < 0 scaled by 2^(-rid/h) —
+            # recent (large rid) ids shrink toward 0 (the top of the
+            # bigger-is-better order), old ones sink. Equivalent to
+            # u^(1/(w * 2^(rid/h))) without its overflow at large rid.
+            return float(np.log(u) * np.exp2(-float(rid) / self.half_life)
+                         / max(float(weight), self._EPS))
         return float(u ** (1.0 / max(float(weight), self._EPS)))
 
     def admit(self, rid: int, weight: float = 1.0) -> Optional[int]:
@@ -262,11 +284,13 @@ POLICIES = {
 POLICY_IDS = {"drop": 0, "lru": 1, "weighted_reservoir": 2}
 
 
-def make_policy(name: str, capacity: int, *, seed: int = 0) -> FoldPolicy:
+def make_policy(name: str, capacity: int, *, seed: int = 0,
+                half_life: int = 0) -> FoldPolicy:
     if name not in POLICIES:
         raise ValueError(
             f"fold_policy={name!r}: accepted values are "
             f"{sorted(POLICIES)}")
     if name == "weighted_reservoir":
-        return WeightedReservoirPolicy(capacity, seed=seed)
+        return WeightedReservoirPolicy(capacity, seed=seed,
+                                       half_life=half_life)
     return POLICIES[name](capacity)

@@ -59,7 +59,7 @@ from __future__ import annotations
 import time
 import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,6 +77,14 @@ from repro.utils.deprecation import warn_legacy
 
 REFRESH_MODES = ("sync", "async")
 
+DRIFT_MODES = ("off", "decay", "split_merge")
+
+# Stable numeric codes for the v4 checkpoint schema (npz stores no
+# strings): a drift-enabled checkpoint's fold epochs, mass histogram
+# and split/retire counters are only meaningful under the drift mode
+# that wrote them.
+DRIFT_IDS = {"off": 0, "decay": 1, "split_merge": 2}
+
 
 class ReproPerfWarning(UserWarning):
     """A configuration is costing performance without affecting results
@@ -89,6 +97,16 @@ class ReproPerfWarning(UserWarning):
 class StreamConfigError(ValueError):
     """A StreamConfig field failed validation (named, with accepted
     values) — raised at construction, never deep inside tracing."""
+
+
+class _ServerStateV3(NamedTuple):
+    """Restore template for pre-v4 checkpoints: the fold state before
+    the drift layer's epoch stamps, with the SAME field names (and so
+    the same flattened "server/.<field>" key paths)."""
+    centers: jax.Array
+    mask: jax.Array
+    weights: jax.Array
+    received: jax.Array
 
 
 def _bad(fieldname: str, got, accepted: str) -> None:
@@ -113,6 +131,11 @@ class StreamConfig:
     fold_policy: str = "drop"   # admission: drop | lru | weighted_reservoir
     policy_seed: int = 0        # weighted_reservoir key seed
     serve_dtype: str = "f32"    # fused-step storage: f32 (bitwise) | bf16
+    drift: str = "off"          # drift adaptation: off|decay|split_merge
+    drift_half_life: int = 0    # decay half-life in REQUESTS (>= 1 on)
+    drift_split_factor: float = 2.0   # split centers above this x mean mass
+    drift_retire_frac: float = 0.1    # retire centers below this x mean mass
+    drift_max_moves: int = 1    # split/retire moves per flush boundary
     local_kw: dict = field(default_factory=dict)  # Algorithm 1 options
 
     def __post_init__(self):
@@ -159,6 +182,24 @@ class StreamConfig:
             _bad("policy_seed", self.policy_seed,
                  "must be a non-negative int (seeds the "
                  "weighted_reservoir keys)")
+        if self.drift not in DRIFT_MODES:
+            _bad("drift", self.drift,
+                 f"accepted values are {list(DRIFT_MODES)}")
+        if self.drift != "off" and (
+                not isinstance(self.drift_half_life, int)
+                or self.drift_half_life < 1):
+            _bad("drift_half_life", self.drift_half_life,
+                 "must be an int >= 1 (requests) when drift is enabled")
+        if not float(self.drift_split_factor) > 1.0:
+            _bad("drift_split_factor", self.drift_split_factor,
+                 "must be > 1.0 (multiples of the mean center mass)")
+        if not 0.0 <= float(self.drift_retire_frac) < 1.0:
+            _bad("drift_retire_frac", self.drift_retire_frac,
+                 "must be in [0.0, 1.0) (fraction of the mean mass)")
+        if not isinstance(self.drift_max_moves, int) \
+                or self.drift_max_moves < 1:
+            _bad("drift_max_moves", self.drift_max_moves,
+                 "must be an int >= 1 (split/retire moves per boundary)")
         from repro.kernels.ref import SOLVE_ATTACH_DTYPES
         if self.serve_dtype not in SOLVE_ATTACH_DTYPES:
             _bad("serve_dtype", self.serve_dtype,
@@ -198,8 +239,9 @@ class AttachService:
         self.state = (server.init_state(cfg.capacity, cfg.k_prime, cfg.d)
                       if state is None
                       else jax.tree.map(jnp.asarray, state))
-        self.policy = policy or make_policy(cfg.fold_policy, cfg.capacity,
-                                            seed=cfg.policy_seed)
+        self.policy = policy or make_policy(
+            cfg.fold_policy, cfg.capacity, seed=cfg.policy_seed,
+            half_life=(cfg.drift_half_life if cfg.drift != "off" else 0))
         # The §12 load-adaptive controller: one decision per non-empty
         # flush, against the devices serve_axes granted. With
         # autoscale="off" its (static) decision reproduces the
@@ -218,7 +260,19 @@ class AttachService:
         self._pending: List[Tuple[int, np.ndarray, int]] = []
         # served, not yet delivered: rid -> (labels, tau version)
         self._done: Dict[int, Tuple[np.ndarray, int]] = {}
-        self._oversized_warned = False
+        # Warn-once latch keyed on (active ladder, rung): a global bool
+        # here either re-fired every flush or went silent for a NEW
+        # coalesced ladder after an autoscale switch — each distinct
+        # oversized pad shape warns exactly once.
+        self._oversized_warned: set = set()
+        # Drift bookkeeping (schema v4): per-center decayed fold mass
+        # at the last refresh, and the split/retire decision counters —
+        # all pure functions of the folded stream, so they replay
+        # bitwise from a checkpoint.
+        self._drift_mass = np.zeros((cfg.k,), np.float32)
+        self._drift_events = 0    # boundaries that moved >= 1 center
+        self._drift_moves = 0     # total split/retire moves
+        self._drift_last = 0      # moves at the most recent boundary
 
     # ------------------------------------------------------------- build --
 
@@ -285,9 +339,12 @@ class AttachService:
         (doubling) buckets above the top rung bound the distinct jitted
         pad shapes to O(log n_max / top) instead of one recompile per
         distinct rounded-up n."""
-        b = bucket_of(n, ladder or self.cfg.bucket_sizes)
-        if n > self.cfg.bucket_sizes[-1] and not self._oversized_warned:
-            self._oversized_warned = True
+        lad = tuple(ladder or self.cfg.bucket_sizes)
+        b = bucket_of(n, lad)
+        key = (lad, b)
+        if n > self.cfg.bucket_sizes[-1] \
+                and key not in self._oversized_warned:
+            self._oversized_warned.add(key)
             warnings.warn(
                 f"attach request with n={n} points exceeds the largest "
                 f"configured bucket ({self.cfg.bucket_sizes[-1]}); "
@@ -327,9 +384,14 @@ class AttachService:
         if pending and self.cfg.autoscale != "off":
             # "off" never reads the snapshot — skip building it so the
             # default configuration keeps the pre-controller flush cost.
+            # Under drift the snapshot also carries the last refresh's
+            # per-center mass histogram (deterministic — it evolves at
+            # flush boundaries only), the predictive-scaling hook.
             decision = self.autoscaler.observe(snapshot_queue(
                 [item[1].shape[0] for item in pending],
-                self.cfg.bucket_sizes))
+                self.cfg.bucket_sizes,
+                mass=(tuple(float(m) for m in self._drift_mass)
+                      if self.cfg.drift != "off" else ())))
         buckets: Dict[int, list] = {}
         for item in pending:
             buckets.setdefault(
@@ -468,9 +530,17 @@ class AttachService:
         slots, granted = self.policy.admit_padded(rids, dev_w,
                                                   total=total)
         if granted:
+            # Stamp each admitted slot with its REQUEST id (the epoch
+            # the drift decay is keyed to) — under lru/reservoir the
+            # slot and the request id diverge, so the default
+            # epochs=slots would mis-age recycled slots. Padding rows
+            # carry sentinel slots and never scatter.
+            ep = np.zeros((len(slots),), np.int64)
+            ep[:len(rids)] = np.asarray(rids, np.int64)
             self.state = self.plane.fold(
                 self.state, jnp.asarray(slots, jnp.int32),
-                centers, cmask, weights=fold_w, shards=shards)
+                centers, cmask, weights=fold_w, shards=shards,
+                epochs=jnp.asarray(ep, jnp.int32))
         return granted
 
     def _fold(self, batch, rids, centers, cmask, weights, shards=None):
@@ -492,15 +562,66 @@ class AttachService:
 
     # ----------------------------------------------------------- refresh --
 
+    def _refinalize(self):
+        """THE re-finalization shared by the sync and async refresh:
+        Algorithm 2 over every folded report, with the drift layer on
+        top when configured (DESIGN.md §14).
+
+        * ``drift="off"`` — exactly the historical finalize call
+          (bitwise: decay never touches the math).
+        * ``drift="decay"`` — every slot's fold weight is scaled by
+          2^(-age/half_life) (age = requests since its fold, from the
+          slot's epoch stamp); fully-decayed slots are masked out so a
+          zero mass can never divide into NaN tau. The per-center
+          attached mass histogram is recomputed here — the flush
+          boundary is where drift state evolves.
+        * ``drift="split_merge"`` — additionally, starved centers
+          (mass < retire_frac x mean) are retired and re-seeded from
+          the residual reports of over-massed centers
+          (mass > split_factor x mean), max-min style, followed by one
+          ``server.lloyd_round`` — all deterministic, so the decision
+          sequence replays bitwise from a checkpoint.
+
+        Returns ``(agg, tau)`` — ``tau`` is what the caller commits
+        through the TauBuffer (one atomic versioned bump either way).
+        """
+        cfg = self.cfg
+        if cfg.drift == "off":
+            agg = server.finalize(self.state, cfg.k,
+                                  weighted=cfg.weight_by_core_counts)
+            return agg, agg.tau_centers
+        decay = (self._next_id, cfg.drift_half_life)
+        agg = server.finalize(self.state, cfg.k, decay=decay)
+        mask, w = server.decayed_evidence(self.state, *decay)
+        mass = server.center_mass(agg, mask, w)
+        tau = agg.tau_centers
+        if cfg.drift == "split_merge":
+            st = self.state
+            # Same sanitization finalize applies: masked slots carry no
+            # evidence, so their (possibly garbage) coordinates must
+            # not reach the re-seed distances or the Lloyd round.
+            flat = jnp.where(mask[..., None], st.centers,
+                             jnp.zeros_like(st.centers)
+                             ).reshape(-1, cfg.d).astype(jnp.float32)
+            tau, _, _, n_mv = server.split_retire(
+                flat, mask.reshape(-1), agg, mass, cfg.k,
+                split_factor=cfg.drift_split_factor,
+                retire_frac=cfg.drift_retire_frac,
+                max_moves=cfg.drift_max_moves, weights=w.reshape(-1))
+            moves = int(np.asarray(n_mv))
+            self._drift_events += 1 if moves else 0
+            self._drift_moves += moves
+            self._drift_last = moves
+        self._drift_mass = np.asarray(mass, np.float32)
+        return agg, tau
+
     def refresh(self) -> server.KFedAggregate:
         """Re-finalize Algorithm 2 over every folded report (round
         devices + streamed attachments) and swap in the new tau centers
         NOW (one atomic version bump). tau is a traced argument of the
         serve step, so no recompile."""
-        agg = server.finalize(self.state, self.cfg.k,
-                              weighted=self.cfg.weight_by_core_counts)
-        self._taubuf = self._taubuf.swap_now(
-            self.plane.localize(agg.tau_centers))
+        agg, tau = self._refinalize()
+        self._taubuf = self._taubuf.swap_now(self.plane.localize(tau))
         self._since_refresh = 0
         return agg
 
@@ -509,10 +630,8 @@ class AttachService:
         (jax dispatches the re-finalization asynchronously, so serving
         against the active buffer continues while it computes) and
         defer the version-bump swap to the next flush boundary."""
-        agg = server.finalize(self.state, self.cfg.k,
-                              weighted=self.cfg.weight_by_core_counts)
-        self._taubuf = self._taubuf.stage(
-            self.plane.localize(agg.tau_centers))
+        _, tau = self._refinalize()
+        self._taubuf = self._taubuf.stage(self.plane.localize(tau))
         self._since_refresh = 0
 
     # -------------------------------------------------------- checkpoint --
@@ -524,11 +643,13 @@ class AttachService:
 
     def save(self, path: str) -> str:
         """Checkpoint both tau buffers + version, fold state, counters,
-        admission-policy identity/state, and — schema v3 — the
-        autoscale controller's decision state next to ``tau_meta``, so
-        a restore replays labels, tau versions, AND scaling decisions
-        bitwise (npz via ``checkpoint.store``). Pending requests are
-        not persisted."""
+        admission-policy identity/state, the autoscale controller's
+        decision state (schema v3), and — schema v4 — the drift mode,
+        its split/retire counters and the per-center mass histogram
+        (the fold state's epoch stamps ride inside ``server``), so a
+        restore replays labels, tau versions, scaling decisions AND
+        split/retire decisions bitwise (npz via ``checkpoint.store``).
+        Pending requests are not persisted."""
         from repro.fed.policy import POLICY_IDS
         return save_pytree(path, {
             "tau_bufs": self._taubuf.bufs,
@@ -540,6 +661,11 @@ class AttachService:
             "policy": self.policy.state_arrays(),
             "autoscale_id": np.asarray(AUTOSCALE_IDS[self.cfg.autoscale],
                                        np.int64),
+            "drift_id": np.asarray(DRIFT_IDS[self.cfg.drift], np.int64),
+            "drift_state": np.asarray(
+                [self._drift_events, self._drift_moves,
+                 self._drift_last], np.int64),
+            "drift_mass": np.asarray(self._drift_mass, np.float32),
             **self.autoscaler.state_arrays()})
 
     @classmethod
@@ -552,13 +678,18 @@ class AttachService:
     def _restore(cls, path: str, cfg: StreamConfig, *, mesh=None,
                  serve_axes=None) -> "AttachService":
         from repro.fed.policy import POLICY_IDS
-        policy = make_policy(cfg.fold_policy, cfg.capacity,
-                             seed=cfg.policy_seed)
+        policy = make_policy(
+            cfg.fold_policy, cfg.capacity, seed=cfg.policy_seed,
+            half_life=(cfg.drift_half_life if cfg.drift != "off" else 0))
         # ONE open reads every generation-specific extra; presence of
-        # "tau_bufs" doubles as the v1-vs-v2 schema probe.
+        # "tau_bufs" doubles as the v1-vs-v2 schema probe,
+        # "server/.epoch" (the fold state's epoch stamps) as the v4
+        # server probe.
         extras = load_extras(path, ("policy_id", "autoscale_id",
                                     "autoscale_state",
-                                    "autoscale_ladder", "tau_bufs"))
+                                    "autoscale_ladder", "tau_bufs",
+                                    "drift_id", "drift_state",
+                                    "drift_mass", "server/.epoch"))
         # Refuse a policy mismatch up front (named error, not a bare
         # KeyError / silent state corruption): the checkpoint's slot
         # bookkeeping is only meaningful under the policy that wrote
@@ -586,12 +717,33 @@ class AttachService:
                     f"StreamConfig.autoscale={cfg.autoscale!r} does not "
                     f"match the checkpoint at {path!r}, which was saved "
                     f"under autoscale={names.get(saved_as, saved_as)!r}")
+        # Schema v4 carries the drift mode + state. Pre-v4 checkpoints
+        # restore under ANY drift config with drift state
+        # default-initialized (drift is strictly additive); a v4
+        # checkpoint refuses a drift-mode mismatch — the fold epochs,
+        # mass histogram and split/retire counters are only meaningful
+        # under the mode that wrote them.
+        if "drift_id" in extras:
+            saved_dr = int(extras["drift_id"])
+            if saved_dr != DRIFT_IDS[cfg.drift]:
+                names = {v: n for n, v in DRIFT_IDS.items()}
+                raise StreamConfigError(
+                    f"StreamConfig.drift={cfg.drift!r} does not match "
+                    f"the checkpoint at {path!r}, which was saved under "
+                    f"drift={names.get(saved_dr, saved_dr)!r}")
         # Schema v2 carries the double-buffered tau; v1 (pre-plane)
         # checkpoints hold one tau — restored as version 0 with both
         # buffers equal, so old checkpoints keep replaying bitwise.
         v2 = "tau_bufs" in extras
+        # Pre-v4 archives hold a 4-field server state (no epoch
+        # stamps): load those leaves through a template with the SAME
+        # attribute key paths ("server/.centers" ...) and default the
+        # epochs to zero.
+        v4srv = "server/.epoch" in extras
+        srv_like = server.init_state(cfg.capacity, cfg.k_prime, cfg.d)
         like = {
-            "server": server.init_state(cfg.capacity, cfg.k_prime, cfg.d),
+            "server": (srv_like if v4srv
+                       else _ServerStateV3(*tuple(srv_like)[:4])),
             "counters": np.zeros((5,), np.int64),
             "policy": policy.state_like(),
         }
@@ -607,9 +759,12 @@ class AttachService:
             policy.load_state(tree["policy"])
         taubuf = (TauBuffer.from_arrays(tree["tau_bufs"], tree["tau_meta"])
                   if v2 else TauBuffer.fresh(tree["tau"]))
+        srv = (tree["server"] if v4srv else server.ServerState(
+            *tree["server"],
+            jnp.zeros((cfg.capacity,), jnp.int32)))
         cnt = np.asarray(tree["counters"])
         svc = cls(cfg, taubuf.tau, tau_buffer=taubuf,
-                  state=tree["server"], policy=policy,
+                  state=srv, policy=policy,
                   seed=int(cnt[4]), next_id=int(cnt[0]),
                   since_refresh=int(cnt[1]), served_devices=int(cnt[2]),
                   served_points=int(cnt[3]), mesh=mesh,
@@ -617,6 +772,15 @@ class AttachService:
         if "autoscale_state" in extras:
             svc.autoscaler.load_state(extras["autoscale_state"],
                                       extras["autoscale_ladder"])
+        if "drift_state" in extras:
+            ds = np.asarray(extras["drift_state"], np.int64)
+            svc._drift_events = int(ds[0])
+            svc._drift_moves = int(ds[1])
+            svc._drift_last = int(ds[2])
+        if "drift_mass" in extras:
+            dm = np.asarray(extras["drift_mass"], np.float32)
+            if dm.shape == (cfg.k,):
+                svc._drift_mass = dm.copy()
         return svc
 
     # ------------------------------------------------------------- stats --
@@ -634,5 +798,13 @@ class AttachService:
             "tau_version": self._taubuf.version,
             "refresh_pending": self._taubuf.pending,
             "autoscale": self.autoscaler.stats(),
+            "drift": {
+                "mode": self.cfg.drift,
+                "half_life": self.cfg.drift_half_life,
+                "events": self._drift_events,
+                "moves": self._drift_moves,
+                "last_moves": self._drift_last,
+                "mass": [float(m) for m in self._drift_mass],
+            },
             **self.plane.describe(),
         }

@@ -327,6 +327,47 @@ def test_property_weighted_reservoir_exact_topk(cap, n, seed):
         assert pol.admit(r0, w_of[r0]) == s0
 
 
+@settings(max_examples=15, deadline=None)
+@given(cap=st.integers(1, 6), n=st.integers(1, 24),
+       seed=st.integers(0, 2 ** 16), pol_i=st.integers(0, 2))
+def test_property_admit_padded_sentinel_never_aliases(cap, n, seed,
+                                                      pol_i):
+    """Degenerate-batch sentinel contract (bugfix): for ANY batch —
+    including one that is entirely duplicates of a single hot request
+    id, or fully declined — the padded slot vector contains each live
+    slot at most ONCE, every declined/padding row is exactly the
+    out-of-capacity sentinel, and the slots granted match a sequential
+    admit-then-fold oracle's final occupancy."""
+    name = ["drop", "lru", "weighted_reservoir"][pol_i]
+    rng = np.random.default_rng((cap, n, seed, 3))
+    batches = [rng.integers(0, 2 * cap + 4, size=n),       # generic
+               np.full((n,), int(rng.integers(0, 2 * cap)))]  # all-hot
+    for rids in batches:
+        w = rng.uniform(0.1, 10.0, size=n)
+        pol = make_policy(name, cap, seed=seed)
+        oracle = make_policy(name, cap, seed=seed)
+        total = n + int(rng.integers(0, 4))
+        full, granted = pol.admit_padded(rids, w, total=total)
+        # oracle: sequential admits into a dict fold state
+        fold = {}
+        o_granted = 0
+        for r, wi in zip(rids, w):
+            s = oracle.admit(int(r), float(wi))
+            if s is not None:
+                o_granted += 1
+                fold[s] = int(r)
+        assert granted == o_granted
+        assert full.shape == (total,)
+        live = full[full < cap]
+        assert len(set(live.tolist())) == len(live)   # no aliasing
+        assert np.all(full[(full >= cap)] == cap)     # sentinel exact
+        assert np.all(full[n:] == cap)                # padding rows
+        # executing the vector as one scatter lands the oracle's state
+        got = {int(full[i]): int(rids[i]) for i in range(n)
+               if full[i] < cap}
+        assert got == fold
+
+
 @pytest.mark.parametrize("policy", ["lru", "weighted_reservoir"])
 def test_policy_service_respects_capacity_and_checkpoints(
         fixture_data, tmp_path, policy):

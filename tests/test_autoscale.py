@@ -22,6 +22,8 @@ so shard-count switching is exercised on both a cramped and a roomy
 grant; on one device the controller degenerates to batch/ladder
 scaling only and every assertion still pins it.
 """
+import warnings
+
 import numpy as np
 import pytest
 
@@ -267,6 +269,43 @@ def test_oversized_coalesce_end_to_end(fixture_round):
     assert ladder[1] >= max(r.shape[0] for r in reqs)
 
 
+def test_oversized_warning_latches_per_ladder_rung(fixture_round):
+    """The oversized-pad warning latches on the (active ladder, rung)
+    pair, not a session-wide bool (bugfix): repeats of an already-
+    warned shape are silent, a different rung warns once, and when the
+    autoscaler COALESCES the ladder the re-bucketed shape warns once
+    more under its new key — the old latch stayed silent forever after
+    the first oversized request, hiding every later re-bucket."""
+    fm, rr = fixture_round
+    reqs, kvs = _requests(fm, 4, seed=21, n_range=(60, 61))
+    big, bkv = _requests(fm, 2, seed=23, n_range=(130, 131))
+    # static ladder: keyed per RUNG
+    sess = Session.from_round(_plan(bucket_sizes=(32,)), rr)
+    with pytest.warns(ReproPerfWarning, match="largest configured"):
+        sess.serve(reqs[:1], kvs[:1])           # rung 64: warns once
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ReproPerfWarning)
+        sess.serve(reqs[1:2], kvs[1:2])         # same key: latched
+    with pytest.warns(ReproPerfWarning, match="largest configured"):
+        sess.serve(big[:1], bkv[:1])            # rung 256: new key
+    # autoscale coalesce: keyed per LADDER too
+    auto = Session.from_round(
+        _plan(bucket_sizes=(32,), autoscale="throughput"), rr)
+    with pytest.warns(ReproPerfWarning, match="largest configured"):
+        auto.serve(reqs[:1], kvs[:1])           # ladder (32, 64)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ReproPerfWarning)
+        auto.serve(reqs[1:2], kvs[1:2])         # same key: latched
+    with pytest.warns(ReproPerfWarning, match="largest configured"):
+        # multi-rung backlog coalesces the ladder; n=60 re-buckets to
+        # the coalesced rung -> a NEW (ladder, rung) key warns again
+        auto.serve([reqs[2], big[0]], [kvs[2], bkv[0]])
+    assert len(auto.stats()["autoscale"]["ladder"]) == 2
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ReproPerfWarning)
+        auto.serve([reqs[3], big[1]], [kvs[3], bkv[1]])  # latched anew
+
+
 def test_plane_rejects_out_of_grant_shards(fixture_round):
     fm, rr = fixture_round
     sess = Session.from_round(_plan(), rr)
@@ -423,6 +462,42 @@ def test_v3_checkpoint_schema_and_mismatch_error(fixture_round,
             == sess.service.autoscaler.decision)
     with pytest.raises(StreamConfigError, match="autoscale"):
         Session.restore(path, _plan(autoscale="throughput"))
+
+
+def test_v3_autoscale_checkpoint_restores_under_drift(fixture_round,
+                                                      tmp_path):
+    """A true v3 archive (autoscale decision state, 4-field pre-drift
+    server, no epoch stamps) restores into an autoscaled AND
+    drift-enabled v4 plan: the decision state replays bitwise while
+    the drift layer starts from defaults, and serving continues with
+    the labels the source session produces."""
+    from repro.checkpoint.store import save_pytree
+    from repro.fed.policy import POLICY_IDS
+    from repro.fed.stream import AUTOSCALE_IDS, _ServerStateV3
+    fm, rr = fixture_round
+    src = Session.from_round(_plan(autoscale="latency"), rr)
+    reqs, kvs = _requests(fm, 5, seed=29)
+    _serve_depths(src, reqs, kvs, [2, 3])
+    svc = src.service
+    path = str(tmp_path / "v3_drift.npz")
+    save_pytree(path, {
+        "tau_bufs": svc._taubuf.bufs,
+        "tau_meta": svc._taubuf.meta_array(),
+        "server": _ServerStateV3(svc.state.centers, svc.state.mask,
+                                 svc.state.weights, svc.state.received),
+        "counters": svc._counters(),
+        "policy_id": np.asarray(POLICY_IDS["drop"], np.int64),
+        "policy": {},
+        "autoscale_id": np.asarray(AUTOSCALE_IDS["latency"], np.int64),
+        **svc.autoscaler.state_arrays()})
+    rep = Session.restore(path, _plan(autoscale="latency", drift="decay",
+                                      drift_half_life=64))
+    assert rep.service.autoscaler.decision == svc.autoscaler.decision
+    dstats = rep.stats()["drift"]
+    assert dstats["mode"] == "decay" and dstats["events"] == 0
+    more, mkv = _requests(fm, 4, seed=31)
+    for a, b in zip(src.serve(more, mkv), rep.serve(more, mkv)):
+        np.testing.assert_array_equal(a, b)
 
 
 def test_v1_and_v2_checkpoints_restore_under_autoscale(fixture_round,

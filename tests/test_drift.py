@@ -1,0 +1,373 @@
+"""The online drift layer (core/server.py decay + split/retire over
+fed/stream.py, DESIGN.md §14).
+
+Covers the drift subsystem's four promises:
+
+  * the decay is LAZY — the hot-path fold stays one scatter; the
+    exponential age factor (and the zero-mass mask-out that keeps a
+    fully-decayed or never-filled slot from dividing NaN into tau) is
+    applied only at finalize, as a pure function of the persisted
+    (epoch, next request id) pair;
+  * split/retire decisions are deterministic functions of the decayed
+    per-center mass histogram (stable sorts, first-occurrence argmax,
+    no RNG), committed through the TauBuffer as one atomic versioned
+    bump — so they replay bitwise from a mid-stream checkpoint
+    (property test, the acceptance criterion);
+  * ``drift="off"`` (the default) is strictly additive: the decay
+    branch is never entered and every pre-drift code path is bitwise
+    untouched (the rest of the tier-1 suite pins this);
+  * under a piecewise-stationary stream the adapted tau tracks the new
+    phase where a frozen tau keeps serving the stale snapshot.
+
+The mesh matrix (ci.yml, {2,8} forced host devices) runs this file too:
+the sharded-parity test pins that a drift-enabled sharded serve plane
+folds epoch stamps bitwise-identically to the single-host plane.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hyp import given, settings, st
+
+from repro.core import server as S
+from repro.data.gaussian import late_device_stream, structured_devices
+from repro.fed.api import FederationPlan, Session
+from repro.fed.autoscale import QueueSnapshot, snapshot_queue
+from repro.fed.stream import StreamConfigError
+from repro.utils.compat import make_mesh
+from repro.utils.metrics import clustering_accuracy
+
+K, KP, D = 16, 4, 24
+NDEV = jax.device_count()
+
+
+@pytest.fixture(scope="module")
+def fixture_round():
+    fm = structured_devices(jax.random.PRNGKey(0), k=K, d=D, k_prime=KP,
+                            m0=4, n_per_comp_dev=25, sep=60.0)
+    rr = Session(FederationPlan(k=K, k_prime=KP, d=D)).run(
+        jax.random.PRNGKey(1), fm.data).detail
+    return fm, rr
+
+
+def _plan(**kw):
+    base = dict(k=K, k_prime=KP, d=D, capacity=256, batch_size=4,
+                bucket_sizes=(32, 64, 128))
+    base.update(kw)
+    return FederationPlan(**base)
+
+
+def _requests(fm, count, seed, n_range=(10, 120)):
+    stream = late_device_stream(fm.means, KP, count, seed,
+                                n_range=n_range)
+    return ([r[0] for r in stream], [r[1] for r in stream],
+            [r[2] for r in stream])
+
+
+# ----------------------------------------------------- decay primitives --
+
+
+def test_decay_factors_halve_per_half_life():
+    ep = jnp.asarray([100, 90, 80, 100], jnp.int32)
+    fac = np.asarray(S.decay_factors(ep, 100, 10))
+    np.testing.assert_allclose(fac, [1.0, 0.5, 0.25, 1.0], rtol=1e-6)
+
+
+def test_lloyd_round_fractional_weights_average_exactly():
+    """Satellite bugfix: the Lloyd division uses the ACTUAL mass. A
+    fractional total weight in (0, 1) — decayed fold weights — must
+    produce the weighted MEAN, not a sum silently shrunk toward the
+    origin by the historical max(cnt, 1) clamp; and a center with zero
+    attached mass keeps its seed coordinates instead of dividing 0/0
+    into NaN."""
+    x = jnp.asarray([[2.0, 0.0], [4.0, 0.0]], jnp.float32)
+    fm = jnp.asarray([True, True])
+    M = jnp.asarray([[3.0, 0.0], [100.0, 100.0]], jnp.float32)
+    w = jnp.asarray([0.125, 0.125], jnp.float32)   # total mass 0.25 < 1
+    tau, labels = S.lloyd_round(x, fm, M, 2, weights=w)
+    tau = np.asarray(tau)
+    assert np.all(np.isfinite(tau))
+    np.testing.assert_allclose(tau[0], [3.0, 0.0], rtol=1e-6)  # the mean
+    np.testing.assert_allclose(tau[1], [100.0, 100.0])  # zero mass: seed
+    np.testing.assert_array_equal(np.asarray(labels), [0, 0])
+
+
+def test_finalize_decay_masks_fully_decayed_garbage_slot():
+    """A slot whose decayed weight underflows to exactly 0 is evidence
+    no more: its (garbage) centers must not seed, anchor, or NaN-poison
+    the re-finalized tau, and its center labels come out -1."""
+    st = S.init_state(3, 1, 2)
+    nan_row = jnp.asarray([[[np.nan, np.nan]]], jnp.float32)
+    st = S.aggregate_incremental(st, [0], nan_row, jnp.ones((1, 1), bool),
+                                 epochs=[0])
+    good = jnp.asarray([[[1.0, 2.0]], [[5.0, 6.0]]], jnp.float32)
+    st = S.aggregate_incremental(st, [1, 2], good, jnp.ones((2, 1), bool),
+                                 epochs=[100_000, 100_000])
+    # age 100k at half-life 10: 2^-10000 underflows to exactly 0.0
+    agg = S.finalize(st, 2, decay=(100_000, 10))
+    assert np.all(np.isfinite(np.asarray(agg.tau_centers)))
+    lbl = np.asarray(agg.center_labels).reshape(-1)
+    assert lbl[0] == -1 and set(lbl[1:]) == {0, 1}
+    mask, w = S.decayed_evidence(st, 100_000, 10)
+    assert not bool(np.asarray(mask)[0, 0])
+    np.testing.assert_array_equal(np.asarray(w[0]), [0.0])
+
+
+def test_center_mass_sums_decayed_weights_per_center():
+    st = S.init_state(4, 1, 2)
+    c = jnp.asarray([[[0.0, 0.0]], [[0.1, 0.0]],
+                     [[10.0, 10.0]], [[10.1, 10.0]]], jnp.float32)
+    st = S.aggregate_incremental(st, [0, 1, 2, 3], c,
+                                 jnp.ones((4, 1), bool),
+                                 epochs=[10, 10, 10, 0])
+    agg = S.finalize(st, 2, decay=(10, 10))
+    mask, w = S.decayed_evidence(st, 10, 10)
+    mass = np.asarray(S.center_mass(agg, mask, w))
+    assert mass.shape == (2,)
+    # slots 0+1 fresh (1.0 each) on one center; slot 2 fresh + slot 3
+    # one half-life old (0.5) on the other.
+    np.testing.assert_allclose(sorted(mass), [1.5, 2.0], rtol=1e-6)
+
+
+def test_split_retire_reseeds_starved_center_from_donor_residual():
+    """One fat two-lobe cluster + one starved center: the starved
+    center re-seeds at the donor's farthest attached report (the
+    max-min rule restricted to the donor cluster), and after the one
+    Lloyd round each lobe anchors its own center."""
+    pts = np.asarray([[0.0, 0.0], [0.2, 0.0], [0.1, 0.0],
+                      [8.0, 0.0], [8.2, 0.0], [8.1, 0.0],
+                      [100.0, 100.0]], np.float32)
+    # the far center's one report is nearly fully decayed (starved)
+    w_slot = jnp.asarray([[1.0]] * 6 + [[0.001]], jnp.float32)
+    st = S.init_state(8, 1, 2)
+    st = S.aggregate_incremental(st, np.arange(7), pts[:, None, :],
+                                 jnp.ones((7, 1), bool),
+                                 weights=w_slot)
+    agg = S.finalize(st, 2, weighted=True)
+    mask = jnp.asarray(st.mask & st.received[:, None])
+    mass = S.center_mass(agg, mask, st.weights)
+    # 6 units of mass on the two-lobe center, ~0 on the far one
+    np.testing.assert_allclose(sorted(np.asarray(mass)), [0.001, 6.0],
+                               rtol=1e-5)
+    # Make the 1-report center starved: retire it, re-seed from the fat
+    # cluster's residual (the off-lobe), then one Lloyd round.
+    flat = st.centers.reshape(-1, 2).astype(jnp.float32)
+    fm = (st.mask & st.received[:, None]).reshape(-1)
+    tau, moved, donors, n_mv = S.split_retire(
+        flat, fm, agg, mass, 2, split_factor=1.5, retire_frac=0.5,
+        max_moves=1, weights=st.weights.reshape(-1))
+    assert int(np.asarray(n_mv)) == 1
+    assert int(np.sum(np.asarray(moved))) == 1
+    tau = np.asarray(tau)
+    got = sorted(round(float(t[0]), 1) for t in tau)
+    np.testing.assert_allclose(got, [0.1, 8.1], atol=0.05)
+    # With loose thresholds (nothing starved), tau is returned verbatim.
+    tau0, _, _, n0 = S.split_retire(
+        flat, fm, agg, mass, 2, split_factor=100.0, retire_frac=0.0,
+        max_moves=1, weights=st.weights.reshape(-1))
+    assert int(np.asarray(n0)) == 0
+    np.testing.assert_array_equal(np.asarray(tau0),
+                                  np.asarray(agg.tau_centers))
+
+
+def test_queue_snapshot_mass_defaults_empty():
+    """Drift-off snapshots are bitwise-identical to pre-drift ones: the
+    mass field defaults empty on both construction paths."""
+    assert QueueSnapshot(pending=3, hist=((32, 3),)).mass == ()
+    snap = snapshot_queue([4, 10, 40], (32, 64))
+    assert snap.mass == ()
+    assert snap == QueueSnapshot(3, ((32, 2), (64, 1)))
+    withm = snapshot_queue([4], (32,), mass=np.asarray([1.5, 0.5]))
+    assert withm.mass == (1.5, 0.5)
+
+
+def test_drift_config_validation():
+    from repro.fed.api import PlanError
+    from repro.fed.stream import StreamConfig
+    with pytest.raises(PlanError, match="drift="):
+        _plan(drift="sideways")
+    with pytest.raises(StreamConfigError, match="drift="):
+        StreamConfig(k=K, k_prime=KP, d=D, capacity=8, drift="sideways")
+    for bad in ({"drift": "decay"},                       # no half-life
+                {"drift": "decay", "drift_half_life": 0},
+                {"drift": "split_merge", "drift_half_life": 8,
+                 "drift_split_factor": 1.0},
+                {"drift": "split_merge", "drift_half_life": 8,
+                 "drift_retire_frac": 1.0},
+                {"drift": "split_merge", "drift_half_life": 8,
+                 "drift_max_moves": 0}):
+        with pytest.raises(Exception, match="drift"):
+            _plan(**bad)
+    # drift knobs are inert (still validated) while drift="off"
+    assert _plan().stream_config().drift == "off"
+
+
+# --------------------------------------------------------- end to end --
+
+
+def test_decayed_refresh_tracks_recent_distribution(fixture_round):
+    """Piecewise-stationary stream: after the mixture shifts, a
+    drift="decay" session's refreshed tau serves the NEW phase
+    accurately while the frozen-tau session keeps labeling against the
+    stale snapshot (lower accuracy under Hungarian matching)."""
+    fm, rr = fixture_round
+    rng = np.random.default_rng(7)
+    # Phase 2: a freshly resampled mixture (same k, new means).
+    new_means = rng.normal(size=(K, D)).astype(np.float32) * 40.0
+    frozen = Session.from_round(_plan(refresh_every=0), rr)
+    drift = Session.from_round(
+        _plan(refresh_every=8, drift="decay", drift_half_life=32,
+              capacity=512), rr)
+    stream = late_device_stream(new_means, KP, 48, 11,
+                                n_range=(20, 60))
+    reqs = [r[0] for r in stream]
+    truths = [r[1] for r in stream]
+    kvs = [r[2] for r in stream]
+    accs = {}
+    for name, sess in (("frozen", frozen), ("drift", drift)):
+        acc = []
+        for lo in range(0, len(reqs), 8):
+            for lbl, tr in zip(
+                    sess.serve(reqs[lo:lo + 8], kvs[lo:lo + 8]),
+                    truths[lo:lo + 8]):
+                acc.append(clustering_accuracy(lbl, tr, K))
+        # judge on the stream's tail, after refreshes had evidence
+        accs[name] = float(np.mean(acc[24:]))
+    assert accs["drift"] > 0.95
+    assert accs["drift"] > accs["frozen"] + 0.03
+    assert drift.tau_version > 0
+    assert sum(drift.stats()["drift"]["mass"]) > 0
+
+
+def test_split_merge_replays_bitwise_from_checkpoint(fixture_round):
+    """Acceptance criterion: interrupt a drift="split_merge" stream at
+    a flush boundary, checkpoint, restore — labels, tau versions, fold
+    state (including epoch stamps), the per-center mass histogram AND
+    the split/retire counters replay bitwise vs the uninterrupted
+    session."""
+    import os
+    import tempfile
+    fm, rr = fixture_round
+    rng = np.random.default_rng(3)
+    new_means = rng.normal(size=(K, D)).astype(np.float32) * 40.0
+    plan = _plan(refresh_every=4, drift="split_merge",
+                 drift_half_life=24, drift_retire_frac=0.2,
+                 capacity=512)
+    stream = late_device_stream(new_means, KP, 24, 19, n_range=(15, 50))
+    reqs = [r[0] for r in stream]
+    kvs = [r[2] for r in stream]
+
+    live = Session.from_round(plan, rr)
+    ref = Session.from_round(plan, rr)
+    out_ref = [ref.serve_versioned(reqs[lo:lo + 6], kvs[lo:lo + 6])
+               for lo in range(0, 24, 6)]
+    out_live = [live.serve_versioned(reqs[:6], kvs[:6]),
+                live.serve_versioned(reqs[6:12], kvs[6:12])]
+    path = os.path.join(tempfile.mkdtemp(), "drift_v4.npz")
+    live.save(path)
+    replica = Session.restore(path, plan)
+    for sess in (live, replica):
+        out = [sess.serve_versioned(reqs[12:18], kvs[12:18]),
+               sess.serve_versioned(reqs[18:24], kvs[18:24])]
+        if sess is live:
+            out_live += out
+        else:
+            out_rep = out
+    for batch_a, batch_b in zip(out_live[2:], out_rep):
+        for (la, va), (lb, vb) in zip(batch_a, batch_b):
+            np.testing.assert_array_equal(la, lb)
+            assert va == vb
+    for batch_a, batch_b in zip(out_ref, out_live):
+        for (la, va), (lb, vb) in zip(batch_a, batch_b):
+            np.testing.assert_array_equal(la, lb)
+            assert va == vb
+    for a, b in ((live.service, replica.service),
+                 (live.service, ref.service)):
+        for x, y in zip(jax.tree.leaves(a.state),
+                        jax.tree.leaves(b.state)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert a._drift_events == b._drift_events
+        assert a._drift_moves == b._drift_moves
+        assert a._drift_last == b._drift_last
+        np.testing.assert_array_equal(a._drift_mass, b._drift_mass)
+    # the stream actually exercised the split/retire machinery
+    assert live.service._drift_events > 0
+
+
+def test_v4_schema_keys_and_drift_mismatch_error(fixture_round,
+                                                 tmp_path):
+    from repro.checkpoint.store import npz_keys
+    fm, rr = fixture_round
+    plan = _plan(drift="decay", drift_half_life=16, refresh_every=4)
+    sess = Session.from_round(plan, rr)
+    reqs, _, kvs = _requests(fm, 5, seed=23)
+    sess.serve(reqs, kvs)
+    path = str(tmp_path / "v4.npz")
+    sess.save(path)
+    keys = npz_keys(path)
+    assert {"drift_id", "drift_state", "drift_mass",
+            "server/.epoch"} <= keys
+    with pytest.raises(StreamConfigError, match="drift"):
+        Session.restore(path, _plan())                    # off != decay
+    with pytest.raises(StreamConfigError, match="drift"):
+        Session.restore(path, plan.with_options(drift="split_merge"))
+    replica = Session.restore(path, plan)
+    np.testing.assert_array_equal(replica.service._drift_mass,
+                                  sess.service._drift_mass)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 6))
+def test_reservoir_decayed_key_prefers_recent_requests(seed):
+    """Under drift, the A-ES admission key uses the DECAYED weight: for
+    equal report masses, recent request ids systematically crowd out
+    old ones (while half_life=0 reproduces the undecayed key exactly)."""
+    from repro.fed.policy import WeightedReservoirPolicy
+    plain = WeightedReservoirPolicy(4, seed=seed)
+    decayed = WeightedReservoirPolicy(4, seed=seed, half_life=4)
+    assert plain.key_of(7, 2.0) == WeightedReservoirPolicy(
+        4, seed=seed, half_life=0).key_of(7, 2.0)
+    for rid in range(64):
+        plain.admit(rid, 1.0)
+        decayed.admit(rid, 1.0)
+    held = sorted(int(r) for r in decayed._slot_rid if r >= 0)
+    # every survivor under decay is from the recent half of the stream
+    assert min(held) >= 32, held
+    # keys decay monotonically for a fixed draw: an older twin of the
+    # same (seed, weight) never outranks a newer id's own key ordering
+    k_old = decayed.key_of(0, 1.0)
+    k_new = decayed.key_of(0, 1.0)  # deterministic
+    assert k_old == k_new
+
+
+def test_sharded_drift_parity_with_single_host(fixture_round):
+    """The sharded serve plane gathers epoch stamps with the batch: a
+    drift-enabled sharded session folds, refreshes and splits bitwise
+    identically to the single-host plane (meaningful under the CI mesh
+    matrix's forced {2,8} devices)."""
+    fm, rr = fixture_round
+    if NDEV < 2:
+        pytest.skip("needs >= 2 devices (CI mesh matrix)")
+    rng = np.random.default_rng(5)
+    new_means = rng.normal(size=(K, D)).astype(np.float32) * 40.0
+    kw = dict(refresh_every=4, drift="split_merge", drift_half_life=24,
+              capacity=512, batch_size=NDEV)
+    mesh = make_mesh((NDEV,), ("data",))
+    single = Session.from_round(_plan(**kw), rr)
+    shard = Session.from_round(_plan(**kw, serve_axes=("data",)), rr,
+                               mesh=mesh)
+    stream = late_device_stream(new_means, KP, 16, 29, n_range=(15, 40))
+    reqs = [r[0] for r in stream]
+    kvs = [r[2] for r in stream]
+    out_a = single.serve(reqs, kvs)
+    out_b = shard.serve(reqs, kvs)
+    for la, lb in zip(out_a, out_b):
+        np.testing.assert_array_equal(la, lb)
+    for x, y in zip(jax.tree.leaves(single.service.state),
+                    jax.tree.leaves(shard.service.state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(single.service._drift_mass,
+                                  shard.service._drift_mass)
+    assert single.service._drift_moves == shard.service._drift_moves

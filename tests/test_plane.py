@@ -296,11 +296,16 @@ def test_tau_buffer_transitions():
 # ------------------------------------------------- bucket ladder -----
 
 
-def test_oversized_bucket_geometric_ladder_and_warn_once(fixture_round):
+def test_oversized_bucket_geometric_ladder_and_warn_per_rung(
+        fixture_round):
     """Requests above the largest bucket pad to a geometric (doubling)
     ladder — O(log) distinct jit shapes instead of one per rounded-up
-    n — and warn exactly once per service, under the NAMED perf
-    category (``ReproPerfWarning``) so filterwarnings can target it."""
+    n — and warn once per (active ladder, rung) under the NAMED perf
+    category (``ReproPerfWarning``) so filterwarnings can target it.
+    Each new oversized pad shape is visible exactly once and repeats
+    are silent — the old once-per-service latch hid every rung after
+    the first (bugfix, see also tests/test_autoscale.py for the
+    post-coalesce ladder half of the key)."""
     from repro.fed.stream import ReproPerfWarning
     fm, rr = fixture_round
     sess = Session.from_round(_plan(bucket_sizes=(32, 64)), rr)
@@ -308,15 +313,17 @@ def test_oversized_bucket_geometric_ladder_and_warn_once(fixture_round):
     assert svc._bucket(10) == 32 and svc._bucket(64) == 64
     with pytest.warns(ReproPerfWarning, match="largest configured bucket"):
         assert svc._bucket(65) == 128
-    assert svc._bucket(129) == 256
-    assert svc._bucket(300) == 512
-    assert svc._bucket(3000) == 4096
-    # distinct oversized n values share pads -> shared jit signatures
-    assert svc._bucket(200) == svc._bucket(256) == 256
+    with pytest.warns(ReproPerfWarning, match="largest configured bucket"):
+        assert svc._bucket(129) == 256
+    # distinct oversized n values share pads -> shared jit signatures,
+    # and an already-warned (ladder, rung) key stays silent
     import warnings as W
     with W.catch_warnings():
-        W.simplefilter("error")          # second oversize: no warning
-        assert svc._bucket(5000) == 8192
+        W.simplefilter("error", ReproPerfWarning)
+        assert svc._bucket(66) == 128
+        assert svc._bucket(200) == svc._bucket(256) == 256
+    with pytest.warns(ReproPerfWarning, match="largest configured bucket"):
+        assert svc._bucket(3000) == 4096
 
 
 # --------------------------------------------- tier-1 mesh child -----

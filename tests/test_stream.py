@@ -128,6 +128,70 @@ def test_checkpoint_restore_serve_bitwise(fixture_round, tmp_path):
     assert restored.stats()["served_devices"] == 10  # 5 restored + 5 new
 
 
+def test_pre_v4_checkpoints_restore_into_drift_enabled_plan(
+        fixture_round, tmp_path):
+    """Schema-migration matrix (DESIGN.md §14): v1 (single tau), v2
+    (double-buffered tau) and v3 (+autoscale) archives — all carrying
+    the 4-field pre-drift server state, no epoch stamps — restore into
+    a drift-enabled v4 plan with drift state default-initialized (zero
+    epochs, zero split/retire counters, zero mass) and serve bitwise
+    what a drift=off restore of the same archive serves (drift is
+    strictly additive). A v4 archive refuses a drift-mode mismatch
+    with a named config error."""
+    from repro.checkpoint.store import npz_keys, save_pytree
+    from repro.fed.policy import POLICY_IDS
+    from repro.fed.stream import (AUTOSCALE_IDS, StreamConfigError,
+                                  _ServerStateV3)
+    fm, rr = fixture_round
+    base = _session(rr)
+    reqs, _, kvs = _requests(fm, 10, seed=19)
+    base.serve(reqs[:4], kvs[:4])
+    svc = base.service
+    old_srv = _ServerStateV3(svc.state.centers, svc.state.mask,
+                             svc.state.weights, svc.state.received)
+    common = {"server": old_srv, "counters": svc._counters(),
+              "policy_id": np.asarray(POLICY_IDS["drop"], np.int64),
+              "policy": {}}
+    bufs = {"tau_bufs": svc._taubuf.bufs,
+            "tau_meta": svc._taubuf.meta_array()}
+    v1 = str(tmp_path / "v1.npz")
+    save_pytree(v1, {"tau": svc.tau, **common})
+    v2 = str(tmp_path / "v2.npz")
+    save_pytree(v2, {**bufs, **common})
+    v3 = str(tmp_path / "v3.npz")
+    save_pytree(v3, {**bufs, **common,
+                     "autoscale_id": np.asarray(AUTOSCALE_IDS["off"],
+                                                np.int64),
+                     **svc.autoscaler.state_arrays()})
+    drift_kw = dict(drift="split_merge", drift_half_life=512,
+                    drift_retire_frac=0.2)
+    restored = None
+    for path in (v1, v2, v3):
+        assert "server/.epoch" not in npz_keys(path)   # truly pre-v4
+        restored = Session.restore(path, _plan(**drift_kw))
+        plain = Session.restore(path, _plan())
+        d = restored.service
+        assert (d._drift_events, d._drift_moves, d._drift_last) \
+            == (0, 0, 0)
+        np.testing.assert_array_equal(d._drift_mass,
+                                      np.zeros((K,), np.float32))
+        np.testing.assert_array_equal(np.asarray(d.state.epoch),
+                                      np.zeros((256,), np.int32))
+        np.testing.assert_array_equal(np.asarray(restored.tau_centers),
+                                      np.asarray(base.tau_centers))
+        out_d = restored.serve(reqs[4:], kvs[4:])
+        out_p = plain.serve(reqs[4:], kvs[4:])
+        for a, b in zip(out_d, out_p):
+            np.testing.assert_array_equal(a, b)
+        assert restored.stats()["drift"]["mode"] == "split_merge"
+    v4 = str(tmp_path / "v4.npz")
+    restored.save(v4)
+    assert {"drift_id", "drift_state", "drift_mass",
+            "server/.epoch"} <= npz_keys(v4)
+    with pytest.raises(StreamConfigError, match="drift"):
+        Session.restore(v4, _plan())
+
+
 def test_refresh_refolds_round_plus_stream(fixture_round):
     """The refresh cadence re-finalizes Algorithm 2 over round + stream
     reports; serving quality holds across the tau swap."""
