@@ -1,0 +1,26 @@
+"""Static analysis of the serving system's compiled artifacts
+(DESIGN.md §15).
+
+Three passes, one CLI (``python -m repro.analysis``), one CI gate:
+
+  * ``analysis.determinism`` — traces the REAL serve-step / fold /
+    finalize / split-retire jaxprs (single-host and shard_mapped) and
+    walks them with the shared :mod:`analysis.visitor` engine, flagging
+    nondeterministic float scatter-adds, unkeyed RNG, unordered float
+    collectives, and structurally asserting the §11 "hot fold path is
+    exactly one scatter per state leaf" invariant.
+  * ``analysis.kernels`` — computes each Pallas kernel's VMEM footprint
+    from its published :func:`block_plan` across the registered bucket
+    ladder shapes and gates it against the ``launch.roofline``
+    ``HW_PROFILES`` VMEM budget, plus lane/sublane tiling alignment and
+    bf16-storage/f32-accumulate rules.
+  * ``analysis.lint`` — an AST pass over ``src/repro`` for recompile
+    hazards (Python branches on tracer values, ``float()``/``int()``
+    tracer coercion, unhashable static args) and checkpoint writes that
+    bypass ``checkpoint/store.py``; ``# repro: allow(<rule>)`` comments
+    suppress intentional exceptions visibly.
+
+``analysis.imports`` is a fourth, report-only pass (never gates): the
+reachability inventory of the dormant ``models/`` + ``configs/`` zoo.
+"""
+from repro.analysis.visitor import Finding  # noqa: F401 (public re-export)

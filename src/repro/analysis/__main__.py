@@ -1,0 +1,149 @@
+"""CLI for the static-analysis gate: ``python -m repro.analysis``.
+
+Runs the §15 passes and exits non-zero on any unsuppressed finding
+from a GATED pass:
+
+    python -m repro.analysis --all            # everything (the CI gate)
+    python -m repro.analysis --only lint      # one pass
+    python -m repro.analysis --all --json     # machine-readable to stdout
+    python -m repro.analysis --all --json out.json
+
+Passes: ``determinism`` (traced-jaxpr audit), ``kernels`` (Pallas VMEM
+/ alignment checker), ``lint`` (AST recompile-hazard lint) — all three
+gate. ``imports`` (dead-code report) is informational and never gates.
+
+Exit codes: 0 clean, 1 unsuppressed gated findings, 2 usage error
+(unknown ``--only`` name, listing the valid ones — the benchmarks.run
+convention).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+from repro.analysis.visitor import Finding
+
+GATED = ("determinism", "kernels", "lint")
+PASSES = GATED + ("imports",)
+
+
+def _run_determinism(hw: str) -> Dict:
+    from repro.analysis import determinism
+    findings, audited, skipped = determinism.audit_all()
+    return {"findings": findings, "audited": audited, "skipped": skipped}
+
+
+def _run_kernels(hw: str) -> Dict:
+    from repro.analysis import kernels
+    findings, n_plans = kernels.audit_all(hw)
+    return {"findings": findings, "plans": n_plans}
+
+
+def _run_lint(hw: str) -> Dict:
+    from repro.analysis import lint
+    findings, n_files = lint.audit_all()
+    return {"findings": findings, "files": n_files}
+
+
+def _run_imports(hw: str) -> Dict:
+    from repro.analysis import imports
+    return {"findings": [], "report": imports.report()}
+
+
+_RUNNERS = {"determinism": _run_determinism, "kernels": _run_kernels,
+            "lint": _run_lint, "imports": _run_imports}
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static determinism auditor + Pallas kernel checker")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (default when --only is absent)")
+    ap.add_argument("--only", default=None, metavar="PASS[,PASS...]",
+                    help=f"run a subset of passes; valid: {', '.join(PASSES)}")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="emit a JSON report to PATH (default stdout)")
+    ap.add_argument("--hw-profile", default=None,
+                    help="roofline hardware profile for the kernels pass")
+    args = ap.parse_args(argv)
+
+    if args.only:
+        names = [p.strip() for p in args.only.split(",") if p.strip()]
+        unknown = [p for p in names if p not in PASSES]
+        if unknown:
+            print(f"error: unknown pass name(s): {', '.join(unknown)}; "
+                  f"valid passes: {', '.join(PASSES)}", file=sys.stderr)
+            return 2
+    else:
+        names = list(PASSES)
+
+    results: Dict[str, Dict] = {}
+    for name in names:
+        results[name] = _RUNNERS[name](args.hw_profile)
+
+    gating: List[Finding] = []
+    suppressed = 0
+    for name, res in results.items():
+        for f in res["findings"]:
+            if f.suppressed:
+                suppressed += 1
+            elif name in GATED:
+                gating.append(f)
+
+    if args.json is not None:
+        payload = {
+            "ok": not gating,
+            "passes": {
+                name: {
+                    "gated": name in GATED,
+                    "findings": [f.to_dict() for f in res["findings"]],
+                    **{k: v for k, v in res.items() if k != "findings"},
+                }
+                for name, res in results.items()
+            },
+        }
+        text = json.dumps(payload, indent=2, sort_keys=True)
+        if args.json == "-":
+            print(text)
+        else:
+            with open(args.json, "w", encoding="utf-8") as fh:
+                fh.write(text)
+
+    # Human summary on stderr so --json to stdout stays parseable.
+    out = sys.stderr if args.json == "-" else sys.stdout
+    for name, res in results.items():
+        extras = []
+        if "audited" in res:
+            extras.append(f"{len(res['audited'])} artifacts")
+            if res["skipped"]:
+                extras.append(f"skipped: {', '.join(res['skipped'])}")
+        if "plans" in res:
+            extras.append(f"{res['plans']} plans")
+        if "files" in res:
+            extras.append(f"{res['files']} files")
+        n_find = len(res["findings"])
+        gate = "gated" if name in GATED else "report-only"
+        print(f"[{name}] {gate}: {n_find} finding(s)"
+              + (f" ({', '.join(extras)})" if extras else ""), file=out)
+        for f in res["findings"]:
+            print(f"  {f}", file=out)
+        if name == "imports":
+            from repro.analysis import imports as imp_mod
+            for line in imp_mod.render(res["report"]).splitlines():
+                print(f"  {line}", file=out)
+
+    if gating:
+        print(f"\nFAIL: {len(gating)} unsuppressed finding(s) "
+              f"({suppressed} suppressed)", file=out)
+        return 1
+    print(f"\nOK: 0 unsuppressed findings ({suppressed} suppressed)",
+          file=out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,166 @@
+"""Import-graph dead-code report (DESIGN.md §15, report-only).
+
+Builds the static import graph of ``src/repro`` (AST ``import`` /
+``from ... import`` statements — including imports nested inside
+functions, which is how the lazy-loading modules here pull heavy deps)
+plus ``benchmarks/*.py`` as external entry points, then reports which
+modules of the dormant model zoo (``repro.models.*`` and
+``repro.configs.*``, inherited from the serving scaffold the k-FED
+plane grew out of) are actually reachable from the live entry points:
+
+  entry points = benchmarks/*.py, repro.launch.*, repro.fed.api,
+                 repro.analysis (this gate itself)
+
+Each reachable module gets one shortest via-path so a reader can see
+WHY it is still live; unreachable modules are candidates for retirement
+in a future PR. This pass NEVER gates CI — import reachability is
+necessary, not sufficient, evidence of death (configs are also loaded
+by name through ``configs.base.load_config``), so it reports and exits
+clean.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from collections import deque
+from typing import Dict, List, Optional, Set, Tuple
+
+PASS = "imports"
+
+_ENTRY_PREFIXES = ("repro.launch.", "benchmarks.")
+_ENTRY_MODULES = ("repro.fed.api", "repro.analysis")
+_ZOO_PREFIXES = ("repro.models.", "repro.configs.")
+
+
+def _module_name(path: str, src_root: str) -> Tuple[Optional[str], bool]:
+    """(dotted module name, is_package) of a .py file under a root."""
+    rel = os.path.relpath(path, src_root)
+    if not rel.endswith(".py"):
+        return None, False
+    parts = rel[:-3].replace(os.sep, "/").split("/")
+    is_pkg = parts[-1] == "__init__"
+    if is_pkg:
+        parts = parts[:-1]
+    return ".".join(parts), is_pkg
+
+
+def _imports_of(tree: ast.AST, module: str, is_pkg: bool) -> Set[str]:
+    """All absolute module names this module imports (relative imports
+    resolved against its own package)."""
+    # The package a relative import is anchored at: the module itself
+    # for an __init__.py, its parent otherwise.
+    pkg_parts = module.split(".") if is_pkg else module.split(".")[:-1]
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out.add(a.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                base = pkg_parts[:len(pkg_parts) - (node.level - 1)]
+                root = ".".join(base + (node.module.split(".")
+                                        if node.module else []))
+            else:
+                root = node.module or ""
+            if root:
+                out.add(root)
+                for a in node.names:
+                    out.add(f"{root}.{a.name}")
+    return out
+
+
+def build_graph(src_root: Optional[str] = None,
+                bench_root: Optional[str] = None
+                ) -> Tuple[Dict[str, Set[str]], List[str]]:
+    """(adjacency: module -> imported modules, known module list)."""
+    if src_root is None:
+        src_root = os.path.normpath(
+            os.path.join(os.path.dirname(__file__), "..", ".."))
+    if bench_root is None:
+        cand = os.path.normpath(os.path.join(src_root, "..", "benchmarks"))
+        bench_root = cand if os.path.isdir(cand) else None
+
+    files: List[Tuple[str, str, bool]] = []   # (module, path, is_pkg)
+    for dirpath, _, names in sorted(os.walk(os.path.join(src_root, "repro"))):
+        for name in sorted(names):
+            if name.endswith(".py"):
+                p = os.path.join(dirpath, name)
+                m, is_pkg = _module_name(p, src_root)
+                if m:
+                    files.append((m, p, is_pkg))
+    if bench_root:
+        for name in sorted(os.listdir(bench_root)):
+            if name.endswith(".py"):
+                files.append((f"benchmarks.{name[:-3]}",
+                              os.path.join(bench_root, name), False))
+
+    known = {m for m, _, _ in files}
+    graph: Dict[str, Set[str]] = {}
+    for mod, path, is_pkg in files:
+        with open(path, "r", encoding="utf-8") as fh:
+            try:
+                tree = ast.parse(fh.read())
+            except SyntaxError:
+                graph[mod] = set()
+                continue
+        deps = set()
+        for imp in _imports_of(tree, mod, is_pkg):
+            # Resolve "repro.fed.api.Session" -> longest known prefix.
+            parts = imp.split(".")
+            for cut in range(len(parts), 0, -1):
+                cand = ".".join(parts[:cut])
+                if cand in known and cand != mod:
+                    deps.add(cand)
+                    break
+        graph[mod] = deps
+    return graph, sorted(known)
+
+
+def reachability(graph: Dict[str, Set[str]]
+                 ) -> Dict[str, Optional[List[str]]]:
+    """module -> shortest via-path from an entry point (None when
+    unreachable). BFS from all entry points at once."""
+    entries = [m for m in graph
+               if m.startswith(_ENTRY_PREFIXES) or m in _ENTRY_MODULES]
+    via: Dict[str, Optional[List[str]]] = {m: None for m in graph}
+    q = deque()
+    for e in sorted(entries):
+        via[e] = [e]
+        q.append(e)
+    while q:
+        cur = q.popleft()
+        for nxt in sorted(graph.get(cur, ())):
+            if via.get(nxt) is None:
+                via[nxt] = via[cur] + [nxt]
+                q.append(nxt)
+    return via
+
+
+def report(src_root: Optional[str] = None) -> dict:
+    """The dead-code report over the dormant zoo: reachable modules
+    with their shortest via-path, and unreachable candidates."""
+    graph, known = build_graph(src_root)
+    via = reachability(graph)
+    zoo = [m for m in known if m.startswith(_ZOO_PREFIXES)]
+    reachable = {m: via[m] for m in zoo if via.get(m)}
+    dead = [m for m in zoo if not via.get(m)]
+    return {
+        "modules": len(known),
+        "zoo": len(zoo),
+        "reachable": {m: " -> ".join(p) for m, p in sorted(
+            reachable.items())},
+        "unreachable": dead,
+    }
+
+
+def render(rep: dict) -> str:
+    lines = [f"import graph: {rep['modules']} modules, "
+             f"{rep['zoo']} in the models/configs zoo",
+             f"  reachable from entry points: {len(rep['reachable'])}"]
+    for m, path in rep["reachable"].items():
+        lines.append(f"    {m}  (via {path})")
+    lines.append(f"  unreachable (retirement candidates, report-only): "
+                 f"{len(rep['unreachable'])}")
+    for m in rep["unreachable"]:
+        lines.append(f"    {m}")
+    return "\n".join(lines)

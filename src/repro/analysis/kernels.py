@@ -1,0 +1,168 @@
+"""Pallas kernel static checker (DESIGN.md §15, pass 2).
+
+Every kernel module in ``kernels/`` publishes a ``block_plan`` — the
+static BlockSpec/grid/scratch metadata of its ``pallas_call``, computed
+by the same padding arithmetic as the dispatch itself. This pass
+evaluates those plans across the REGISTERED bucket ladder shapes (the
+``StreamConfig`` default rungs x representative serve dims) and gates:
+
+  * ``vmem-overflow`` — the VMEM footprint implied by the plan must fit
+    the ``launch.roofline`` ``HW_PROFILES`` per-core VMEM budget.
+    Streaming blocks are double-buffered by the Pallas pipeline (x2);
+    grid-constant (resident) blocks and scratch are single-buffered;
+    scalar-prefetch operands live in SMEM and are counted once.
+  * ``lane-misaligned`` / ``sublane-misaligned`` — a dimension that the
+    grid PARTITIONS (block extent < array extent) must tile cleanly:
+    the minor (lane) axis in multiples of 128, the second-minor
+    (sublane) axis in multiples of 8 for 4-byte / 16 for 2-byte
+    elements. Single-row (extent-1) sublane windows are exempt — they
+    are the scalar-prefetch DMA gather granule, not a partial-tile
+    relayout. Unpartitioned dims only pad, never relayout.
+  * ``bf16-accum`` — sub-4-byte storage must declare f32 accumulation
+    (the ``preferred_element_type`` contract of every matmul kernel
+    here); bf16-accumulating reductions drift from the f32 oracles.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.visitor import Finding
+
+PASS = "kernels"
+
+_ITEMSIZE = {"f32": 4, "i32": 4, "bf16": 2, "f16": 2, "i8": 1}
+_LANE = 128
+
+
+def _sublane(dtype: str) -> int:
+    return 16 if _ITEMSIZE.get(dtype, 4) == 2 else 8
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def footprint_bytes(plan: dict) -> int:
+    """VMEM bytes implied by one block plan: 2x each streaming in/out
+    block (pipeline double-buffering), 1x resident blocks, scratch, and
+    scalar-prefetch operands."""
+    total = 0
+    for b in plan["blocks"]:
+        nbytes = _prod(b["shape"]) * _ITEMSIZE[b["dtype"]]
+        streams = (b["kind"] in ("in", "out")) and not b.get("resident")
+        total += nbytes * (2 if streams else 1)
+    return total
+
+
+def check_plan(plan: dict, hw: dict, shape_tag: str = "") -> List[Finding]:
+    """All checker findings for one kernel block plan against one
+    hardware profile (needs ``hw["vmem_bytes"]``)."""
+    findings: List[Finding] = []
+    where = f"{plan['kernel']}{'[' + shape_tag + ']' if shape_tag else ''}"
+
+    used = footprint_bytes(plan)
+    budget = int(hw["vmem_bytes"])
+    if used > budget:
+        findings.append(Finding(
+            PASS, "vmem-overflow", where,
+            f"VMEM footprint {used / 2**20:.2f} MiB exceeds the "
+            f"{budget / 2**20:.0f} MiB per-core budget (grid "
+            f"{plan['grid']}): shrink the block tiles"))
+
+    for b in plan["blocks"]:
+        if b["kind"] == "scalar" or len(b["shape"]) < 2:
+            continue
+        shape, arr = b["shape"], b["array_shape"]
+        lane, sub = int(shape[-1]), int(shape[-2])
+        lane_part = lane < int(arr[-1])
+        sub_part = sub < int(arr[-2])
+        if lane_part and lane % _LANE:
+            findings.append(Finding(
+                PASS, "lane-misaligned", where,
+                f"block {b['name']}{shape} partitions the lane axis at "
+                f"{lane}, not a multiple of {_LANE}: partial lane tiles "
+                f"force a relayout copy per grid step"))
+        sl = _sublane(b["dtype"])
+        if sub_part and sub != 1 and sub % sl:
+            findings.append(Finding(
+                PASS, "sublane-misaligned", where,
+                f"block {b['name']}{shape} partitions the sublane axis "
+                f"at {sub}, not a multiple of {sl} for {b['dtype']}: "
+                f"partial sublane tiles force a relayout copy"))
+
+    if _ITEMSIZE[plan["storage"]] < 4 and plan["accum"] != "f32":
+        findings.append(Finding(
+            PASS, "bf16-accum", where,
+            f"{plan['storage']} storage with {plan['accum']} "
+            f"accumulation: sub-4-byte matmuls must accumulate in f32 "
+            f"(preferred_element_type)"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# The registered shape ladder: StreamConfig's default bucket rungs x
+# representative serve dims (the CI smoke dims and a production-ish
+# wide config), both storage dtypes where the kernel supports them.
+# --------------------------------------------------------------------------
+
+# (d, k_prime, k) columns the ladder rungs are crossed with.
+DIM_COLUMNS: Tuple[Tuple[int, int, int], ...] = ((64, 4, 16),
+                                                 (512, 8, 128))
+
+
+def ladder() -> Tuple[int, ...]:
+    """The registered serve bucket rungs — read from the StreamConfig
+    default, so a ladder change re-registers the checker shapes."""
+    import dataclasses
+    from repro.fed.stream import StreamConfig
+    for f in dataclasses.fields(StreamConfig):
+        if f.name == "bucket_sizes":
+            return tuple(f.default)
+    raise AssertionError("StreamConfig.bucket_sizes default not found")
+
+
+def ladder_plans() -> List[Tuple[str, dict]]:
+    """Every (shape_tag, block_plan) the gate evaluates."""
+    from repro.fed.stream import StreamConfig
+    import dataclasses
+    from repro.kernels import (kmeans_update, moe_dispatch, pdist_argmin,
+                               solve_attach)
+    from repro.kernels.ref import SOLVE_ATTACH_DTYPES
+
+    B = next(f.default for f in dataclasses.fields(StreamConfig)
+             if f.name == "batch_size")
+    plans: List[Tuple[str, dict]] = []
+    for n in ladder():
+        for d, kp, k in DIM_COLUMNS:
+            for dt in SOLVE_ATTACH_DTYPES:
+                plans.append((f"B{B},n{n},d{d},k'{kp},k{k},{dt}",
+                              solve_attach.block_plan(B, n, d, kp, k,
+                                                      dtype=dt)))
+            # the chunked large-k attach path: n rows per chunk against
+            # the rung-sized retained center set
+            plans.append((f"n4096,d{d},k{n}",
+                          pdist_argmin.block_plan(4096, d, n)))
+            plans.append((f"n{n * B},d{d},k{k}",
+                          kmeans_update.block_plan(n * B, d, k)))
+    for d, _, _ in DIM_COLUMNS:
+        plans.append((f"T1024,d{d},S2048",
+                      moe_dispatch.dispatch_block_plan(1024, d, 2048)))
+        plans.append((f"S2048,d{d},T1024",
+                      moe_dispatch.combine_block_plan(2048, d, 1024)))
+    return plans
+
+
+def audit_all(hw: Optional[Dict] = None
+              ) -> Tuple[List[Finding], int]:
+    """(findings, number of plans checked) across the whole ladder."""
+    if hw is None or isinstance(hw, str):
+        from repro.launch.roofline import hw_profile
+        hw = hw_profile(hw)
+    findings: List[Finding] = []
+    plans = ladder_plans()
+    for tag, plan in plans:
+        findings.extend(check_plan(plan, hw, tag))
+    return findings, len(plans)

@@ -1,0 +1,309 @@
+"""Recompile-hazard and contract lint (DESIGN.md §15, pass 3).
+
+An AST pass over ``src/repro`` for the hazards that NEVER show up in a
+traced jaxpr — they bite at trace time (recompiles, ConcretizationError)
+or behind the checkpoint schema's back:
+
+  * ``tracer-branch`` — Python ``if``/``while`` on a value produced by
+    a ``jnp.``/``jax.`` expression. Inside jit this is a concretization
+    error; outside it forces a device sync per call and turns
+    data-dependent values into trace constants.
+  * ``tracer-coercion`` — ``float()``/``int()``/``bool()`` directly on
+    a ``jnp.``/``jax.`` expression. The blessed spelling is
+    ``float(np.asarray(x))``: the materialization is explicit, greppable
+    and outside any traced region.
+  * ``static-unhashable`` — a parameter named in ``jax.jit(...,
+    static_argnames=...)`` whose default is a mutable literal
+    (list/dict/set): unhashable statics fail at call time, and mutable
+    defaults silently alias across calls.
+  * ``checkpoint-bypass`` — ``np.save``/``np.savez*`` outside
+    ``checkpoint/store.py``. Every persisted artifact must go through
+    the schema-versioned store (DESIGN.md §9) or restores cannot be
+    replay-audited.
+
+Taint model (deliberately shallow — one forward pass per function):
+names assigned from expressions that call into ``jnp.``/``jax.`` are
+tracer-tainted; wrapping in ``np.asarray``/``np.array``/
+``jax.device_get``/``.item()`` materializes and clears the taint.
+Function parameters are NOT tainted (host-level modules take arrays as
+arguments everywhere; flagging them would drown the signal), so this
+pass catches locally-introduced hazards, not inter-procedural flows —
+the determinism pass audits the traced artifacts themselves.
+
+Suppression: a ``# repro: allow(<rule>)`` comment on the flagged line
+or the line above keeps the finding visible in the diff but un-gated.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.visitor import Finding
+
+PASS = "lint"
+RULES = ("tracer-branch", "tracer-coercion", "static-unhashable",
+         "checkpoint-bypass")
+
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow\(([\w\-,\s]+)\)")
+
+# Attribute roots whose call results are tracer-valued.
+_TRACER_ROOTS = ("jnp", "jax", "lax")
+# ... and the materializing wrappers that clear the taint.
+_MATERIALIZERS = {("np", "asarray"), ("np", "array"), ("numpy", "asarray"),
+                  ("numpy", "array"), ("jax", "device_get")}
+# jax/jnp entry points that return HOST values (ints, bools, device
+# lists), not tracers — calling them never taints.
+_HOST_FNS = {"device_count", "local_device_count", "devices",
+             "local_devices", "process_index", "process_count",
+             "default_backend", "issubdtype", "result_type"}
+# Array attributes that are static trace-time metadata, not data.
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "aval", "sharding"}
+_STORE_MODULE = os.path.join("checkpoint", "store.py")
+
+
+def _attr_chain(node) -> Tuple[str, ...]:
+    """x.y.z -> ("x", "y", "z"); non-name roots -> ()."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def _is_materializer(call: ast.Call) -> bool:
+    chain = _attr_chain(call.func)
+    if len(chain) >= 2 and (chain[0], chain[-1]) in _MATERIALIZERS:
+        return True
+    # x.item() — explicit scalar materialization
+    return bool(chain) and chain[-1] == "item"
+
+
+class _FnLinter(ast.NodeVisitor):
+    """One function body: ordered taint pass + rule checks."""
+
+    def __init__(self, path: str, findings: List[Finding]):
+        self.path = path
+        self.findings = findings
+        self.tainted: Set[str] = set()
+
+    # -- taint helpers -------------------------------------------------
+
+    def _expr_tainted(self, node) -> bool:
+        """True when the expression's value flows from a jnp/jax call or
+        an already-tainted name, with materializers as taint breaks."""
+        if isinstance(node, ast.Call):
+            if _is_materializer(node):
+                return False
+            chain = _attr_chain(node.func)
+            if chain and chain[0] in _TRACER_ROOTS:
+                return chain[-1] not in _HOST_FNS
+            return any(self._expr_tainted(a) for a in node.args)
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None` never read the tracer's
+            # value — identity checks are host-safe.
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return (self._expr_tainted(node.left)
+                    or any(self._expr_tainted(c) for c in node.comparators))
+        if isinstance(node, ast.Attribute):
+            # x.shape / x.dtype are static metadata even on tracers.
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self._expr_tainted(node.value)
+        if isinstance(node, (ast.BoolOp, ast.BinOp, ast.UnaryOp,
+                             ast.Subscript, ast.IfExp, ast.Tuple, ast.List)):
+            return any(self._expr_tainted(c) for c in ast.iter_child_nodes(node))
+        return False
+
+    def _emit(self, rule: str, node, msg: str) -> None:
+        self.findings.append(Finding(
+            PASS, rule, f"{self.path}:{node.lineno}", msg))
+
+    # -- statements ----------------------------------------------------
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        tainted = self._expr_tainted(node.value)
+        for tgt in node.targets:
+            for name in ast.walk(tgt):
+                if isinstance(name, ast.Name):
+                    if tainted:
+                        self.tainted.add(name.id)
+                    else:
+                        self.tainted.discard(name.id)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if isinstance(node.target, ast.Name) and \
+                self._expr_tainted(node.value):
+            self.tainted.add(node.target.id)
+        self.generic_visit(node)
+
+    def visit_If(self, node: ast.If) -> None:
+        if self._expr_tainted(node.test):
+            self._emit("tracer-branch", node,
+                       "Python `if` on a tracer-valued expression: a "
+                       "concretization error under jit, a device sync "
+                       "and shape-specialized trace outside it — decide "
+                       "with jnp.where/lax.cond, or materialize "
+                       "explicitly with np.asarray first")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        if self._expr_tainted(node.test):
+            self._emit("tracer-branch", node,
+                       "Python `while` on a tracer-valued expression — "
+                       "use lax.while_loop, or materialize explicitly")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if isinstance(node.func, ast.Name) and \
+                node.func.id in ("float", "int", "bool") and node.args:
+            arg = node.args[0]
+            direct = (isinstance(arg, ast.Call)
+                      and not _is_materializer(arg)
+                      and bool(_attr_chain(arg.func))
+                      and _attr_chain(arg.func)[0] in _TRACER_ROOTS)
+            if direct or self._expr_tainted(arg):
+                self._emit("tracer-coercion", node,
+                           f"{node.func.id}() directly on a tracer-"
+                           f"valued expression forces an implicit "
+                           f"device sync (and breaks under jit); spell "
+                           f"the materialization as "
+                           f"{node.func.id}(np.asarray(...))")
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        # Nested defs get their own _FnLinter (fresh taint scope) from
+        # scan_source's walk; descending here would double-report them.
+        pass
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+def _static_names(call: ast.Call) -> List[str]:
+    """The static_argnames of one jax.jit(...) call, when literal."""
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return [v.value]
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return [e.value for e in v.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)]
+    return []
+
+
+def _check_static_args(tree: ast.AST, path: str,
+                       findings: List[Finding]) -> None:
+    """static-unhashable: a static_argnames parameter whose default is
+    a mutable literal on the decorated function."""
+    for fn in [n for n in ast.walk(tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        statics: List[str] = []
+        for dec in fn.decorator_list:
+            if isinstance(dec, ast.Call):
+                chain = _attr_chain(dec.func)
+                if chain and chain[-1] in ("jit", "partial"):
+                    statics.extend(_static_names(dec))
+        if not statics:
+            continue
+        args = fn.args.args + fn.args.kwonlyargs
+        defaults = ([None] * (len(fn.args.args) - len(fn.args.defaults))
+                    + list(fn.args.defaults) + list(fn.args.kw_defaults))
+        for a, dflt in zip(args, defaults):
+            if a.arg in statics and isinstance(
+                    dflt, (ast.List, ast.Dict, ast.Set)):
+                findings.append(Finding(
+                    PASS, "static-unhashable", f"{path}:{a.lineno}",
+                    f"static arg {a.arg!r} defaults to a mutable "
+                    f"{type(dflt).__name__.lower()} literal: statics "
+                    f"must be hashable (use a tuple / frozenset / "
+                    f"None-sentinel)"))
+
+
+def _check_checkpoint_bypass(tree: ast.AST, path: str,
+                             findings: List[Finding]) -> None:
+    if path.replace(os.sep, "/").endswith("checkpoint/store.py"):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if len(chain) >= 2 and chain[0] in ("np", "numpy") and \
+                chain[-1] in ("save", "savez", "savez_compressed"):
+            findings.append(Finding(
+                PASS, "checkpoint-bypass", f"{path}:{node.lineno}",
+                f"np.{chain[-1]} outside checkpoint/store.py bypasses "
+                f"the schema-versioned store (DESIGN.md §9): persisted "
+                f"artifacts must round-trip through store.save_pytree"))
+
+
+def _suppressions(source: str) -> Dict[int, Set[str]]:
+    """line number -> rule names allowed there (the comment's own line
+    and the line below it, so the comment can ride above the hazard)."""
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _ALLOW_RE.search(line)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            out.setdefault(i, set()).update(rules)
+            out.setdefault(i + 1, set()).update(rules)
+    return out
+
+
+def scan_source(source: str, path: str) -> List[Finding]:
+    """All lint findings for one file's source text, suppression
+    comments applied."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(PASS, "syntax-error", f"{path}:{e.lineno}",
+                        str(e))]
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _FnLinter(path, findings).generic_visit(node)
+    _check_static_args(tree, path, findings)
+    _check_checkpoint_bypass(tree, path, findings)
+
+    allow = _suppressions(source)
+    out = []
+    for f in findings:
+        line = int(f.where.rsplit(":", 1)[1])
+        rules = allow.get(line, set())
+        if f.rule in rules or "*" in rules:
+            f = Finding(f.pass_name, f.rule, f.where, f.message,
+                        suppressed=True)
+        out.append(f)
+    return out
+
+
+def default_root() -> str:
+    return os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def audit_all(root: Optional[str] = None
+              ) -> Tuple[List[Finding], int]:
+    """(findings, files scanned) over every .py under ``root``
+    (default: the installed ``repro`` package tree)."""
+    root = root or default_root()
+    findings: List[Finding] = []
+    n = 0
+    for dirpath, _, names in sorted(os.walk(root)):
+        for name in sorted(names):
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, name)
+            rel = os.path.relpath(path, os.path.dirname(root))
+            with open(path, "r", encoding="utf-8") as fh:
+                findings.extend(scan_source(fh.read(), rel))
+            n += 1
+    return findings, n

@@ -1,0 +1,236 @@
+"""The ONE jaxpr traversal engine + shared HLO shape tables.
+
+Before this module existed the repo walked jaxprs in
+``launch/jaxpr_flops.py`` and parsed HLO shapes with duplicated
+``_DTYPE_BYTES`` / ``_SHAPE_RE`` / collective tables in
+``launch/hlo_analysis.py`` AND ``launch/roofline.py`` — three private
+copies of the same substrate. Every consumer (the FLOP counter, the
+HLO cost parser, the determinism auditor) now routes through here:
+
+  * :func:`sub_jaxprs` — the higher-order-primitive descent rules
+    (scan trip counts, shard_map mesh multipliers, cond branches,
+    pjit/closed-call bodies, pallas_call kernel bodies) in one place.
+    scan/while/cond/shard_map carry OPEN jaxprs or ClosedJaxprs
+    depending on the primitive — callers never need to know which.
+  * :func:`walk` — depth-first equation visitor carrying the static
+    repetition multiplier and the enclosing higher-order path.
+  * :func:`backward_slice` — operand provenance (which jaxpr inputs /
+    constants / primitives a value depends on), the substrate of the
+    determinism auditor's index-uniqueness and RNG-key-threading rules.
+  * ``DTYPE_BYTES`` / ``SHAPE_RE`` / ``COLLECTIVES`` — the HLO text
+    tables, exactly the superset of the two former private copies.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Callable, List, Tuple
+
+# --------------------------------------------------------------------------
+# Shared HLO text tables (consumed by launch.hlo_analysis and
+# launch.roofline; kept here so there is exactly one copy).
+# --------------------------------------------------------------------------
+
+DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+               "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+               "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+               "s32": 4, "u32": 4, "f32": 4,
+               "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+               "token": 0, "opaque": 0}
+
+SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+
+# --------------------------------------------------------------------------
+# The shared finding record (determinism / kernels / lint all emit these;
+# the CLI serializes them uniformly).
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One analysis finding. ``suppressed`` findings are reported but
+    never gate; anything else fails the static-analysis CI job."""
+    pass_name: str        # "determinism" | "kernels" | "lint"
+    rule: str             # rule id, e.g. "float-scatter-add"
+    where: str            # artifact/eqn path or file:line
+    message: str
+    suppressed: bool = False
+
+    def to_dict(self) -> dict:
+        return {"pass": self.pass_name, "rule": self.rule,
+                "where": self.where, "message": self.message,
+                "suppressed": self.suppressed}
+
+    def __str__(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return (f"[{self.pass_name}:{self.rule}]{tag} {self.where}: "
+                f"{self.message}")
+
+
+# --------------------------------------------------------------------------
+# Jaxpr traversal.
+# --------------------------------------------------------------------------
+
+
+def _prod(xs) -> float:
+    out = 1.0
+    for x in xs:
+        out *= x
+    return out
+
+
+def as_open(j):
+    """A ClosedJaxpr or an open Jaxpr -> the open Jaxpr. shard_map /
+    scan / pjit disagree on which form ``eqn.params`` carries; every
+    consumer normalizes through here."""
+    # ClosedJaxpr delegates .eqns, so test for the wrapper attribute:
+    # only the closed form carries .jaxpr.
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+def sub_jaxprs(eqn, *, branches: str = "all"
+               ) -> List[Tuple[object, float, str]]:
+    """(open sub-jaxpr, static multiplier, tag) triples of one
+    higher-order equation.
+
+    ``branches="all"`` descends into every cond branch (an auditor must
+    see hazards on any path); ``branches="one"`` takes a single branch
+    (a cost model counts alternatives once — the historical
+    ``jaxpr_flops`` behavior).
+    """
+    name = eqn.primitive.name
+    p = eqn.params
+    if name == "scan":
+        return [(as_open(p["jaxpr"]), float(p["length"]), "scan")]
+    if name == "while":
+        # trip count unknown at jaxpr level; fori_loop carries no static
+        # bound here — callers that care pass bounded loops as scan.
+        out = [(as_open(p["body_jaxpr"]), 1.0, "while")]
+        if branches == "all" and "cond_jaxpr" in p:
+            out.append((as_open(p["cond_jaxpr"]), 1.0, "while"))
+        return out
+    if name == "cond":
+        subs = [(as_open(b), 1.0, "cond") for b in p["branches"]]
+        return subs if branches == "all" else subs[-1:]
+    if name == "shard_map":
+        mesh = p.get("mesh")
+        size = 1.0
+        if mesh is not None:
+            size = float(_prod(mesh.shape.values()))
+        return [(as_open(p["jaxpr"]), size, "shard_map")]
+    for k in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if k in p:
+            return [(as_open(p[k]), 1.0, name)]
+    return []
+
+
+@dataclass(frozen=True)
+class EqnSite:
+    """One visited equation: the eqn itself, the open jaxpr that owns
+    it, the static repetition multiplier accumulated from enclosing
+    scan lengths / shard_map mesh sizes, and the path of enclosing
+    higher-order primitives (outermost first)."""
+    eqn: object
+    jaxpr: object
+    mult: float
+    path: Tuple[str, ...]
+
+    @property
+    def path_str(self) -> str:
+        return "/".join(self.path) if self.path else "<top>"
+
+
+def walk(jaxpr, visit: Callable[[EqnSite], None], *,
+         branches: str = "all", mult: float = 1.0,
+         path: Tuple[str, ...] = ()) -> None:
+    """Depth-first visit of every equation reachable from ``jaxpr`` (a
+    ClosedJaxpr or open Jaxpr), descending through the
+    :func:`sub_jaxprs` rules."""
+    j = as_open(jaxpr)
+    for eqn in j.eqns:
+        visit(EqnSite(eqn, j, mult, path))
+        for sub, extra, tag in sub_jaxprs(eqn, branches=branches):
+            walk(sub, visit, branches=branches, mult=mult * extra,
+                 path=path + (tag,))
+
+
+def iter_eqns(jaxpr, *, branches: str = "all") -> List[EqnSite]:
+    """Every reachable equation site, in visit order."""
+    out: List[EqnSite] = []
+    walk(jaxpr, out.append, branches=branches)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Backward provenance slices.
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class Slice:
+    """The backward dependency slice of one value within ONE (open)
+    jaxpr level: which of the jaxpr's inputs it reaches, whether it
+    touches constants/literals, and which primitives lie on the slice.
+    Sub-jaxprs are opaque at this level — an invar of the enclosing
+    jaxpr fed through a scan still shows up as input-reaching."""
+    invar_positions: set = field(default_factory=set)
+    primitives: set = field(default_factory=set)
+    reaches_const: bool = False
+    reaches_literal: bool = False
+
+    @property
+    def reaches_input(self) -> bool:
+        return bool(self.invar_positions)
+
+
+def backward_slice(jaxpr, var) -> Slice:
+    """Provenance of ``var`` inside ``jaxpr`` (ClosedJaxpr or open)."""
+    j = as_open(jaxpr)
+    producers = {}
+    for eqn in j.eqns:
+        for ov in eqn.outvars:
+            producers[ov] = eqn
+    invar_pos = {v: i for i, v in enumerate(j.invars)}
+    constvars = set(j.constvars)
+
+    out = Slice()
+    seen = set()
+    stack = [var]
+    while stack:
+        v = stack.pop()
+        if hasattr(v, "val"):               # Literal (Vars carry no .val)
+            out.reaches_literal = True
+            continue
+        if id(v) in seen:
+            continue
+        seen.add(id(v))
+        if v in invar_pos:
+            out.invar_positions.add(invar_pos[v])
+            continue
+        if v in constvars:
+            out.reaches_const = True
+            continue
+        eqn = producers.get(v)
+        if eqn is None:                     # dropvar / unknown origin
+            out.reaches_const = True
+            continue
+        out.primitives.add(eqn.primitive.name)
+        stack.extend(eqn.invars)
+    return out
+
+
+def statically_unique_indices(jaxpr, index_var) -> bool:
+    """True when a scatter's index operand is provably duplicate-free at
+    trace time: its backward slice is built purely from ``iota`` /
+    literals (an arange permutation), never from data-dependent inputs
+    or constants. Data-derived indices (labels, slots) may collide, and
+    a float scatter-add over colliding indices applies its updates in
+    implementation-defined order."""
+    sl = backward_slice(jaxpr, index_var)
+    if sl.reaches_input or sl.reaches_const:
+        return False
+    return "iota" in sl.primitives or not sl.primitives

@@ -217,12 +217,18 @@ def aggregate_sharded(centers_loc, mask_loc, kz_all, k, axes, base, *,
     cand = jnp.sort(cand)[:k] if m_loc >= k else jnp.sort(
         jnp.pad(cand, (0, k - m_loc), constant_values=_BIG))[:k]
     chosen0 = jax.lax.pmin(cand, axes)                    # (k,) owner wins
-    # owner scatters its init rows into slot order; others contribute 0
+    # owner gathers its init rows into slot order via a one-hot matmul;
+    # others contribute 0. At most one row feeds each slot, and a
+    # fixed-order dot reduction is deterministic — the former
+    # scatter-add accumulated colliding zero rows in
+    # implementation-defined order (flagged by the §15 determinism
+    # auditor's float-scatter-add rule).
     slot_of = jnp.cumsum(init_loc.astype(jnp.int32)) - 1
-    M0 = jnp.zeros((k, d), jnp.float32).at[
-        jnp.clip(slot_of, 0, k - 1)].add(
-            jnp.where(init_loc[:, None], pf, 0.0))
-    M0 = red.psum(M0)                                     # (k, d)
+    sel = ((slot_of[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :])
+           & init_loc[:, None]).astype(jnp.float32)       # (m_loc, k)
+    M0 = jax.lax.dot_general(sel, jnp.where(init_loc[:, None], pf, 0.0),
+                             (((0,), (0,)), ((), ())))    # (k, d)
+    M0 = red.psum(M0)
 
     d2 = ops.pairwise_sq_dists(pf, M0)                    # (m_loc, k)
     ok = jnp.arange(k) < count0
@@ -391,7 +397,14 @@ def center_mass(agg: KFedAggregate, mask: jax.Array,
     k = agg.tau_centers.shape[0]
     lbl = agg.center_labels.reshape(-1)
     w = jnp.where(mask.reshape(-1) & (lbl >= 0), weights.reshape(-1), 0.0)
-    return jnp.zeros((k,), jnp.float32).at[jnp.clip(lbl, 0, k - 1)].add(w)
+    # One-hot matmul segment sum (the kernels/kmeans_update pattern):
+    # a float scatter-add over label-derived (colliding) indices sums
+    # in implementation-defined order — the drift layer's split/retire
+    # decisions threshold this mass, so the reduction must replay
+    # bitwise (§15 float-scatter-add rule).
+    oh = (lbl[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :]
+          ).astype(jnp.float32)                           # (m, k)
+    return jax.lax.dot_general(w, oh, (((0,), (0,)), ((), ())))
 
 
 def split_retire(flat: jax.Array, fm: jax.Array, agg: KFedAggregate,

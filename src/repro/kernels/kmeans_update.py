@@ -42,6 +42,31 @@ def _make_kernel(bn: int, kp: int):
     return kernel
 
 
+def block_plan(n: int, d: int, k: int, *, bn: int = 256,
+               dtype: str = "f32") -> dict:
+    """Static BlockSpec/grid metadata of :func:`kmeans_update` for the
+    §15 kernel checker. The (kp, d) output blocks have grid-constant
+    index maps (the sequential-grid accumulation target), so they are
+    resident — single-buffered — for the whole grid."""
+    store = "f32" if dtype == "f32" else "bf16"
+    np_ = _round_up(n, bn)
+    kp = _round_up(k, 128)
+    blk = [
+        dict(name="x", shape=(bn, d), dtype=store, kind="in",
+             resident=False, array_shape=(np_, d)),
+        dict(name="assign", shape=(bn,), dtype="i32", kind="in",
+             resident=False, array_shape=(np_,)),
+        dict(name="weights", shape=(bn,), dtype="f32", kind="in",
+             resident=False, array_shape=(np_,)),
+        dict(name="sums", shape=(kp, d), dtype="f32", kind="out",
+             resident=True, array_shape=(kp, d)),
+        dict(name="counts", shape=(kp,), dtype="f32", kind="out",
+             resident=True, array_shape=(kp,)),
+    ]
+    return dict(kernel="kmeans_update", grid=(np_ // bn,), storage=store,
+                accum="f32", blocks=blk)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "bn", "interpret"))
 def kmeans_update(x: jax.Array, assign: jax.Array, k: int,
                   weights: jax.Array | None = None,

@@ -71,6 +71,50 @@ def moe_dispatch(x: jax.Array, src: jax.Array, valid: jax.Array,
     return out[:, :d]
 
 
+def dispatch_block_plan(T: int, d: int, S: int, *, bd: int = 512,
+                        dtype: str = "f32") -> dict:
+    """Static BlockSpec/grid metadata of :func:`moe_dispatch` for the
+    §15 kernel checker. The (1, bd) row blocks are the scalar-prefetch
+    DMA gather granule: a 1-row sublane window is the intended stream
+    shape here, not a partial-tile relayout. Routing indices live in
+    SMEM (kind="scalar")."""
+    store = "f32" if dtype == "f32" else "bf16"
+    dp = _round_up(d, bd)
+    blk = [
+        dict(name="src", shape=(S,), dtype="i32", kind="scalar",
+             resident=True, array_shape=(S,)),
+        dict(name="valid", shape=(S,), dtype="i32", kind="scalar",
+             resident=True, array_shape=(S,)),
+        dict(name="x", shape=(1, bd), dtype=store, kind="in",
+             resident=False, array_shape=(T, dp)),
+        dict(name="queues", shape=(1, bd), dtype=store, kind="out",
+             resident=False, array_shape=(S, dp)),
+    ]
+    return dict(kernel="moe_dispatch", grid=(S, dp // bd), storage=store,
+                accum=store, blocks=blk)
+
+
+def combine_block_plan(S: int, d: int, T: int, *, top_k: int = 2,
+                       bd: int = 512, dtype: str = "f32") -> dict:
+    """Static BlockSpec/grid metadata of :func:`moe_combine` for the
+    §15 kernel checker — the gather-and-weighted-sum sibling of
+    :func:`dispatch_block_plan`, always f32-accumulating."""
+    store = "f32" if dtype == "f32" else "bf16"
+    dp = _round_up(d, bd)
+    blk = [
+        dict(name="slot", shape=(T * top_k,), dtype="i32", kind="scalar",
+             resident=True, array_shape=(T * top_k,)),
+        dict(name="gates", shape=(T * top_k,), dtype="f32",
+             kind="scalar", resident=True, array_shape=(T * top_k,)),
+        dict(name="ybuf", shape=(1, bd), dtype=store, kind="in",
+             resident=False, array_shape=(S, dp)),
+        dict(name="out", shape=(1, bd), dtype="f32", kind="out",
+             resident=False, array_shape=(T, dp)),
+    ]
+    return dict(kernel="moe_combine", grid=(T, top_k, dp // bd),
+                storage=store, accum="f32", blocks=blk)
+
+
 @functools.partial(jax.jit, static_argnames=("top_k", "bd", "interpret"))
 def moe_combine(ybuf: jax.Array, slot: jax.Array, gates: jax.Array,
                 *, top_k: int, bd: int = 512, interpret: bool = True):

@@ -145,6 +145,39 @@ def _pairwise_argmin(x, c, c_mask, *, bn: int, bd: int, bk: int,
             jnp.concatenate([val, tv[:n - nfull]]))
 
 
+def block_plan(n: int, d: int, k: int, *, bn: int = 128, bd: int = 512,
+               bk: int = 512, dtype: str = "f32") -> dict:
+    """Static BlockSpec/grid metadata of :func:`_pairwise_argmin` for
+    the §15 kernel checker — the same tile-shrinking arithmetic as the
+    dispatch above, including the (bn, bk) accumulator and (bn,) x-norm
+    VMEM scratch that bound the footprint independently of k."""
+    store = "f32" if dtype == "f32" else "bf16"
+    bd = min(bd, _round_up(d, 128))
+    dp = _round_up(d, bd)
+    bk = min(_round_up(bk, 128), _round_up(k, 128))
+    kp = _round_up(_round_up(k, 128), bk)
+    np_ = _round_up(n, bn)
+    blk = [
+        dict(name="x", shape=(bn, bd), dtype=store, kind="in",
+             resident=False, array_shape=(np_, dp)),
+        dict(name="centers", shape=(bk, bd), dtype=store, kind="in",
+             resident=False, array_shape=(kp, dp)),
+        dict(name="center_norms", shape=(bk,), dtype="f32", kind="in",
+             resident=False, array_shape=(kp,)),
+        dict(name="idx", shape=(bn,), dtype="i32", kind="out",
+             resident=False, array_shape=(np_,)),
+        dict(name="val", shape=(bn,), dtype="f32", kind="out",
+             resident=False, array_shape=(np_,)),
+        dict(name="acc", shape=(bn, bk), dtype="f32", kind="scratch",
+             resident=True, array_shape=(bn, bk)),
+        dict(name="xn", shape=(bn,), dtype="f32", kind="scratch",
+             resident=True, array_shape=(bn,)),
+    ]
+    return dict(kernel="pdist_argmin",
+                grid=(np_ // bn, kp // bk, dp // bd), storage=store,
+                accum="f32", blocks=blk)
+
+
 def pairwise_argmin(x: jax.Array, c: jax.Array,
                     c_mask: jax.Array | None = None,
                     *, bn: int = 128, bd: int = 512, bk: int = 512,

@@ -213,6 +213,42 @@ def _padded(n, d, k_prime, k, dtype):
             _round_up(k_prime, 128), _round_up(k, 128))
 
 
+def block_plan(B: int, n: int, d: int, k_prime: int, k: int,
+               dtype: str = "f32") -> dict:
+    """Static BlockSpec/grid metadata of :func:`_solve_attach` for the
+    §15 kernel checker: every VMEM-resident block with its shape,
+    dtype, and whether its index map is grid-constant (resident blocks
+    are single-buffered; streaming blocks double-buffer). Mirrors the
+    padding arithmetic of the pallas_call above exactly — changing one
+    without the other trips the checker's hand-computed footprints."""
+    store = "f32" if dtype == "f32" else "bf16"
+    n_p, d_p, kp_p, k_p = _padded(n, d, k_prime, k, dtype)
+    blk = [
+        dict(name="x", shape=(1, n_p, d_p), dtype=store, kind="in",
+             resident=False, array_shape=(B, n_p, d_p)),
+        dict(name="theta0", shape=(1, kp_p, d_p), dtype=store, kind="in",
+             resident=False, array_shape=(B, kp_p, d_p)),
+        # tau's index map is (0, 0) for every grid step: fetched once,
+        # resident for the whole grid.
+        dict(name="tau", shape=(k_p, d_p), dtype=store, kind="in",
+             resident=True, array_shape=(k_p, d_p)),
+        dict(name="center_mask", shape=(1, kp_p), dtype="i32", kind="in",
+             resident=False, array_shape=(B, kp_p)),
+        dict(name="point_mask", shape=(1, n_p), dtype="i32", kind="in",
+             resident=False, array_shape=(B, n_p)),
+        dict(name="labels", shape=(1, n_p), dtype="i32", kind="out",
+             resident=False, array_shape=(B, n_p)),
+        dict(name="min_dists", shape=(1, n_p), dtype="f32", kind="out",
+             resident=False, array_shape=(B, n_p)),
+        dict(name="centers", shape=(1, kp_p, d_p), dtype="f32",
+             kind="out", resident=False, array_shape=(B, kp_p, d_p)),
+        dict(name="center_labels", shape=(1, kp_p), dtype="i32",
+             kind="out", resident=False, array_shape=(B, kp_p)),
+    ]
+    return dict(kernel="solve_attach", grid=(B,), storage=store,
+                accum="f32", blocks=blk)
+
+
 def hbm_bytes(B: int, n: int, d: int, k_prime: int, k: int,
               dtype: str = "f32") -> int:
     """HBM traffic of the FUSED kernel for one (B, n, d) serve batch:

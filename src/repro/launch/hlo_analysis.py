@@ -30,16 +30,12 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
-                "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
-                "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-                "s32": 4, "u32": 4, "f32": 4,
-                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
-                "token": 0, "opaque": 0}
-
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute", "ragged-all-to-all")
+# ONE copy of the HLO shape/dtype/collective tables, shared with
+# launch.roofline — see analysis.visitor. The historical local names
+# stay as aliases for external callers/monkeypatchers.
+from repro.analysis.visitor import (COLLECTIVES,  # noqa: F401, E402
+                                    DTYPE_BYTES as _DTYPE_BYTES,
+                                    SHAPE_RE as _SHAPE_RE)
 
 
 def _shape_list(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:

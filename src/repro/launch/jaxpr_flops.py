@@ -13,15 +13,27 @@ without being fooled by backend promotion.
 
 Counts are GLOBAL (whole-program): a shard_map body is multiplied by the
 mesh size (SPMD runs it on every device). Divide by chips for per-chip.
+
+The traversal itself (scan trip counts, shard_map mesh multipliers,
+cond branch selection, open-vs-closed sub-jaxpr normalization) is the
+shared ``analysis.visitor`` engine — this module only supplies the
+per-equation FLOP arithmetic.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
+
+from repro.analysis import visitor
+
+
+def _sub_jaxprs(eqn):
+    """(open sub-jaxpr, extra multiplier) pairs — the historical local
+    helper, now a thin alias over ``visitor.sub_jaxprs`` with the cost
+    model's one-branch cond policy."""
+    return [(j, m) for j, m, _ in visitor.sub_jaxprs(eqn, branches="one")]
 
 
 def _prod(xs) -> float:
@@ -59,51 +71,20 @@ def _dtype_key(dt) -> str:
                                      np.dtype("float64")) else "bf16"
 
 
-def _sub_jaxprs(eqn):
-    """(jaxpr, extra_multiplier) pairs for one higher-order eqn."""
-    name = eqn.primitive.name
-    p = eqn.params
-    if name == "scan":
-        return [(p["jaxpr"].jaxpr, float(p["length"]))]
-    if name == "while":
-        # trip count unknown at jaxpr level; fori_loop carries no static
-        # bound here — callers that care pass bounded loops as scan.
-        return [(p["body_jaxpr"].jaxpr, 1.0)]
-    if name == "cond":
-        subs = [(b.jaxpr, 1.0) for b in p["branches"]]
-        return subs[-1:]  # branches are alternatives; take one
-    if name == "shard_map":
-        mesh = p.get("mesh")
-        size = 1.0
-        if mesh is not None:
-            size = float(_prod(mesh.shape.values()))
-        j = p["jaxpr"]
-        return [(getattr(j, "jaxpr", j), size)]
-    for k in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
-        if k in p:
-            j = p[k]
-            return [(getattr(j, "jaxpr", j), 1.0)]
-    return []
-
-
 def flops_by_dtype(closed_jaxpr) -> Dict[str, float]:
     """{"bf16": ..., "f32": ...} global matmul+conv flops."""
     out = {"bf16": 0.0, "f32": 0.0}
 
-    def walk(j, mult):
-        for eqn in j.eqns:
-            name = eqn.primitive.name
-            if name == "dot_general":
-                f, dt = _dot_flops(eqn)
-                out[_dtype_key(dt)] += mult * f
-            elif name == "conv_general_dilated":
-                f, dt = _conv_flops(eqn)
-                out[_dtype_key(dt)] += mult * f
-            else:
-                for sub, extra in _sub_jaxprs(eqn):
-                    walk(sub, mult * extra)
+    def visit(site):
+        name = site.eqn.primitive.name
+        if name == "dot_general":
+            f, dt = _dot_flops(site.eqn)
+            out[_dtype_key(dt)] += site.mult * f
+        elif name == "conv_general_dilated":
+            f, dt = _conv_flops(site.eqn)
+            out[_dtype_key(dt)] += site.mult * f
 
-    walk(closed_jaxpr.jaxpr, 1.0)
+    visitor.walk(closed_jaxpr, visit, branches="one")
     return out
 
 

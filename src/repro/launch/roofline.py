@@ -26,14 +26,22 @@ from typing import Dict, Optional, Union
 
 import numpy as np
 
-# Peak dense-matmul FLOPs (bf16), HBM bytes/s per chip, and bytes/s per
-# interconnect link. Public vendor numbers; "cpu_ci" is a deliberately
-# round model of the 2-core CI box so its rows are stable.
+# Peak dense-matmul FLOPs (bf16), HBM bytes/s per chip, bytes/s per
+# interconnect link, and per-core VMEM budget (the ~16 MiB Pallas block
+# working set the §15 kernel checker gates against). Public vendor
+# numbers; "cpu_ci" is a deliberately round model of the 2-core CI box
+# so its rows are stable — it carries the TPU VMEM budget so the
+# static-analysis gate checks the same limits everywhere.
+_VMEM = float(16 * 2 ** 20)
 HW_PROFILES: Dict[str, Dict[str, float]] = {
-    "tpu_v5e": {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9},
-    "tpu_v5p": {"peak_flops": 459e12, "hbm_bw": 2765e9, "link_bw": 100e9},
-    "tpu_v4": {"peak_flops": 275e12, "hbm_bw": 1228e9, "link_bw": 50e9},
-    "cpu_ci": {"peak_flops": 1e11, "hbm_bw": 10e9, "link_bw": 1e9},
+    "tpu_v5e": {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9,
+                "vmem_bytes": _VMEM},
+    "tpu_v5p": {"peak_flops": 459e12, "hbm_bw": 2765e9, "link_bw": 100e9,
+                "vmem_bytes": _VMEM},
+    "tpu_v4": {"peak_flops": 275e12, "hbm_bw": 1228e9, "link_bw": 50e9,
+               "vmem_bytes": _VMEM},
+    "cpu_ci": {"peak_flops": 1e11, "hbm_bw": 10e9, "link_bw": 1e9,
+               "vmem_bytes": _VMEM},
 }
 DEFAULT_HW_PROFILE = "tpu_v5e"
 
@@ -54,18 +62,16 @@ def hw_profile(name: Optional[str] = None) -> Dict[str, float]:
 # callers that predate profiles).
 HW = HW_PROFILES[DEFAULT_HW_PROFILE]
 
-_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-                "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-                "s32": 4, "u32": 4, "f32": 4,
-                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+# The HLO shape/dtype/collective tables live in analysis.visitor (ONE
+# copy, shared with launch.hlo_analysis); the module-level aliases keep
+# the historical names for external callers.
+from repro.analysis.visitor import (COLLECTIVES as _COLL,  # noqa: E402
+                                    DTYPE_BYTES as _DTYPE_BYTES,
+                                    SHAPE_RE as _SHAPE_RE)
 
-_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-         "collective-permute")
 _OP_RE = re.compile(
     r"=\s+(?:\([^)]*\)|[a-z0-9_]+\[[^\]]*\]\S*)\s+"
-    r"((?:all-gather|all-reduce|reduce-scatter|all-to-all|"
-    r"collective-permute)(?:-start)?)\(")
-_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+    r"((?:" + "|".join(_COLL) + r")(?:-start)?)\(")
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:

@@ -7,6 +7,7 @@ from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.common import DistCtx
@@ -86,5 +87,7 @@ def train_loop(model: Model, batches, *, key=None, lr: float = 3e-4,
             break
         state, metrics = step_fn(state, batch)
         if i % log_every == 0 or i == steps - 1:
-            history.append((i, float(metrics["loss"])))
+            # Explicit materialization (§15 tracer-coercion): the device
+            # sync happens here, on the log cadence, and nowhere else.
+            history.append((i, float(np.asarray(metrics["loss"]))))
     return state, history

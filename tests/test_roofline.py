@@ -104,7 +104,8 @@ def test_hw_profile_lookup():
     assert hw_profile(None) is HW_PROFILES[DEFAULT_HW_PROFILE]
     assert hw_profile() is HW               # back-compat alias holds
     for prof in HW_PROFILES.values():
-        assert set(prof) == {"peak_flops", "hbm_bw", "link_bw"}
+        assert set(prof) == {"peak_flops", "hbm_bw", "link_bw",
+                             "vmem_bytes"}
         assert all(v > 0 for v in prof.values())
 
 
