@@ -1,0 +1,123 @@
+"""Cluster-routed serving benchmark (DESIGN.md §16): the fused
+label -> dispatch -> per-cluster-head -> combine step vs the IFCA-shaped
+baseline that runs EVERY cluster's head over the full batch and selects
+by the vote afterwards. Both steps share the label body bitwise, so the
+measured gap is purely the routing win: S = k * C queue-slot forwards
+instead of k * B.
+
+Rows:
+  * ``route_step_routed`` / ``route_step_allk`` — median us per jitted
+    step call on identical inputs, with pts_per_s derived.
+  * ``route_speedup`` — allk_us / routed_us, asserted >= 5.0 in-row
+    (the PR's acceptance bar, bench_drift idiom: a regression errors
+    the bench into zero rows and the CI ``--require route_`` fails).
+  * ``route_session`` — end-to-end ``Session.serve_predict`` through
+    the streaming stack, with the steady-state recompile count across
+    two serve waves asserted zero in-row.
+
+The speedup row is compared against the committed baseline
+(``benchmarks/baselines/BENCH_route_ci.json``) by the CI perf gate.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.data.gaussian import late_device_stream, structured_devices
+from repro.fed.api import FederationPlan, Session
+from repro.fed import plane as plane_mod
+from repro.fed.stream import StreamConfig
+from repro.models import heads as heads_mod
+
+# Shapes where per-request head compute dominates the shared label
+# body (the label body is identical in both steps, so it dilutes the
+# measured ratio): wide-ish d and the transformer head arch. At
+# B=64, k=16 the all-k baseline runs 1024 head forwards per step vs
+# the routed step's k*C = 80 queue slots.
+K, KP, D = 16, 4, 128
+B, N = 64, 64
+HEADS = "qwen1.5-0.5b"
+ARCH = "transformer"
+
+
+def _cfg():
+    return StreamConfig(k=K, k_prime=KP, d=D, capacity=64, batch_size=B,
+                        bucket_sizes=(N,), heads=HEADS, head_arch=ARCH)
+
+
+def _step_inputs(cfg):
+    key = jax.random.PRNGKey(0)
+    kt, kd, kh, kk = jax.random.split(key, 4)
+    tau = jax.random.normal(kt, (K, D), jnp.float32) * 8.0
+    data = jax.random.normal(kd, (B, N, D), jnp.float32)
+    # Spread requests over the tau rows so the vote routes to many
+    # distinct queues (the realistic mix, not one hot cluster).
+    owner = jnp.arange(B, dtype=jnp.int32) % K
+    data = data + tau[owner][:, None, :]
+    pmask = jnp.ones((B, N), jnp.bool_)
+    keys = jax.random.split(kk, B).astype(jnp.uint32).reshape(B, 2)
+    kv = jnp.full((B,), K, jnp.int32)
+    heads = heads_mod.init_heads(kh, K, cfg.head_spec())
+    return tau, heads, keys, data, pmask, kv
+
+
+def _session_leg(full: bool):
+    """End-to-end serve_predict through the streaming stack; returns
+    (pts_per_s, steady-state recompiles across wave 2, tau_version)."""
+    waves = 6 if full else 3
+    fm = structured_devices(jax.random.PRNGKey(0), k=K, d=D, k_prime=KP,
+                            m0=4, n_per_comp_dev=25, sep=60.0)
+    rr = Session(FederationPlan(k=K, k_prime=KP, d=D)).run(
+        jax.random.PRNGKey(1), fm.data).detail
+    plan = FederationPlan(k=K, k_prime=KP, d=D, capacity=256,
+                          batch_size=B, bucket_sizes=(N,), heads=HEADS,
+                          head_arch=ARCH)
+    sess = Session.from_round(plan, rr)
+    s = late_device_stream(np.asarray(fm.means), KP, waves * B, 3,
+                           n_range=(20, 60))
+    reqs, kvs = [r[0] for r in s], [r[2] for r in s]
+    sess.serve_predict(reqs[:B], kvs[:B])              # compile warmup
+    warm = sess.stats()["plane_compiles"]
+    served, t0 = 0, time.perf_counter()
+    for lo in range(B, waves * B, B):
+        out = sess.serve_predict(reqs[lo:lo + B], kvs[lo:lo + B])
+        served += sum(p.labels.shape[0] for p in out)
+    dt = time.perf_counter() - t0
+    steady = sess.stats()["plane_compiles"] - warm
+    return served / dt, steady, sess.tau_version
+
+
+def run(full: bool):
+    cfg = _cfg()
+    args = _step_inputs(cfg)
+    repeats = 11 if full else 5
+    routed = jax.jit(plane_mod._make_routed_step(cfg))
+    allk = jax.jit(plane_mod._make_allk_step(cfg))
+    pts = B * N
+    rows = []
+    us = {}
+    for name, fn in (("routed", routed), ("allk", allk)):
+        u, out = time_call(fn, *args, repeats=repeats, warmup=2)
+        us[name] = u
+        rows.append(row(f"route_step_{name}", u,
+                        f"pts_per_s={pts / (u / 1e6):.0f};"
+                        f"kept={int(np.asarray(out[6]).sum())}/{B}"))
+    speedup = us["allk"] / us["routed"]
+    C = plane_mod.route_capacity(B, K, cfg.head_capacity)
+    # §16 acceptance bar: routed serving >= 5x the all-k baseline's
+    # points/sec on identical inputs (same label body, so this is the
+    # dispatch win alone). Asserted in-row like drift_adaptation.
+    assert speedup >= 5.0, (speedup, us)
+    rows.append(row("route_speedup", 0.0,
+                    f"speedup={speedup:.2f};k={K};C={C};"
+                    f"queue_slots={K * C};allk_forwards={K * B}"))
+    pps, steady, tv = _session_leg(full)
+    assert steady == 0, f"steady-state recompiles: {steady}"
+    rows.append(row("route_session", 0.0,
+                    f"pts_per_s={pps:.0f};steady_recompiles={steady};"
+                    f"tau_version={tv}"))
+    return rows

@@ -31,6 +31,7 @@ BENCHES = {
     "ablation_moe": "benchmarks.bench_ablation_moe",
     "roofline": "benchmarks.bench_roofline",
     "drift": "benchmarks.bench_drift",
+    "route": "benchmarks.bench_route_serve",
 }
 
 

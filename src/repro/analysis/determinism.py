@@ -3,8 +3,11 @@
 The repo's replay guarantees (bitwise labels / tau versions / fold
 state / drift decisions, DESIGN.md §9-§14) are runtime-tested at a few
 shapes; this pass certifies them STRUCTURALLY on every CI run by
-tracing the real serving artifacts — the serve step, the fold, the
-finalize, and the drift split/retire refresh, via the same
+tracing the real serving artifacts — the serve step, the §16 routed
+personalization step (label -> dispatch -> per-cluster head ->
+combine; its routing scatters are int/bool overwrites onto unique
+slots, which is exactly what this pass proves stays true), the fold,
+the finalize, and the drift split/retire refresh, via the same
 ``ServePlane`` construction the service runs — and walking their
 jaxprs with the shared :mod:`analysis.visitor` engine.
 
@@ -204,7 +207,7 @@ def _check_fold_contract(artifact, contract, scatter_sites):
 # --------------------------------------------------------------------------
 
 SMOKE = dict(k=16, k_prime=4, d=32, capacity=64, batch_size=8, n=64,
-             drift_half_life=8)
+             drift_half_life=8, heads="qwen1.5-0.5b", head_arch="ffn")
 
 
 @dataclass
@@ -214,12 +217,22 @@ class Artifact:
     contract: Contract
 
 
-def _smoke_cfg():
+def _smoke_cfg(heads: bool = False):
     from repro.fed.stream import StreamConfig
+    kw = ({"heads": SMOKE["heads"], "head_arch": SMOKE["head_arch"]}
+          if heads else {})
     return StreamConfig(k=SMOKE["k"], k_prime=SMOKE["k_prime"],
                         d=SMOKE["d"], capacity=SMOKE["capacity"],
                         batch_size=SMOKE["batch_size"],
-                        bucket_sizes=(SMOKE["n"],))
+                        bucket_sizes=(SMOKE["n"],), **kw)
+
+
+def _heads_struct(cfg):
+    """Abstract (shape/dtype) stacked head params for tracing the
+    routed step without materializing an init."""
+    from repro.models import heads as heads_mod
+    return jax.eval_shape(lambda: heads_mod.init_heads(
+        jax.random.PRNGKey(0), cfg.k, cfg.head_spec()))
 
 
 def _step_args(cfg):
@@ -277,6 +290,20 @@ def trace_artifacts(include_sharded: Optional[bool] = None
     arts.append(Artifact(
         "serve_step", jax.make_jaxpr(step)(*_step_args(cfg)), Contract()))
 
+    # The §16 routed personalization step: same label body + routing
+    # scatters + per-cluster head forwards. Single-host: no collectives
+    # allowed; the audit also proves every routing scatter is an
+    # int/bool overwrite (an accumulating float scatter here would be
+    # a replay hazard).
+    hcfg = _smoke_cfg(heads=True)
+    routed = plane_mod._make_routed_step(hcfg)
+    tau_s, keys_s, data_s, pmask_s, kv_s = _step_args(hcfg)
+    arts.append(Artifact(
+        "routed_step",
+        jax.make_jaxpr(routed)(tau_s, _heads_struct(hcfg), keys_s,
+                               data_s, pmask_s, kv_s),
+        Contract()))
+
     def fold(state, slots, centers, cmask, weights, epochs):
         return server.aggregate_incremental(state, slots, centers, cmask,
                                             weights=weights, epochs=epochs)
@@ -331,8 +358,20 @@ def trace_artifacts(include_sharded: Optional[bool] = None
             jax.make_jaxpr(fold_sh)(*_fold_args(cfg)),
             Contract(allow_collectives=frozenset({"all_gather"}),
                      fold_leaves=leaves)))
+        plane_h = plane_mod.ServePlane(hcfg, mesh=mesh,
+                                       serve_axes=("data",))
+        routed_sh = plane_h._routed_plane_for(s)[0]
+        # Sharded: the global keep/overflow ranking all_gathers the
+        # int32 cluster votes (deterministic shard-order tiling) —
+        # exactly the fold's collective allowance, nothing else.
+        arts.append(Artifact(
+            "routed_step_sharded",
+            jax.make_jaxpr(routed_sh)(tau_s, _heads_struct(hcfg),
+                                      keys_s, data_s, pmask_s, kv_s),
+            Contract(allow_collectives=frozenset({"all_gather"}))))
     else:
-        skipped.extend(["serve_step_sharded", "fold_sharded"])
+        skipped.extend(["serve_step_sharded", "fold_sharded",
+                        "routed_step_sharded"])
     return arts, skipped
 
 

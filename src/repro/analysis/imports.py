@@ -4,9 +4,15 @@ Builds the static import graph of ``src/repro`` (AST ``import`` /
 ``from ... import`` statements — including imports nested inside
 functions, which is how the lazy-loading modules here pull heavy deps)
 plus ``benchmarks/*.py`` as external entry points, then reports which
-modules of the dormant model zoo (``repro.models.*`` and
-``repro.configs.*``, inherited from the serving scaffold the k-FED
-plane grew out of) are actually reachable from the live entry points:
+modules of the model zoo (``repro.models.*`` and ``repro.configs.*``)
+are actually reachable from the live entry points. The zoo is no
+longer dormant: the §16 routed-serving heads (``models/heads.py``,
+reached through ``fed.api`` -> ``fed.stream`` -> ``fed.plane``) pull
+in the ``models`` building blocks, and ``repro.configs`` statically
+imports every registered architecture module — so the report now
+certifies the zoo STAYS load-bearing (a config module falling out of
+the reachable set is a regression the head-config tests assert
+against):
 
   entry points = benchmarks/*.py, repro.launch.*, repro.fed.api,
                  repro.analysis (this gate itself)

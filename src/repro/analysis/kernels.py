@@ -152,6 +152,22 @@ def ladder_plans() -> List[Tuple[str, dict]]:
                       moe_dispatch.dispatch_block_plan(1024, d, 2048)))
         plans.append((f"S2048,d{d},T1024",
                       moe_dispatch.combine_block_plan(2048, d, 1024)))
+    # The §16 routed-serving dispatch/combine shapes: whole (n_pad * d)
+    # requests gather into k * C queue slots (C from the default
+    # head_capacity), and (S, d) pooled head outputs combine back to
+    # request order with top_k=1 — per bucket rung x dim column.
+    from repro.fed.plane import route_capacity
+    cap = next(f.default for f in dataclasses.fields(StreamConfig)
+               if f.name == "head_capacity")
+    for n in ladder():
+        for d, kp, k in DIM_COLUMNS:
+            C = route_capacity(B, k, cap)
+            S = k * C
+            plans.append((f"route,B{B},n{n},d{d},k{k},C{C}",
+                          moe_dispatch.dispatch_block_plan(B, n * d, S)))
+            plans.append((f"route,S{S},d{d},B{B}",
+                          moe_dispatch.combine_block_plan(S, d, B,
+                                                          top_k=1)))
     return plans
 
 

@@ -80,13 +80,27 @@ def load_pytree(path: str, like, shardings=None):
     return tree
 
 
+def encode_tag(s: str) -> np.ndarray:
+    """A short string as a 1-d uint8 byte array — the form a schema tag
+    rides ``save_pytree`` in (npz 0-d unicode arrays cannot take the
+    non-native-dtype byte-view path, so tags are stored pre-encoded;
+    the v5 ``heads_tag`` is the first user)."""
+    return np.frombuffer(s.encode("utf-8"), np.uint8).copy()
+
+
+def decode_tag(arr) -> str:
+    """Inverse of :func:`encode_tag`."""
+    return np.asarray(arr, np.uint8).tobytes().decode("utf-8")
+
+
 def npz_keys(path: str) -> set:
     """The flattened key paths present in a checkpoint — how restore
     paths branch between schema generations (e.g. the streaming
     service's single-tau v1 npz, the double-buffered ``tau_bufs`` /
-    ``tau_meta`` v2 schema of DESIGN.md §11, and the v3 schema that
-    adds the ``autoscale_*`` decision arrays of §12) without loading
-    any array data."""
+    ``tau_meta`` v2 schema of DESIGN.md §11, the v3 schema that
+    adds the ``autoscale_*`` decision arrays of §12, v4's drift/epoch
+    arrays, and v5's ``heads*`` per-cluster head params of §16)
+    without loading any array data."""
     with np.load(path if path.endswith(".npz")
                  else path + ".npz") as data:
         return set(data.files)

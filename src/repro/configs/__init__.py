@@ -1,3 +1,13 @@
 from repro.configs.base import (SHAPES, InputShape, ModelConfig,  # noqa
                                 get_config, list_archs)
 from repro.configs.shapes import cache_specs, dummy_inputs, input_specs  # noqa
+
+# Static imports of every registered architecture module. base._ensure_loaded
+# importlib-loads these lazily, but the serving tier's head registry
+# (models/heads.py resolve_head_spec) makes them load-bearing — static
+# imports keep them visible to the AST reachability report
+# (analysis/imports.py) and fail fast if a config module breaks.
+from repro.configs import (deepseek_v3_671b, granite_3_2b,  # noqa
+                           internvl2_26b, mistral_nemo_12b, mixtral_8x7b,
+                           nemotron_4_15b, qwen1_5_0_5b, rwkv6_7b,
+                           whisper_base, zamba2_1_2b)

@@ -113,6 +113,20 @@ class FederationPlan:
                TauBuffer as one atomic versioned bump, replayed bitwise
                from checkpoints). Under ``weighted_reservoir`` the
                admission key also uses the decayed mass.
+    Heads:     ``heads`` turns on cluster-routed personalization serving
+               (DESIGN.md §16): each request's Theorem 3.2 label routes
+               it through ONE per-cluster head on the serve plane
+               (``off`` default — the plane is bitwise-identical to a
+               plan without the field; ``linear`` the affine head; any
+               ``configs.list_archs()`` name adopts that architecture's
+               REDUCED activation/FFN ratio at width ``d``).
+               ``head_arch`` picks the block (``ffn`` | ``transformer``
+               — the config-flagged attention head), ``head_capacity``
+               sizes the per-cluster dispatch queues as a multiple of
+               ``batch_size / k`` (overflowed requests still get
+               labels, just no prediction). Head params ride checkpoint
+               schema v5; ``Session.serve_predict``/``flush_predict``
+               return the predictions.
     """
     k: int
     k_prime: int
@@ -138,6 +152,9 @@ class FederationPlan:
     drift_split_factor: float = 2.0
     drift_retire_frac: float = 0.1
     drift_max_moves: int = 1
+    heads: str = "off"
+    head_capacity: float = 1.25
+    head_arch: str = "ffn"
     checkpoint: Optional[str] = None
 
     def __post_init__(self):
@@ -195,6 +212,8 @@ class FederationPlan:
             drift_split_factor=self.drift_split_factor,
             drift_retire_frac=self.drift_retire_frac,
             drift_max_moves=self.drift_max_moves,
+            heads=self.heads, head_capacity=self.head_capacity,
+            head_arch=self.head_arch,
             local_kw=dict(self.local_kw))
 
     def with_options(self, **kw) -> "FederationPlan":
@@ -453,6 +472,15 @@ class Session:
         each request was served under (DESIGN.md §11)."""
         return self.service.serve_versioned(datas, k_valid)
 
+    def serve_predict(self, datas, k_valid=None):
+        """Serve a batch THROUGH the plan's per-cluster heads
+        (``plan.heads != "off"``, DESIGN.md §16): one
+        ``stream.ServedPrediction`` per input — the
+        :meth:`serve_versioned` labels/version plus the routed head's
+        pooled prediction, majority-vote cluster, and whether the
+        request was routed (vs overflowed its dispatch queue)."""
+        return self.service.serve_predict(datas, k_valid)
+
     def submit(self, data, k_valid: Optional[int] = None) -> int:
         return self.service.submit(data, k_valid)
 
@@ -464,6 +492,12 @@ class Session:
         request; a flush boundary is where a staged async refresh
         commits its atomic version bump."""
         return self.service.flush_versioned()
+
+    def flush_predict(self):
+        """{request_id: ``stream.ServedPrediction``} for every pending
+        request — :meth:`flush_versioned` plus the routed per-cluster
+        head predictions (``plan.heads != "off"``, DESIGN.md §16)."""
+        return self.service.flush_predict()
 
     def refresh(self):
         """Re-finalize Algorithm 2 over all folded reports and swap in

@@ -15,18 +15,29 @@ from repro.core.kfed import _kfed_impl
 from repro.fed.fedavg import FedAvgConfig, fedavg_round
 
 
+def majority_vote(labels, k: int):
+    """Per-row majority cluster from per-point Theorem 3.2 labels.
+    labels: (Z, n) int32 with -1 for masked points. First-max tie-break
+    (argmax) — the SAME vote the routed serving step (DESIGN.md §16)
+    uses, so offline `cluster_devices` assignment and online routing
+    agree bitwise on identical labels. Counts are a fixed-order one-hot
+    reduction, NOT a bincount: bincount with float weights lowers to a
+    float scatter-add on the data-derived labels, which the §15
+    determinism audit rejects on the routed serving path (and the sums
+    of 1.0s are exact either way, so the vote is unchanged)."""
+    oh = jax.nn.one_hot(jnp.maximum(labels, 0), k, dtype=jnp.float32)
+    counts = jnp.sum(oh * (labels >= 0)[..., None].astype(jnp.float32),
+                     axis=1)
+    return jnp.argmax(counts, axis=1)
+
+
 def cluster_devices(key, features, k: int, k_prime: int = 1):
     """Cluster devices by their summary vectors. features: (Z, n_feat, d)
     — with n_feat == 1 this is exactly device-level clustering (k' = 1 per
     the Table 2 setup); larger n_feat clusters per-device feature sets and
     majority-votes the device's cluster (the k' = 2 rows)."""
     res = _kfed_impl(key, features, k=k, k_prime=k_prime)
-    lbl = res.labels                      # (Z, n_feat)
-    Z, k_ = lbl.shape[0], k
-    counts = jax.vmap(lambda row: jnp.bincount(
-        jnp.maximum(row, 0), weights=(row >= 0).astype(jnp.float32),
-        length=k_))(lbl)
-    return jnp.argmax(counts, axis=1), res
+    return majority_vote(res.labels, k), res
 
 
 def kfed_personalize(key, loss_fn: Callable, init_params, device_data,

@@ -20,6 +20,14 @@ single host or shard_mapped over a mesh:
     an exact psum). Slot admission itself stays host-side in
     ``fed/policy.py`` and is shard-deterministic by contract — the plane
     only ever executes an already-decided ``(B,)`` slot vector.
+  * **routed personalization step** (§16, ``heads != "off"``) — the
+    serve step FUSED with cluster-routed per-request predictions:
+    majority-vote one cluster per request from its Theorem 3.2 labels,
+    ``moe_dispatch``-gather whole requests into per-cluster head
+    queues (clusters are the experts), run each queue through ITS head
+    from the ``models``/``configs`` zoo, ``moe_combine`` back to
+    request order. Same cache/versioning discipline as the plain step;
+    the label outputs stay bitwise-identical to the heads=off plane.
   * **double-buffered tau** (:class:`TauBuffer`) — serving reads
     ``bufs[active]``; a refresh builds the standby buffer while serving
     continues, and the swap is an atomic version bump. Every served
@@ -42,6 +50,7 @@ two device computations of the hot path and their mesh mapping.
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -55,7 +64,7 @@ from repro.core.local_kmeans import batched_local_prepare, split_local_kw
 from repro.kernels import ops
 from repro.utils.compat import shard_map as _shard_map
 
-__all__ = ["ServePlane", "ServePlaneError", "TauBuffer"]
+__all__ = ["ServePlane", "ServePlaneError", "TauBuffer", "route_capacity"]
 
 
 class ServePlaneError(ValueError):
@@ -157,6 +166,146 @@ def _make_step(cfg):
     return step
 
 
+def route_capacity(batch: int, k: int, factor: float) -> int:
+    """Per-cluster dispatch queue depth for a ``batch``-request step:
+    ``ceil(batch * factor / k)`` slots (>= 1). ``factor`` is the plan's
+    ``head_capacity`` — 1.0 sizes for a perfectly uniform cluster mix;
+    the default 1.25 absorbs moderate skew. Requests past a cluster's
+    queue still get labels, just no prediction (DESIGN.md §16). Static
+    per (batch, k, factor), so it adds no cache keys beyond the batch
+    shape the plane already specializes on."""
+    return max(1, int(math.ceil(batch * float(factor) / k)))
+
+
+def _make_routed_step(cfg, axes=None, axis_sizes=None):
+    """The fused routed personalization step (DESIGN.md §16): the SAME
+    label body as :func:`_make_step` (labels/centers/fold reports stay
+    bitwise-identical to the heads=off plane), then per-request majority
+    vote -> ``moe_dispatch`` gather into per-cluster head queues
+    (clusters are the experts; whole requests gather by scalar-prefetch
+    routing indices, no (k, C, n, d) scatter materialized request-side)
+    -> every queue through ITS head (``models/heads.py``, vmapped over
+    the stacked params) -> ``moe_combine`` back to request order. All
+    routing scatters are int/bool OVERWRITES onto unique slots, so the
+    step passes the §15 determinism audit.
+
+    ``axes``/``axis_sizes`` (set by the sharded plane): the
+    keep/overflow decision must be a function of the GLOBAL batch, or
+    the sharded plane would drop different requests than the
+    single-host plane. Each shard all_gathers the (tiny, int32)
+    cluster votes, ranks its own requests against the global
+    first-come order, and keeps ``C = route_capacity(global B, ...)``
+    per cluster — the one deterministic, shard-order-tiled collective
+    the routed artifact's §15 contract allows (exactly the sharded
+    fold's allowance). Dispatch and head forwards stay shard-local."""
+    from repro.fed.personalize import majority_vote
+    from repro.models import heads as heads_mod
+    spec = cfg.head_spec()
+    base = _make_step(cfg)
+    k = cfg.k
+    shards = 1
+    if axes:
+        for sz in axis_sizes:
+            shards *= int(sz)
+
+    def routed(tau, head_params, keys, data, point_mask, k_valid):
+        labels, centers, cmask, weights = base(tau, keys, data,
+                                               point_mask, k_valid)
+        B, n_pad, d = data.shape
+        C = route_capacity(B * shards, k, cfg.head_capacity)
+        S = k * C
+        # One cluster per request — the same first-max vote as the
+        # offline fed/personalize.cluster_devices assignment. A padding
+        # row (no valid points) votes the out-of-range class k: its
+        # one-hot is all-zero, so padding never consumes a queue slot
+        # and real requests route independently of batch composition.
+        cluster = majority_vote(jnp.where(point_mask, labels, -1),
+                                k).astype(jnp.int32)
+        req = point_mask.any(axis=1)
+        eff = jnp.where(req, cluster, k)
+        col = jnp.minimum(eff, k - 1)  # safe gather column for padding
+        if axes is None:
+            gcl, off = eff, 0
+        else:
+            gcl = jax.lax.all_gather(eff, axes, tiled=True)
+            idx = jnp.int32(0)
+            for ax, sz in zip(axes, axis_sizes):
+                idx = idx * sz + jax.lax.axis_index(ax)
+            off = idx * B
+        # Global queue position = exclusive running count of earlier
+        # same-cluster requests over the WHOLE batch, in global row
+        # order; this shard's rows are the [off, off + B) slice.
+        goh = jax.nn.one_hot(gcl, k, dtype=jnp.int32)
+        cum = jnp.cumsum(goh, axis=0) - goh
+        if axes is not None:
+            cum = jax.lax.dynamic_slice_in_dim(cum, off, B, axis=0)
+        kept = (cum[jnp.arange(B), col] < C) & req
+        # Local slot = exclusive running count among locally-KEPT
+        # same-cluster rows (a subset of the <= C globally-kept ones,
+        # so it always fits; slot order never changes the math — each
+        # queue entry is one whole request through one head).
+        ohl = (jax.nn.one_hot(eff, k, dtype=jnp.int32)
+               * kept[:, None].astype(jnp.int32))
+        lpos = (jnp.cumsum(ohl, axis=0) - ohl)[jnp.arange(B), col]
+        slot = cluster * C + lpos
+        # Invert request->slot into the dispatch kernel's slot->request
+        # routing vector. Kept slots are UNIQUE, overflow goes to the
+        # dropped sentinel S: int/bool overwrite scatters, never a
+        # float accumulation (§15).
+        slot_s = jnp.where(kept, slot, S)
+        rows = jnp.arange(B, dtype=jnp.int32)
+        src = jnp.zeros((S,), jnp.int32).at[slot_s].set(rows,
+                                                        mode="drop")
+        valid = jnp.zeros((S,), jnp.bool_).at[slot_s].set(True,
+                                                          mode="drop")
+        # Whole requests gather into queue order (points + validity).
+        qdata = ops.moe_dispatch(data.reshape(B, n_pad * d), src,
+                                 valid).reshape(k, C, n_pad, d)
+        qmask = ops.moe_dispatch(point_mask.astype(jnp.float32), src,
+                                 valid).reshape(k, C, n_pad) > 0.5
+        ybuf = heads_mod.apply_heads(head_params, qdata, qmask, spec,
+                                     serve_dtype=cfg.serve_dtype)
+        # top_k=1 with the keep mask as gates: overflowed requests
+        # combine to exactly zero.
+        preds = ops.moe_combine(ybuf.reshape(S, d),
+                                jnp.where(kept, slot, 0),
+                                kept.astype(jnp.float32), top_k=1)
+        return labels, centers, cmask, weights, preds, cluster, kept
+
+    return routed
+
+
+def _make_allk_step(cfg):
+    """The IFCA-shaped baseline the routed step is benchmarked against:
+    run EVERY cluster's head over the full batch (k forwards per
+    request) and select by the vote afterwards. Same label body, same
+    per-request predictions as the routed step on its kept requests —
+    just k/``head_capacity``-fold more head FLOPs. Benchmark-only; the
+    serving stack never calls this."""
+    from repro.fed.personalize import majority_vote
+    from repro.models import heads as heads_mod
+    spec = cfg.head_spec()
+    base = _make_step(cfg)
+    k = cfg.k
+
+    def allk(tau, head_params, keys, data, point_mask, k_valid):
+        labels, centers, cmask, weights = base(tau, keys, data,
+                                               point_mask, k_valid)
+        B = data.shape[0]
+        cluster = majority_vote(jnp.where(point_mask, labels, -1),
+                                k).astype(jnp.int32)
+        qdata = jnp.broadcast_to(data[None], (k,) + data.shape)
+        qmask = jnp.broadcast_to(point_mask[None],
+                                 (k,) + point_mask.shape)
+        yb = heads_mod.apply_heads(head_params, qdata, qmask, spec,
+                                   serve_dtype=cfg.serve_dtype)
+        preds = yb[cluster, jnp.arange(B)]
+        kept = jnp.ones((B,), jnp.bool_)
+        return labels, centers, cmask, weights, preds, cluster, kept
+
+    return allk
+
+
 class ServePlane:
     """Executes the streaming hot path for an ``AttachService``.
 
@@ -227,9 +376,12 @@ class ServePlane:
         # (kind, shards, shape) signatures — what the autoscale tests
         # and the benchmark assert stays flat in steady state.
         self._planes = {}
+        self._routed = {}
         self._signatures = set()
         self.compile_count = 0
         self._plane_for(n)
+        if getattr(cfg, "heads", "off") != "off":
+            self._routed_plane_for(n)
 
     # ------------------------------------------------------------------
     def _submesh(self, s: int):
@@ -281,6 +433,59 @@ class ServePlane:
                      NamedSharding(mesh, P()))
         self._planes[s] = entry
         return entry
+
+    def _routed_plane_for(self, s: int):
+        """The compiled routed-step entry for an active shard count —
+        the §16 sibling of :meth:`_plane_for` (which it calls first, so
+        shard-count validation and the label plane stay the single
+        source of truth). head_params ride replicated like tau."""
+        entry = self._routed.get(s)
+        if entry is not None:
+            return entry
+        self._plane_for(s)
+        if s == 1:
+            entry = (jax.jit(_make_routed_step(self.cfg)), None, None)
+        else:
+            from jax.sharding import NamedSharding
+            mesh = self.mesh if s == self.n_shards else self._submesh(s)
+            sizes = tuple(int(mesh.shape[a]) for a in self.axes)
+            routed = _make_routed_step(self.cfg, axes=self.axes,
+                                       axis_sizes=sizes)
+            spec = P(self.axes)
+            routed_sharded = _shard_map(
+                routed, mesh=mesh,
+                in_specs=(P(), P(), spec, spec, spec, spec),
+                out_specs=(spec,) * 7)
+            entry = (jax.jit(routed_sharded), NamedSharding(mesh, spec),
+                     NamedSharding(mesh, P()))
+        self._routed[s] = entry
+        return entry
+
+    def routed_step(self, tau, head_params, keys, data, point_mask,
+                    k_valid, shards=None):
+        """Serve one (B, n_pad, d) batch THROUGH the per-cluster heads
+        (DESIGN.md §16). Returns the :meth:`step` quadruple plus
+        (preds (B, d) f32, cluster (B,) i32, kept (B,) bool) — preds
+        are zero and kept False where the request overflowed its
+        cluster's dispatch queue. The label quadruple is
+        bitwise-identical to :meth:`step` on the same inputs."""
+        s = self.n_shards if shards is None else int(shards)
+        step_fn, sharding, state_sh = self._routed_plane_for(s)
+        self._count("routed", s, data.shape)
+        if sharding is not None:
+            tau = jax.device_put(tau, state_sh)
+            head_params = jax.device_put(head_params, state_sh)
+            keys, data, point_mask, k_valid = (
+                jax.device_put(keys, sharding),
+                jax.device_put(data, sharding),
+                jax.device_put(point_mask, sharding),
+                jax.device_put(k_valid, sharding))
+        elif self.axes:
+            dev = self.mesh.devices.flatten()[0]
+            tau = jax.device_put(tau, dev)
+            head_params = jax.device_put(head_params, dev)
+        return step_fn(tau, head_params, keys, data, point_mask,
+                       k_valid)
 
     def _count(self, kind: str, s: int, shape) -> None:
         sig = (kind, s, tuple(shape))

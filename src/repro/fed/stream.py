@@ -99,6 +99,25 @@ class StreamConfigError(ValueError):
     values) — raised at construction, never deep inside tracing."""
 
 
+class ServedPrediction(NamedTuple):
+    """One request's routed-serving result (DESIGN.md §16): its
+    Theorem 3.2 labels + the tau version that produced them (exactly
+    :meth:`AttachService.flush_versioned`'s pair), plus the per-cluster
+    head's pooled prediction. ``routed=False`` marks a request that
+    overflowed its cluster's dispatch queue — it still has labels and a
+    majority-vote ``cluster``, but ``prediction`` is the zero vector."""
+    labels: "np.ndarray"      # (n,) int32 per-point labels
+    tau_version: int
+    prediction: "np.ndarray"  # (d,) f32 pooled head output
+    cluster: int              # majority-vote cluster (the head index)
+    routed: bool              # False = dispatch-queue overflow
+
+
+# Key-derivation salt separating the head-init PRNG stream from the
+# per-request fold_in streams (which consume request ids).
+_HEADS_SALT = 0x48454144  # "HEAD"
+
+
 class _ServerStateV3(NamedTuple):
     """Restore template for pre-v4 checkpoints: the fold state before
     the drift layer's epoch stamps, with the SAME field names (and so
@@ -136,6 +155,9 @@ class StreamConfig:
     drift_split_factor: float = 2.0   # split centers above this x mean mass
     drift_retire_frac: float = 0.1    # retire centers below this x mean mass
     drift_max_moves: int = 1    # split/retire moves per flush boundary
+    heads: str = "off"          # per-cluster serving heads: off|linear|<config>
+    head_capacity: float = 1.25  # dispatch queue slots per cluster, x B/k
+    head_arch: str = "ffn"      # head architecture: ffn | transformer
     local_kw: dict = field(default_factory=dict)  # Algorithm 1 options
 
     def __post_init__(self):
@@ -208,6 +230,32 @@ class StreamConfig:
                  "the staged path; bf16 stores points/centers/tau in "
                  "bfloat16 with f32 accumulation — tolerance-bounded, "
                  "see DESIGN.md §13)")
+        if not (isinstance(self.head_capacity, (int, float))
+                and float(self.head_capacity) > 0.0):
+            _bad("head_capacity", self.head_capacity,
+                 "must be a float > 0 (per-cluster dispatch queue slots "
+                 "as a multiple of batch_size / k; requests past a "
+                 "cluster's queue are served labels without a "
+                 "prediction — DESIGN.md §16)")
+        if self.heads != "off":
+            from repro.models import heads as heads_mod
+            if self.head_arch not in heads_mod.HEAD_ARCHS:
+                _bad("head_arch", self.head_arch,
+                     f"accepted values are {list(heads_mod.HEAD_ARCHS)}")
+            try:
+                heads_mod.resolve_head_spec(self.heads, self.head_arch,
+                                            self.d)
+            except heads_mod.HeadConfigError as e:
+                _bad("heads", self.heads, str(e))
+
+    def head_spec(self):
+        """Resolved :class:`repro.models.heads.HeadSpec` for this plan
+        (None when heads are off)."""
+        if self.heads == "off":
+            return None
+        from repro.models import heads as heads_mod
+        return heads_mod.resolve_head_spec(self.heads, self.head_arch,
+                                           self.d)
 
 
 class AttachService:
@@ -226,7 +274,7 @@ class AttachService:
                  seed: int = 0, next_id: int = 0,
                  since_refresh: int = 0, served_devices: int = 0,
                  served_points: int = 0, mesh=None, serve_axes=None,
-                 tau_buffer: Optional[TauBuffer] = None):
+                 tau_buffer: Optional[TauBuffer] = None, heads=None):
         self.cfg = cfg
         try:
             self.plane = ServePlane(cfg, mesh=mesh, serve_axes=serve_axes)
@@ -258,8 +306,28 @@ class AttachService:
         self._served_devices = int(served_devices)
         self._served_points = int(served_points)
         self._pending: List[Tuple[int, np.ndarray, int]] = []
-        # served, not yet delivered: rid -> (labels, tau version)
-        self._done: Dict[int, Tuple[np.ndarray, int]] = {}
+        # served, not yet delivered: rid -> (labels, tau version,
+        # (prediction, cluster, routed) | None with heads off)
+        self._done: Dict[int, tuple] = {}
+        # Per-cluster serving heads (DESIGN.md §16): k stacked param
+        # sets, deterministically derived from the service seed on a
+        # salted PRNG stream (so restores and re-inits agree), unless a
+        # v5 checkpoint restore hands the folded params in. A staged
+        # split/retire head re-map (``_heads_perm``) commits at the
+        # SAME boundary as the tau version bump.
+        self._head_spec = cfg.head_spec()
+        self._heads_perm = None
+        self._routed_served = 0
+        self._overflowed = 0
+        if self._head_spec is None:
+            self.heads = None
+        elif heads is not None:
+            self.heads = jax.tree.map(jnp.asarray, heads)
+        else:
+            from repro.models import heads as heads_mod
+            self.heads = heads_mod.init_heads(
+                jax.random.fold_in(self._base_key, _HEADS_SALT),
+                cfg.k, self._head_spec)
         # Warn-once latch keyed on (active ladder, rung): a global bool
         # here either re-fired every flush or went silent for a NEW
         # coalesced ladder after an autoscale switch — each distinct
@@ -362,18 +430,46 @@ class AttachService:
 
     def flush_versioned(self) -> Dict[int, Tuple[np.ndarray, int]]:
         """Serve every pending request; returns
-        {request_id: ((n,) labels, tau_version)}.
+        {request_id: ((n,) labels, tau_version)}. With heads enabled,
+        :meth:`flush_predict` additionally returns the per-cluster head
+        predictions of the same serve step."""
+        return {rid: (lbl, ver)
+                for rid, (lbl, ver, _) in self._flush_all().items()}
+
+    def flush_predict(self) -> Dict[int, ServedPrediction]:
+        """Serve every pending request through the routed
+        personalization step; returns
+        {request_id: :class:`ServedPrediction`}. Labels and tau
+        versions are the ones :meth:`flush_versioned` would have
+        returned (bitwise — the routed step shares the label body)."""
+        if self._head_spec is None:
+            raise StreamConfigError(
+                "flush_predict() needs per-cluster serving heads: set "
+                "StreamConfig.heads to 'linear' or a registered model "
+                "config (it is 'off')")
+        return {rid: ServedPrediction(lbl, ver, pred[0], pred[1],
+                                      pred[2])
+                for rid, (lbl, ver, pred)
+                in self._flush_all().items()}
+
+    def _flush_all(self) -> Dict[int, tuple]:
+        """THE flush body: serve every pending request; returns
+        {request_id: (labels, tau_version, pred)} where ``pred`` is
+        ``(prediction, cluster, routed)`` with heads enabled, None
+        otherwise.
 
         Requests are grouped by pad bucket and served in fixed
         (batch_size, n_pad, d) shapes — short batches pad by repeating
         the last real request (discarded). Served reports fold into the
         incremental server state, triggering a refresh on cadence. A
-        flush boundary is where a staged async tau swap commits, so
-        every request in one flush-and-refresh window maps to exactly
-        one tau version.
+        flush boundary is where a staged async tau swap commits (and
+        with it any staged split/retire head re-map — one atomic
+        version bump covers both), so every request in one
+        flush-and-refresh window maps to exactly one tau version.
         """
         if self._taubuf.pending:
             self._taubuf = self._taubuf.commit()
+            self._commit_heads_perm()
         pending, self._pending = self._pending, []
         # The flush boundary is the ONE place scaling decisions land
         # (§12): snapshot the queue (depth + base-ladder histogram —
@@ -439,12 +535,29 @@ class AttachService:
         return out
 
     def _deliver(self, staged, out) -> None:
-        """Phase 2 of a flush: gather each dispatched batch's labels to
-        host and hand them (with their tau version) to the caller."""
-        for batch, labels_dev, version in staged:
+        """Phase 2 of a flush: gather each dispatched batch's labels
+        (and, with heads on, predictions) to host and hand them with
+        their tau version to the caller."""
+        for entry in staged:
+            if len(entry) == 3:
+                batch, labels_dev, version = entry
+                preds = cl = kept = None
+            else:
+                (batch, labels_dev, version, preds_dev, cl_dev,
+                 kept_dev) = entry
+                preds = np.asarray(preds_dev)
+                cl = np.asarray(cl_dev)
+                kept = np.asarray(kept_dev)
             labels = np.asarray(labels_dev)
             for i, (rid, arr, _) in enumerate(batch):
-                out[rid] = (labels[i, :arr.shape[0]], version)
+                if preds is None:
+                    out[rid] = (labels[i, :arr.shape[0]], version, None)
+                else:
+                    routed = bool(kept[i])
+                    out[rid] = (labels[i, :arr.shape[0]], version,
+                                (preds[i].copy(), int(cl[i]), routed))
+                    self._routed_served += int(routed)
+                    self._overflowed += int(not routed)
                 self._served_devices += 1
                 self._served_points += arr.shape[0]
 
@@ -459,10 +572,26 @@ class AttachService:
         """Like :meth:`serve`, returning (labels, tau_version) pairs —
         the version identifies exactly which tau buffer produced each
         request's attachment."""
+        return [(lbl, ver)
+                for lbl, ver, _ in self._serve_all(datas, k_valid)]
+
+    def serve_predict(self, datas, k_valid=None) -> List[ServedPrediction]:
+        """Submit + flush through the per-cluster heads: one
+        :class:`ServedPrediction` per input (same labels/versions as
+        :meth:`serve_versioned`)."""
+        if self._head_spec is None:
+            raise StreamConfigError(
+                "serve_predict() needs per-cluster serving heads: set "
+                "StreamConfig.heads to 'linear' or a registered model "
+                "config (it is 'off')")
+        return [ServedPrediction(lbl, ver, pred[0], pred[1], pred[2])
+                for lbl, ver, pred in self._serve_all(datas, k_valid)]
+
+    def _serve_all(self, datas, k_valid) -> List[tuple]:
         kvs = ([None] * len(datas) if k_valid is None else list(k_valid))
         assert len(kvs) == len(datas), (len(kvs), len(datas))
         rids = [self.submit(d, kv) for d, kv in zip(datas, kvs)]
-        got = self.flush_versioned()
+        got = self._flush_all()
         mine = [got.pop(r) for r in rids]
         self._done.update(got)
         return mine
@@ -503,13 +632,21 @@ class AttachService:
         keys = jax.vmap(lambda r: jax.random.fold_in(self._base_key, r))(
             jnp.asarray(rids, jnp.uint32))
         version = self._taubuf.version
-        labels, centers, cmask, weights = self.plane.step(
-            self.tau, keys, jnp.asarray(data), jnp.asarray(pmask),
-            jnp.asarray(kv), shards=shards)
+        if self._head_spec is not None:
+            (labels, centers, cmask, weights, preds, cluster,
+             kept) = self.plane.routed_step(
+                self.tau, self.heads, keys, jnp.asarray(data),
+                jnp.asarray(pmask), jnp.asarray(kv), shards=shards)
+            entry = (batch, labels, version, preds, cluster, kept)
+        else:
+            labels, centers, cmask, weights = self.plane.step(
+                self.tau, keys, jnp.asarray(data), jnp.asarray(pmask),
+                jnp.asarray(kv), shards=shards)
+            entry = (batch, labels, version)
         if cfg.fold_reports:
             self._fold(batch, rids, centers, cmask, weights,
                        shards=shards)
-        staged.append((batch, labels, version))
+        staged.append(entry)
 
     # -------------------------------------------------------------- fold --
 
@@ -603,7 +740,7 @@ class AttachService:
             flat = jnp.where(mask[..., None], st.centers,
                              jnp.zeros_like(st.centers)
                              ).reshape(-1, cfg.d).astype(jnp.float32)
-            tau, _, _, n_mv = server.split_retire(
+            tau, take, donors, n_mv = server.split_retire(
                 flat, mask.reshape(-1), agg, mass, cfg.k,
                 split_factor=cfg.drift_split_factor,
                 retire_frac=cfg.drift_retire_frac,
@@ -612,6 +749,20 @@ class AttachService:
             self._drift_events += 1 if moves else 0
             self._drift_moves += moves
             self._drift_last = moves
+            if moves and self._head_spec is not None:
+                # A re-seeded center splits off its donor's traffic, so
+                # its head starts as a COPY of the donor's (the model
+                # that was serving those requests). Staged here,
+                # applied by _commit_heads_perm at the same boundary as
+                # the tau version bump — labels and predictions can
+                # never disagree about which center generation they
+                # came from. Overwrite (not compose): donors index the
+                # CURRENT slot-stable heads, and any previously staged
+                # perm was committed with its own tau swap.
+                perm = np.arange(cfg.k, dtype=np.int64)
+                tk = np.asarray(take, bool)
+                perm[tk] = np.asarray(donors, np.int64)[tk]
+                self._heads_perm = perm
         self._drift_mass = np.asarray(mass, np.float32)
         return agg, tau
 
@@ -622,6 +773,7 @@ class AttachService:
         serve step, so no recompile."""
         agg, tau = self._refinalize()
         self._taubuf = self._taubuf.swap_now(self.plane.localize(tau))
+        self._commit_heads_perm()
         self._since_refresh = 0
         return agg
 
@@ -633,6 +785,16 @@ class AttachService:
         _, tau = self._refinalize()
         self._taubuf = self._taubuf.stage(self.plane.localize(tau))
         self._since_refresh = 0
+
+    def _commit_heads_perm(self) -> None:
+        """Apply a staged split/retire head re-map (§14 x §16): the
+        atomic partner of the TauBuffer commit/swap that staged it."""
+        if self._heads_perm is None or self._head_spec is None:
+            self._heads_perm = None
+            return
+        perm = jnp.asarray(self._heads_perm, jnp.int32)
+        self.heads = jax.tree.map(lambda p: p[perm], self.heads)
+        self._heads_perm = None
 
     # -------------------------------------------------------- checkpoint --
 
@@ -649,9 +811,25 @@ class AttachService:
         (the fold state's epoch stamps ride inside ``server``), so a
         restore replays labels, tau versions, scaling decisions AND
         split/retire decisions bitwise (npz via ``checkpoint.store``).
+        Schema v5 (heads enabled) additionally rides the per-cluster
+        head params, the heads/arch tag, the routed-serving counters,
+        and any STAGED split/retire head re-map — so a restore
+        mid-refresh-window commits the same perm at the same boundary.
         Pending requests are not persisted."""
         from repro.fed.policy import POLICY_IDS
+        extra = {}
+        if self._head_spec is not None:
+            from repro.checkpoint.store import encode_tag
+            extra["heads"] = self.heads
+            extra["heads_tag"] = encode_tag(
+                f"{self.cfg.heads}|{self.cfg.head_arch}")
+            extra["heads_counters"] = np.asarray(
+                [self._routed_served, self._overflowed], np.int64)
+            if self._heads_perm is not None:
+                extra["heads_perm"] = np.asarray(self._heads_perm,
+                                                 np.int64)
         return save_pytree(path, {
+            **extra,
             "tau_bufs": self._taubuf.bufs,
             "tau_meta": self._taubuf.meta_array(),
             "server": self.state,
@@ -689,7 +867,9 @@ class AttachService:
                                     "autoscale_state",
                                     "autoscale_ladder", "tau_bufs",
                                     "drift_id", "drift_state",
-                                    "drift_mass", "server/.epoch"))
+                                    "drift_mass", "server/.epoch",
+                                    "heads_tag", "heads_counters",
+                                    "heads_perm"))
         # Refuse a policy mismatch up front (named error, not a bare
         # KeyError / silent state corruption): the checkpoint's slot
         # bookkeeping is only meaningful under the policy that wrote
@@ -731,6 +911,25 @@ class AttachService:
                     f"StreamConfig.drift={cfg.drift!r} does not match "
                     f"the checkpoint at {path!r}, which was saved under "
                     f"drift={names.get(saved_dr, saved_dr)!r}")
+        # Schema v5 carries the per-cluster head params under a
+        # heads/arch tag. Mismatch (including heads="off" against a v5
+        # archive, or a v5 restore under a different config/arch)
+        # refuses up front — the folded label/fold state replays, but
+        # the predictions a caller would get could not match the ones
+        # the archive's writer served. Pre-v5 archives restore under
+        # ANY heads config (additive, like drift): heads start from
+        # the deterministic seed-derived init.
+        if "heads_tag" in extras:
+            from repro.checkpoint.store import decode_tag
+            tag = decode_tag(extras["heads_tag"])
+            want = f"{cfg.heads}|{cfg.head_arch}"
+            if tag != want:
+                sv_h, sv_a = tag.split("|", 1)
+                raise StreamConfigError(
+                    f"StreamConfig.heads={cfg.heads!r}/"
+                    f"head_arch={cfg.head_arch!r} does not match the "
+                    f"checkpoint at {path!r}, which was saved under "
+                    f"heads={sv_h!r}/head_arch={sv_a!r}")
         # Schema v2 carries the double-buffered tau; v1 (pre-plane)
         # checkpoints hold one tau — restored as version 0 with both
         # buffers equal, so old checkpoints keep replaying bitwise.
@@ -754,6 +953,17 @@ class AttachService:
             like["tau"] = jnp.zeros((cfg.k, cfg.d), jnp.float32)
         if "policy_id" in extras:
             like["policy_id"] = np.zeros((), np.int64)
+        if "heads_tag" in extras:
+            # The deterministic init doubles as the exact-shape restore
+            # template (same spec -> same leaf shapes by construction).
+            from repro.models import heads as heads_mod
+            like["heads"] = heads_mod.init_heads(
+                jax.random.PRNGKey(0), cfg.k, cfg.head_spec())
+            like["heads_tag"] = np.zeros_like(
+                np.asarray(extras["heads_tag"]))
+            like["heads_counters"] = np.zeros((2,), np.int64)
+            if "heads_perm" in extras:
+                like["heads_perm"] = np.zeros((cfg.k,), np.int64)
         tree = load_pytree(path, like)
         if tree["policy"]:
             policy.load_state(tree["policy"])
@@ -768,7 +978,15 @@ class AttachService:
                   seed=int(cnt[4]), next_id=int(cnt[0]),
                   since_refresh=int(cnt[1]), served_devices=int(cnt[2]),
                   served_points=int(cnt[3]), mesh=mesh,
-                  serve_axes=serve_axes)
+                  serve_axes=serve_axes,
+                  heads=tree.get("heads"))
+        if "heads_counters" in extras:
+            hc = np.asarray(extras["heads_counters"], np.int64)
+            svc._routed_served = int(hc[0])
+            svc._overflowed = int(hc[1])
+        if "heads_perm" in extras:
+            svc._heads_perm = np.asarray(extras["heads_perm"],
+                                         np.int64).copy()
         if "autoscale_state" in extras:
             svc.autoscaler.load_state(extras["autoscale_state"],
                                       extras["autoscale_ladder"])
@@ -785,6 +1003,24 @@ class AttachService:
 
     # ------------------------------------------------------------- stats --
 
+    def _heads_stats(self) -> dict:
+        if self._head_spec is None:
+            return {"mode": "off"}
+        from repro.models.heads import head_param_count
+        from repro.fed.plane import route_capacity
+        return {
+            "mode": self.cfg.heads,
+            "arch": self.cfg.head_arch,
+            "capacity_factor": float(self.cfg.head_capacity),
+            "queue_capacity": route_capacity(
+                self.cfg.batch_size, self.cfg.k,
+                self.cfg.head_capacity),
+            "params_per_head": head_param_count(self._head_spec),
+            "routed_served": self._routed_served,
+            "overflowed": self._overflowed,
+            "remap_pending": self._heads_perm is not None,
+        }
+
     def stats(self) -> dict:
         return {
             "served_devices": self._served_devices,
@@ -798,6 +1034,7 @@ class AttachService:
             "tau_version": self._taubuf.version,
             "refresh_pending": self._taubuf.pending,
             "autoscale": self.autoscaler.stats(),
+            "heads": self._heads_stats(),
             "drift": {
                 "mode": self.cfg.drift,
                 "half_life": self.cfg.drift_half_life,

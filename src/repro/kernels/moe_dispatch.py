@@ -36,15 +36,26 @@ def _dispatch_kernel(src_ref, valid_ref, x_ref, out_ref):
     out_ref[...] = x_ref[...] * keep
 
 
-@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
 def moe_dispatch(x: jax.Array, src: jax.Array, valid: jax.Array,
-                 *, bd: int = 512, interpret: bool = True):
+                 *, bd: int = 512, interpret: bool | None = None):
     """Gather routed tokens into queue order.
 
     x: (T, d); src: (S,) int32 source row per queue slot (clipped to
     [0, T)); valid: (S,) bool. Returns (S, d) with invalid slots zeroed.
-    The caller reshapes to (E, C, d).
+    The caller reshapes to (E, C, d). ``interpret=None`` resolves via
+    the same platform auto-detection as ``kernels.ops`` (compiled on
+    TPU, interpret elsewhere, ``REPRO_KERNEL_INTERPRET`` override)
+    instead of a hardcoded interpret default that silently never
+    compiles.
     """
+    from repro.kernels import ops
+    return _moe_dispatch(x, src, valid, bd=bd,
+                         interpret=ops.resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def _moe_dispatch(x: jax.Array, src: jax.Array, valid: jax.Array,
+                  *, bd: int, interpret: bool):
     T, d = x.shape
     S = src.shape[0]
     dp = _round_up(d, bd)
@@ -115,16 +126,25 @@ def combine_block_plan(S: int, d: int, T: int, *, top_k: int = 2,
                 storage=store, accum="f32", blocks=blk)
 
 
-@functools.partial(jax.jit, static_argnames=("top_k", "bd", "interpret"))
 def moe_combine(ybuf: jax.Array, slot: jax.Array, gates: jax.Array,
-                *, top_k: int, bd: int = 512, interpret: bool = True):
+                *, top_k: int, bd: int = 512,
+                interpret: bool | None = None):
     """Weighted re-assembly of token outputs from expert queues.
 
     ybuf: (S, d) flat queues; slot: (T*top_k,) int32 queue slot per
     (token, choice), already clipped, with dropped entries pointing at
     any slot; gates: (T*top_k,) f32, zero for dropped entries.
-    Returns (T, d) f32.
+    Returns (T, d) f32. ``interpret=None`` resolves like
+    :func:`moe_dispatch`.
     """
+    from repro.kernels import ops
+    return _moe_combine(ybuf, slot, gates, top_k=top_k, bd=bd,
+                        interpret=ops.resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "bd", "interpret"))
+def _moe_combine(ybuf: jax.Array, slot: jax.Array, gates: jax.Array,
+                 *, top_k: int, bd: int, interpret: bool):
     S, d = ybuf.shape
     N = slot.shape[0]
     T = N // top_k

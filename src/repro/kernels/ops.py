@@ -167,8 +167,11 @@ def swa_decode_attention(q, kw, vw, bias, scale):
 
 
 def moe_dispatch(x, src, valid):
-    """Queue-order token gather for MoE dispatch (scalar-prefetch DMA
-    gather on TPU)."""
+    """Queue-order row gather for MoE-style dispatch (scalar-prefetch
+    DMA gather on TPU). The serve plane's routed personalization step
+    (DESIGN.md §16) rides this with clusters as the experts: whole
+    requests gather into per-cluster head queues, no (k, C, d)
+    scatter."""
     if _STATE["impl"] == "pallas":
         from repro.kernels.moe_dispatch import moe_dispatch as _pd
         return _pd(x, src, valid, interpret=_interpret())
@@ -176,6 +179,9 @@ def moe_dispatch(x, src, valid):
 
 
 def moe_combine(ybuf, slot, gates, top_k: int):
+    """Weighted queue->request re-assembly, the combine sibling of
+    :func:`moe_dispatch` (routed serving uses top_k=1 with the keep
+    mask as gates, so overflowed requests combine to zero)."""
     if _STATE["impl"] == "pallas":
         from repro.kernels.moe_dispatch import moe_combine as _pc
         return _pc(ybuf, slot, gates, top_k=top_k,

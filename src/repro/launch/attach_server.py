@@ -17,6 +17,12 @@ double-buffers the tau swap so re-finalization overlaps serving.
   # sharded plane over 8 forced host devices, async tau refresh
   PYTHONPATH=src python -m repro.launch.attach_server \
       --force-host-devices 8 --serve-axes data --refresh async
+
+  # cluster-routed personalization serving (DESIGN.md §16): every
+  # request is labeled, majority-voted to its cluster and answered by
+  # that cluster's head in ONE fused step
+  PYTHONPATH=src python -m repro.launch.attach_server \
+      --heads qwen1.5-0.5b --head-arch ffn --head-capacity 1.25
 """
 from __future__ import annotations
 
@@ -66,6 +72,27 @@ def main() -> None:
                     choices=("drop", "lru", "weighted_reservoir"),
                     help="fold-slot admission: drop (served-not-folded "
                          "past capacity), lru, or weighted_reservoir")
+    ap.add_argument("--heads", default="off", metavar="NAME",
+                    help="cluster-routed personalization serving "
+                         "(DESIGN.md §16): 'off', 'linear', or a "
+                         "registered model-config name (e.g. "
+                         "'qwen1.5-0.5b') — each cluster gets its own "
+                         "head and requests route to it by majority "
+                         "vote; bad names fail with a named config "
+                         "error listing the registry")
+    # literal choices (not imported from models.heads) so argparse
+    # rejects typos BEFORE jax loads; HEAD_ARCHS is the source.
+    ap.add_argument("--head-arch", default="ffn",
+                    choices=("ffn", "transformer"),
+                    help="per-cluster head block: the config's FFN, or "
+                         "the flag-gated attention+FFN transformer "
+                         "block")
+    ap.add_argument("--head-capacity", type=float, default=1.25,
+                    metavar="F",
+                    help="dispatch queue depth factor: each cluster "
+                         "gets ceil(batch * F / k) slots per step; "
+                         "overflowing requests still get labels, just "
+                         "no prediction")
     ap.add_argument("--checkpoint", default=None, metavar="PATH",
                     help="checkpoint mid-stream and verify the restored "
                          "session serves the remainder bitwise identically")
@@ -105,6 +132,8 @@ def main() -> None:
                           refresh=args.refresh, serve_axes=serve_axes,
                           autoscale=args.autoscale,
                           fold_policy=args.fold_policy,
+                          heads=args.heads, head_arch=args.head_arch,
+                          head_capacity=args.head_capacity,
                           checkpoint=args.checkpoint)
     sess = Session(plan, mesh=mesh)
     rr = sess.run(jax.random.PRNGKey(args.seed + 1), fm.data)
@@ -118,8 +147,13 @@ def main() -> None:
 
     half = len(stream) // 2
     t0 = time.perf_counter()
-    out = sess.serve_versioned([r[0] for r in stream[:half]],
-                               [r[2] for r in stream[:half]])
+    if args.heads != "off":
+        preds = sess.serve_predict([r[0] for r in stream[:half]],
+                                   [r[2] for r in stream[:half]])
+        out = [(p.labels, p.tau_version) for p in preds]
+    else:
+        out = sess.serve_versioned([r[0] for r in stream[:half]],
+                                   [r[2] for r in stream[:half]])
     dt = time.perf_counter() - t0
     pts = sum(r[0].shape[0] for r in stream[:half])
     accs = [clustering_accuracy(lbl, r[1], k)
@@ -131,6 +165,16 @@ def main() -> None:
           f"{st['serve_shards']} serve shard(s), "
           f"tau versions {versions}, "
           f"mean accuracy {100 * float(np.mean(accs)):.2f}%")
+    if args.heads != "off":
+        h = st["heads"]
+        routed = [p for p in preds if p.routed]
+        clusters = sorted({p.cluster for p in routed})
+        print(f"heads[{h['mode']}/{h['arch']}]: routed "
+              f"{len(routed)}/{half} requests over {len(clusters)} "
+              f"cluster head(s) ({h['params_per_head']} params/head, "
+              f"{h['queue_capacity']} queue slots/cluster, "
+              f"{h['overflowed']} overflowed), mean |prediction| "
+              f"{float(np.mean([np.abs(p.prediction).mean() for p in routed])):.3f}")
 
     if args.checkpoint:
         sess.save()

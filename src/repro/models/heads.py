@@ -1,0 +1,233 @@
+"""Per-cluster personalization heads for routed serving (DESIGN.md §16).
+
+The §4.2.2 personalization story — one model per cluster, the
+Theorem 3.2 label routing each request to exactly ONE of them — needs
+actual per-cluster forward passes on the serve plane. This module is
+the bridge from the model zoo (``models/`` blocks + ``configs/``
+architecture registry) to that serving tier:
+
+  * ``resolve_head_spec`` maps a plan's ``heads`` name to a
+    :class:`HeadSpec`: ``"linear"`` is the reserved affine head; any
+    registered zoo config name (``configs.list_archs()``) contributes
+    its REDUCED variant's activation, FFN expansion ratio and head
+    counts, re-dimensioned to the plan's feature width ``d`` — the
+    head operates on the clustering features, not the config's
+    ``d_model``.
+  * ``init_heads`` builds ``k`` independent parameter sets (stacked on
+    a leading cluster axis) through the zoo initializers
+    (``models.ffn.init_ffn``, ``models.attention.init_gqa``,
+    ``models.common.init_norm``) from one deterministic key.
+  * ``apply_heads`` runs every cluster's queue through ITS head —
+    vmapped over the stacked params — per-point forward, then a
+    masked mean-pool to one (d,) prediction per request.
+    ``serve_dtype="bf16"`` casts storage to bfloat16 while every
+    matmul accumulates in f32 (``preferred_element_type``), mirroring
+    the fused solve+attach precision contract (§13).
+
+Architectures: ``"ffn"`` (default — pre-norm residual FFN block using
+the config's activation) and ``"transformer"`` (the config-flagged
+option: non-causal masked self-attention over the request's point set
++ the FFN block; a point set has no order, so no rope/causality).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import init_gqa, plain_attention
+from repro.models.common import dense_init, init_norm, rms_norm
+from repro.models.ffn import init_ffn
+
+__all__ = ["HEAD_ARCHS", "HeadConfigError", "HeadSpec", "apply_heads",
+           "init_heads", "resolve_head_spec"]
+
+HEAD_ARCHS = ("ffn", "transformer")
+
+# The reserved non-zoo head: one affine map, the cheapest thing that
+# still distinguishes clusters (and the bench's sanity floor).
+LINEAR = "linear"
+
+
+class HeadConfigError(ValueError):
+    """A heads/head_arch selection failed validation (named, with the
+    accepted values) — raised at plan construction, never in tracing."""
+
+
+class HeadSpec(NamedTuple):
+    """Static shape/flavor of one per-cluster head (all fields hashable
+    so the spec can ride jit static arguments)."""
+    name: str           # "linear" | a registered configs.* name
+    arch: str           # "ffn" | "transformer" (ignored for linear)
+    d: int              # feature width (the plan's d)
+    d_ff: int           # FFN hidden width (ratio-scaled from the config)
+    activation: str     # swiglu | gelu | relu2
+    n_heads: int        # transformer arch only
+    n_kv_heads: int     # transformer arch only
+
+
+class _AttnDims(NamedTuple):
+    """The duck-typed config ``models.attention.init_gqa`` reads."""
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    hd: int
+    qkv_bias: bool
+    rope_theta: float = 1e4
+    sliding_window: int | None = None
+    attn_chunk: int = 1024
+
+
+def resolve_head_spec(name: str, arch: str, d: int) -> HeadSpec:
+    """Validate + resolve a plan's ``heads``/``head_arch`` selection
+    into a :class:`HeadSpec`. Raises :class:`HeadConfigError` naming
+    the accepted values (``StreamConfig`` re-raises field-named)."""
+    if arch not in HEAD_ARCHS:
+        raise HeadConfigError(
+            f"head_arch={arch!r} is invalid: accepted values are "
+            f"{list(HEAD_ARCHS)}")
+    if name == LINEAR:
+        return HeadSpec(LINEAR, arch, int(d), int(d), "gelu", 1, 1)
+    from repro.configs import get_config, list_archs
+    try:
+        cfg = get_config(name, reduced=True)
+    except KeyError:
+        raise HeadConfigError(
+            f"heads={name!r} is invalid: accepted values are 'off', "
+            f"'{LINEAR}', or a registered model config "
+            f"{list_archs()}") from None
+    # Re-dimension the REDUCED config to the clustering feature width:
+    # keep its FFN expansion ratio and activation, floor d_ff at d.
+    d_ff = max(int(d), int(round(d * cfg.d_ff / cfg.d_model)))
+    n_heads, n_kv = int(cfg.n_heads), int(cfg.n_kv_heads)
+    if arch == "transformer" and d % n_heads:
+        raise HeadConfigError(
+            f"heads={name!r} with head_arch='transformer' is invalid "
+            f"for d={d}: the config's n_heads={n_heads} must divide "
+            f"the plan's feature dimension (pick a different config "
+            f"or head_arch='ffn')")
+    return HeadSpec(name, arch, int(d), d_ff, str(cfg.activation),
+                    n_heads, n_kv)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _attn_dims(spec: HeadSpec) -> _AttnDims:
+    return _AttnDims(d_model=spec.d, n_heads=spec.n_heads,
+                     n_kv_heads=spec.n_kv_heads,
+                     hd=spec.d // spec.n_heads, qkv_bias=False)
+
+
+def _init_one(key, spec: HeadSpec, dtype):
+    if spec.name == LINEAR:
+        return {"w": dense_init(key, (spec.d, spec.d), dtype),
+                "b": jnp.zeros((spec.d,), dtype)}
+    ks = jax.random.split(key, 2)
+    p = {"norm1": init_norm("rmsnorm", spec.d, dtype),
+         "ffn": init_ffn(ks[0], spec.d, spec.d_ff, spec.activation,
+                         dtype)}
+    if spec.arch == "transformer":
+        p["norm2"] = init_norm("rmsnorm", spec.d, dtype)
+        p["attn"] = init_gqa(ks[1], _attn_dims(spec), dtype)
+    return p
+
+
+def init_heads(key, k: int, spec: HeadSpec, dtype=jnp.float32):
+    """``k`` independent heads from one key, stacked on a leading
+    cluster axis (leaf shapes ``(k, ...)``) — the layout the routed
+    step vmaps over and checkpoint schema v5 stores."""
+    return jax.vmap(lambda kk: _init_one(kk, spec, dtype))(
+        jax.random.split(key, k))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _dot(a, b):
+    """Matmul on the last/first axes with f32 accumulation regardless
+    of the storage dtype — the §13/§15 bf16-accum contract."""
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _ffn_apply(p, x, activation: str):
+    """init_ffn param layout, f32-accumulating apply. x: (..., d)
+    storage dtype; returns (..., d) f32."""
+    if activation == "swiglu":
+        h = jax.nn.silu(_dot(x, p["w1"])) * _dot(x, p["w3"])
+        return _dot(h.astype(x.dtype), p["w2"])
+    h = _dot(x, p["w1"]) + p["b1"].astype(jnp.float32)
+    h = (jnp.square(jax.nn.relu(h)) if activation == "relu2"
+         else jax.nn.gelu(h))
+    return _dot(h.astype(x.dtype), p["w2"]) + p["b2"].astype(jnp.float32)
+
+
+def _attn_apply(p, x, pmask, spec: HeadSpec):
+    """Non-causal masked self-attention over the point set. x:
+    (C, n, d) storage dtype; pmask: (C, n) bool. Returns (C, n, d)
+    f32."""
+    C, n, d = x.shape
+    H, KVH, hd = spec.n_heads, spec.n_kv_heads, d // spec.n_heads
+    q = _dot(x, p["wq"]).reshape(C, n, H, hd).astype(x.dtype)
+    kk = _dot(x, p["wk"]).reshape(C, n, KVH, hd).astype(x.dtype)
+    v = _dot(x, p["wv"]).reshape(C, n, KVH, hd).astype(x.dtype)
+    o = plain_attention(q, kk, v, kv_mask=pmask)
+    return _dot(o.reshape(C, n, H * hd), p["wo"])
+
+
+def _head_fwd(p, x, pmask, spec: HeadSpec):
+    """One cluster's per-point forward. x: (C, n, d) storage dtype,
+    pmask: (C, n); returns (C, n, d) f32 features."""
+    if spec.name == LINEAR:
+        return _dot(x, p["w"]) + p["b"].astype(jnp.float32)
+    store = x.dtype
+    h = x.astype(jnp.float32)
+    if spec.arch == "transformer":
+        a = rms_norm(h, p["norm2"]["w"].astype(jnp.float32)).astype(store)
+        h = h + _attn_apply(p["attn"], a, pmask, spec)
+    f = rms_norm(h, p["norm1"]["w"].astype(jnp.float32)).astype(store)
+    return h + _ffn_apply(p["ffn"], f, spec.activation)
+
+
+def apply_heads(params, qdata, qmask, spec: HeadSpec,
+                serve_dtype: str = "f32"):
+    """Run every cluster queue through its own head and pool.
+
+    ``params``: pytree with leading (k,) cluster axis (``init_heads``
+    layout); ``qdata``: (k, C, n, d) f32 per-cluster request queues;
+    ``qmask``: (k, C, n) bool point validity (all-False rows are
+    empty/overflow slots). Returns (k, C, d) f32 pooled predictions —
+    zero for empty slots. ``serve_dtype`` selects f32 (bitwise) or
+    bf16 storage with f32 accumulation."""
+    store = jnp.bfloat16 if serve_dtype == "bf16" else jnp.float32
+
+    def one(p, x, m):
+        ps = jax.tree.map(lambda a: a.astype(store), p)
+        y = _head_fwd(ps, x.astype(store), m, spec)      # (C, n, d) f32
+        mf = m.astype(jnp.float32)
+        tot = jnp.maximum(jnp.sum(mf, axis=-1, keepdims=True), 1.0)
+        return jnp.einsum("cnd,cn->cd", y, mf) / tot
+
+    return jax.vmap(one)(params, qdata, qmask)
+
+
+def head_param_count(spec: HeadSpec) -> int:
+    """Static per-head parameter count (stats/docs)."""
+    d, ff = spec.d, spec.d_ff
+    if spec.name == LINEAR:
+        return d * d + d
+    n = d  # norm1
+    n += (3 * d * ff if spec.activation == "swiglu"
+          else 2 * d * ff + ff + d)
+    if spec.arch == "transformer":
+        hd = d // spec.n_heads
+        n += d + d * spec.n_heads * hd + 2 * d * spec.n_kv_heads * hd \
+            + spec.n_heads * hd * d
+    return n

@@ -1,0 +1,410 @@
+"""Cluster-routed personalization serving (fed/plane.py routed step +
+fed/stream.py heads plumbing, DESIGN.md §16).
+
+Covers the §16 contract end to end: the routed step's label body is
+bitwise the heads=off plane (labels, fold state, tau versions never
+move when heads turn on); online routing and offline
+``cluster_devices`` personalization agree through the SAME majority
+vote; kept requests match the IFCA-shaped all-k baseline's
+predictions; overflow is labels-only with a zero prediction; head
+params ride checkpoint schema v5 (v1–v4 archives restore with fresh
+deterministic heads); tau split/retire re-maps head assignment through
+the same atomic version bump; and the steady state never recompiles.
+The CI mesh matrix ({2,8} forced host devices) runs this file too —
+the sharded-parity test pins the shard_mapped routed plane against the
+single-host plane bitwise.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.gaussian import late_device_stream, structured_devices
+from repro.fed.api import FederationPlan, Session
+from repro.fed import plane as plane_mod
+from repro.fed.personalize import majority_vote
+from repro.fed.stream import StreamConfig, StreamConfigError
+from repro.models import heads as heads_mod
+from repro.utils.compat import make_mesh
+
+K, KP, D = 16, 4, 24
+NDEV = jax.device_count()
+HEADS = "qwen1.5-0.5b"
+
+
+@pytest.fixture(scope="module")
+def fixture_round():
+    fm = structured_devices(jax.random.PRNGKey(0), k=K, d=D, k_prime=KP,
+                            m0=4, n_per_comp_dev=25, sep=60.0)
+    rr = Session(FederationPlan(k=K, k_prime=KP, d=D)).run(
+        jax.random.PRNGKey(1), fm.data).detail
+    return fm, rr
+
+
+def _plan(**kw):
+    base = dict(k=K, k_prime=KP, d=D, capacity=256, batch_size=4,
+                bucket_sizes=(32, 64, 128))
+    base.update(kw)
+    return FederationPlan(**base)
+
+
+def _requests(fm, count, seed, n_lo=10, n_hi=120):
+    stream = late_device_stream(fm.means, KP, count, seed,
+                                n_range=(n_lo, n_hi))
+    return ([r[0] for r in stream], [r[1] for r in stream],
+            [r[2] for r in stream])
+
+
+def _step_cfg(**kw):
+    base = dict(k=8, k_prime=2, d=16, capacity=64, batch_size=8,
+                bucket_sizes=(32,), heads=HEADS, head_arch="ffn")
+    base.update(kw)
+    return StreamConfig(**base)
+
+
+def _step_inputs(cfg, n=32, spread=True):
+    """(tau, heads, keys, data, pmask, kv) for a direct step call."""
+    k, d, B = cfg.k, cfg.d, cfg.batch_size
+    kt, kd, kh, kk = jax.random.split(jax.random.PRNGKey(42), 4)
+    tau = jax.random.normal(kt, (k, d), jnp.float32) * 20.0
+    owner = (jnp.arange(B, dtype=jnp.int32) % k if spread
+             else jnp.zeros((B,), jnp.int32))
+    data = (jax.random.normal(kd, (B, n, d), jnp.float32)
+            + tau[owner][:, None, :])
+    pmask = jnp.ones((B, n), jnp.bool_)
+    keys = jax.random.split(kk, B).astype(jnp.uint32).reshape(B, 2)
+    kv = jnp.full((B,), k, jnp.int32)
+    heads = heads_mod.init_heads(kh, k, cfg.head_spec())
+    return tau, heads, keys, data, pmask, kv
+
+
+# ------------------------------------------------ routed step (plane) --
+
+
+def test_routed_step_labels_bitwise_match_plain_step():
+    """The routed step shares the label body: labels, centers, masks
+    and weights are bitwise the heads=off serve step's."""
+    cfg = _step_cfg()
+    tau, heads, keys, data, pmask, kv = _step_inputs(cfg)
+    plain = jax.jit(plane_mod._make_step(cfg))(tau, keys, data, pmask,
+                                               kv)
+    routed = jax.jit(plane_mod._make_routed_step(cfg))(
+        tau, heads, keys, data, pmask, kv)
+    for a, b in zip(plain, routed[:4]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_routed_matches_allk_baseline_on_kept_requests():
+    """Kept requests get bitwise the prediction the IFCA-shaped run-
+    all-k-heads baseline computes; cluster votes agree everywhere."""
+    cfg = _step_cfg()
+    args = _step_inputs(cfg)
+    r = jax.jit(plane_mod._make_routed_step(cfg))(*args)
+    a = jax.jit(plane_mod._make_allk_step(cfg))(*args)
+    np.testing.assert_array_equal(np.asarray(r[5]), np.asarray(a[5]))
+    kept = np.asarray(r[6])
+    assert kept.any()
+    np.testing.assert_allclose(np.asarray(r[4])[kept],
+                               np.asarray(a[4])[kept],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_overflow_is_labels_only_with_zero_prediction():
+    """All requests voting one cluster: C = ceil(B/k) slots keep the
+    first arrivals, the rest overflow — kept=False, prediction exactly
+    zero, labels still served."""
+    cfg = _step_cfg(k=4, head_capacity=1.0)
+    tau, heads, keys, data, pmask, kv = _step_inputs(cfg, spread=False)
+    out = jax.jit(plane_mod._make_routed_step(cfg))(
+        tau, heads, keys, data, pmask, kv)
+    labels, preds, cluster, kept = (np.asarray(out[0]),
+                                    np.asarray(out[4]),
+                                    np.asarray(out[5]),
+                                    np.asarray(out[6]))
+    B = cfg.batch_size
+    C = plane_mod.route_capacity(B, cfg.k, cfg.head_capacity)
+    np.testing.assert_array_equal(cluster, np.zeros((B,), np.int32))
+    np.testing.assert_array_equal(kept, np.arange(B) < C)
+    assert (preds[~kept] == 0.0).all()
+    assert np.abs(preds[kept]).sum() > 0
+    assert (labels[kept.argmin():] == labels[0]).all()  # still labeled
+
+
+def test_bf16_head_forward_tracks_f32_oracle():
+    """serve_dtype="bf16" head forwards stay within bf16 tolerance of
+    the f32 oracle (f32 accumulation contract: errors are rounding,
+    not accumulation drift)."""
+    cfg = _step_cfg()
+    spec = cfg.head_spec()
+    kh, kd = jax.random.split(jax.random.PRNGKey(5))
+    heads = heads_mod.init_heads(kh, cfg.k, spec)
+    C, n = 2, 32
+    qdata = jax.random.normal(kd, (cfg.k, C, n, cfg.d), jnp.float32)
+    qmask = jnp.ones((cfg.k, C, n), jnp.bool_)
+    y32 = heads_mod.apply_heads(heads, qdata, qmask, spec,
+                                serve_dtype="f32")
+    ybf = heads_mod.apply_heads(heads, qdata, qmask, spec,
+                                serve_dtype="bf16")
+    assert y32.dtype == ybf.dtype == jnp.float32
+    scale = np.abs(np.asarray(y32)).max()
+    np.testing.assert_allclose(np.asarray(ybf), np.asarray(y32),
+                               atol=0.05 * max(scale, 1.0))
+
+
+# ------------------------------------------- service + session layer --
+
+
+def test_predict_labels_bitwise_vs_heads_off_session(fixture_round):
+    """Turning heads on never moves the attachment tier: labels, tau
+    versions AND the folded server state are bitwise the heads=off
+    session's (acceptance criterion)."""
+    fm, rr = fixture_round
+    plain = Session.from_round(_plan(), rr)
+    routed = Session.from_round(_plan(heads="linear"), rr)
+    reqs, _, kvs = _requests(fm, 9, seed=3)
+    out_p = plain.serve_versioned(reqs, kvs)
+    out_r = routed.serve_predict(reqs, kvs)
+    for (lbl, ver), pred in zip(out_p, out_r):
+        np.testing.assert_array_equal(lbl, pred.labels)
+        assert ver == pred.tau_version
+        assert pred.prediction.shape == (D,)
+        assert pred.routed
+    for x, y in zip(jax.tree.leaves(plain.service.state),
+                    jax.tree.leaves(routed.service.state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    st = routed.stats()["heads"]
+    assert st["mode"] == "linear" and st["routed_served"] == 9
+    assert plain.stats()["heads"] == {"mode": "off"}
+
+
+def test_online_routing_matches_offline_cluster_devices(fixture_round):
+    """§4.2.2 parity: the cluster a request routes to online is the
+    SAME majority vote offline ``cluster_devices`` personalization
+    assigns on identical labels — participating devices' own data
+    reproduces the round's labels, so the served cluster equals the
+    offline assignment computed from ``rr.labels``."""
+    fm, rr = fixture_round
+    offline = np.asarray(majority_vote(jnp.asarray(rr.labels), K))
+    sess = Session.from_round(_plan(bucket_sizes=(128,), heads="linear"),
+                              rr)
+    zs = [1, 4, 7, 10]
+    out = sess.serve_predict([np.asarray(fm.data[z]) for z in zs])
+    for pred, z in zip(out, zs):
+        np.testing.assert_array_equal(pred.labels,
+                                      np.asarray(rr.labels[z]))
+        assert pred.cluster == offline[z]
+
+
+def test_session_overflow_flags_requests(fixture_round):
+    """head_capacity below the skew floor: overflowed requests come
+    back routed=False with a zero prediction and full labels; the
+    overflow counter ticks."""
+    fm, rr = fixture_round
+    sess = Session.from_round(
+        _plan(heads="linear", head_capacity=0.1, batch_size=8), rr)
+    reqs, _, kvs = _requests(fm, 8, seed=21)
+    out = sess.serve_predict(reqs, kvs)
+    dropped = [p for p in out if not p.routed]
+    assert dropped  # C = 1 slot per cluster cannot hold the batch skew
+    for p in dropped:
+        assert (p.prediction == 0.0).all()
+        assert p.labels.shape[0] > 0
+    assert sess.stats()["heads"]["overflowed"] == len(dropped)
+
+
+def test_serve_predict_requires_heads(fixture_round):
+    fm, rr = fixture_round
+    sess = Session.from_round(_plan(), rr)
+    reqs, _, kvs = _requests(fm, 2, seed=1)
+    with pytest.raises(StreamConfigError, match="heads"):
+        sess.serve_predict(reqs, kvs)
+
+
+def test_zero_steady_state_recompiles(fixture_round):
+    """After the first wave warms each bucket, further routed waves
+    never recompile (acceptance criterion)."""
+    fm, rr = fixture_round
+    sess = Session.from_round(_plan(heads="linear",
+                                    bucket_sizes=(128,)), rr)
+    reqs, _, kvs = _requests(fm, 12, seed=17, n_hi=100)
+    sess.serve_predict(reqs[:4], kvs[:4])
+    warm = sess.stats()["plane_compiles"]
+    for lo in range(4, 12, 4):
+        sess.serve_predict(reqs[lo:lo + 4], kvs[lo:lo + 4])
+    assert sess.stats()["plane_compiles"] == warm
+
+
+def test_split_retire_remaps_heads_through_version_bump(fixture_round):
+    """Drift split/retire under heads: the donor's head follows the
+    re-seeded center through the SAME atomic tau bump (no staged remap
+    left pending at the end), labels stay bitwise the heads=off drift
+    twin's, and the whole routed stream replays deterministically."""
+    fm, rr = fixture_round
+    rng = np.random.default_rng(3)
+    new_means = rng.normal(size=(K, D)).astype(np.float32) * 40.0
+    kw = dict(refresh_every=4, drift="split_merge", drift_half_life=24,
+              drift_retire_frac=0.2, capacity=512)
+    stream = late_device_stream(new_means, KP, 24, 19, n_range=(15, 50))
+    reqs = [r[0] for r in stream]
+    kvs = [r[2] for r in stream]
+    plain = Session.from_round(_plan(**kw), rr)
+    routed = Session.from_round(_plan(**kw, heads="linear"), rr)
+    twin = Session.from_round(_plan(**kw, heads="linear"), rr)
+    for lo in range(0, 24, 6):
+        out_p = plain.serve_versioned(reqs[lo:lo + 6], kvs[lo:lo + 6])
+        out_r = routed.serve_predict(reqs[lo:lo + 6], kvs[lo:lo + 6])
+        out_t = twin.serve_predict(reqs[lo:lo + 6], kvs[lo:lo + 6])
+        for (lbl, ver), pr, pt in zip(out_p, out_r, out_t):
+            np.testing.assert_array_equal(lbl, pr.labels)
+            assert ver == pr.tau_version
+            np.testing.assert_array_equal(pr.prediction, pt.prediction)
+            assert (pr.cluster, pr.routed) == (pt.cluster, pt.routed)
+    assert routed.service._drift_events > 0      # machinery exercised
+    assert routed.tau_version == plain.tau_version > 0
+    assert routed.stats()["heads"]["remap_pending"] is False
+    for x, y in zip(jax.tree.leaves(plain.service.state),
+                    jax.tree.leaves(routed.service.state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------- checkpoint schema --
+
+
+def test_checkpoint_v5_roundtrip_bitwise(fixture_round, tmp_path):
+    """Schema v5: save mid-stream with heads on, restore, serve the
+    rest — labels AND predictions bitwise vs the uninterrupted
+    session; the archive carries the heads tag + folded params."""
+    from repro.checkpoint.store import npz_keys
+    fm, rr = fixture_round
+    live = Session.from_round(_plan(heads=HEADS, refresh_every=6), rr)
+    reqs, _, kvs = _requests(fm, 10, seed=9)
+    live.serve_predict(reqs[:5], kvs[:5])
+    path = str(tmp_path / "v5.npz")
+    live.save(path)
+    assert "heads_tag" in npz_keys(path)
+    restored = Session.restore(path, live.plan)
+    out_l = live.serve_predict(reqs[5:], kvs[5:])
+    out_r = restored.serve_predict(reqs[5:], kvs[5:])
+    for a, b in zip(out_l, out_r):
+        np.testing.assert_array_equal(a.labels, b.labels)
+        np.testing.assert_array_equal(a.prediction, b.prediction)
+        assert (a.tau_version, a.cluster, a.routed) == \
+            (b.tau_version, b.cluster, b.routed)
+    assert restored.stats()["heads"]["routed_served"] == 10
+
+
+def test_v5_archive_refuses_mismatched_heads(fixture_round, tmp_path):
+    """A v5 archive names its head config: restoring under heads=off
+    or a different config fails with a named error, never a silent
+    re-init."""
+    fm, rr = fixture_round
+    sess = Session.from_round(_plan(heads=HEADS), rr)
+    path = str(tmp_path / "v5.npz")
+    sess.save(path)
+    with pytest.raises(StreamConfigError, match="heads"):
+        Session.restore(path, _plan())
+    with pytest.raises(StreamConfigError, match="heads"):
+        Session.restore(path, _plan(heads="linear"))
+
+
+def test_pre_v5_archives_restore_with_fresh_heads(fixture_round,
+                                                  tmp_path):
+    """Migration matrix: v1–v4 archives (no heads_tag) restore into a
+    heads-on plan with deterministically re-initialized heads — labels
+    bitwise what a heads=off restore serves, predictions identical
+    across two restores of the same archive."""
+    from repro.checkpoint.store import npz_keys, save_pytree
+    from repro.fed.policy import POLICY_IDS
+    from repro.fed.stream import AUTOSCALE_IDS, _ServerStateV3
+    fm, rr = fixture_round
+    base = Session.from_round(_plan(), rr)
+    reqs, _, kvs = _requests(fm, 10, seed=19)
+    base.serve(reqs[:4], kvs[:4])
+    svc = base.service
+    old_srv = _ServerStateV3(svc.state.centers, svc.state.mask,
+                             svc.state.weights, svc.state.received)
+    common = {"server": old_srv, "counters": svc._counters(),
+              "policy_id": np.asarray(POLICY_IDS["drop"], np.int64),
+              "policy": {}}
+    bufs = {"tau_bufs": svc._taubuf.bufs,
+            "tau_meta": svc._taubuf.meta_array()}
+    v1 = str(tmp_path / "v1.npz")
+    save_pytree(v1, {"tau": svc.tau, **common})
+    v2 = str(tmp_path / "v2.npz")
+    save_pytree(v2, {**bufs, **common})
+    v3 = str(tmp_path / "v3.npz")
+    save_pytree(v3, {**bufs, **common,
+                     "autoscale_id": np.asarray(AUTOSCALE_IDS["off"],
+                                                np.int64),
+                     **svc.autoscaler.state_arrays()})
+    v4 = str(tmp_path / "v4.npz")
+    base.save(v4)
+    for path in (v1, v2, v3, v4):
+        assert "heads_tag" not in npz_keys(path)    # truly pre-v5
+        plain = Session.restore(path, _plan())
+        routed = Session.restore(path, _plan(heads="linear"))
+        again = Session.restore(path, _plan(heads="linear"))
+        out_p = plain.serve_versioned(reqs[4:], kvs[4:])
+        out_r = routed.serve_predict(reqs[4:], kvs[4:])
+        out_a = again.serve_predict(reqs[4:], kvs[4:])
+        for (lbl, ver), pr, pa in zip(out_p, out_r, out_a):
+            np.testing.assert_array_equal(lbl, pr.labels)
+            assert ver == pr.tau_version
+            np.testing.assert_array_equal(pr.prediction, pa.prediction)
+
+
+# ------------------------------------------------- config validation --
+
+
+def test_config_validation_names_the_field():
+    with pytest.raises(StreamConfigError, match="heads"):
+        _step_cfg(heads="no-such-config")
+    with pytest.raises(StreamConfigError, match="head_capacity"):
+        _step_cfg(head_capacity=0.0)
+    with pytest.raises(StreamConfigError, match="head_arch"):
+        _step_cfg(head_arch="cnn")
+    with pytest.raises(heads_mod.HeadConfigError, match="arch"):
+        heads_mod.resolve_head_spec(HEADS, "cnn", 16)
+    spec = heads_mod.resolve_head_spec(HEADS, "transformer", 16)
+    bad_d = spec.n_heads * 2 + 1  # never divisible by n_heads > 1
+    if spec.n_heads > 1:
+        with pytest.raises(StreamConfigError, match="heads"):
+            _step_cfg(d=bad_d, head_arch="transformer")
+
+
+def test_head_zoo_stays_reachable_in_import_report():
+    """Satellite: the §16 heads make the models/configs zoo
+    load-bearing — the import-graph report shows every zoo module
+    reachable and the serving head modules live."""
+    from repro.analysis.imports import report
+    rep = report()
+    assert rep["unreachable"] == []
+    assert "repro.models.heads" in rep["reachable"]
+    assert "repro.configs.qwen1_5_0_5b" in rep["reachable"]
+
+
+# ------------------------------------------------------ sharded plane --
+
+
+@pytest.mark.skipif(NDEV < 2, reason="needs >= 2 devices (CI mesh leg)")
+def test_sharded_routed_parity_with_single_host(fixture_round):
+    """The shard_mapped routed plane serves bitwise the single-host
+    plane: labels, predictions, clusters, kept flags and the folded
+    state (acceptance criterion at the CI {2,8}-device legs)."""
+    fm, rr = fixture_round
+    kw = dict(heads="linear", batch_size=2 * NDEV)
+    single = Session.from_round(_plan(**kw), rr)
+    shard = Session.from_round(_plan(**kw, serve_axes=("data",)), rr,
+                               mesh=make_mesh((NDEV,), ("data",)))
+    reqs, _, kvs = _requests(fm, 3 * NDEV + 1, seed=3)
+    out_a = single.serve_predict(reqs, kvs)
+    out_b = shard.serve_predict(reqs, kvs)
+    for a, b in zip(out_a, out_b):
+        np.testing.assert_array_equal(a.labels, b.labels)
+        np.testing.assert_array_equal(a.prediction, b.prediction)
+        assert (a.tau_version, a.cluster, a.routed) == \
+            (b.tau_version, b.cluster, b.routed)
+    for x, y in zip(jax.tree.leaves(single.service.state),
+                    jax.tree.leaves(shard.service.state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
