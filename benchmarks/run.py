@@ -32,6 +32,7 @@ BENCHES = {
     "roofline": "benchmarks.bench_roofline",
     "drift": "benchmarks.bench_drift",
     "route": "benchmarks.bench_route_serve",
+    "encode": "benchmarks.bench_encode_serve",
 }
 
 

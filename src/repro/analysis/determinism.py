@@ -6,8 +6,9 @@ shapes; this pass certifies them STRUCTURALLY on every CI run by
 tracing the real serving artifacts — the serve step, the §16 routed
 personalization step (label -> dispatch -> per-cluster head ->
 combine; its routing scatters are int/bool overwrites onto unique
-slots, which is exactly what this pass proves stays true), the fold,
-the finalize, and the drift split/retire refresh, via the same
+slots, which is exactly what this pass proves stays true), the §17
+encode+serve step (the zoo encoder fused ahead of the label body), the
+fold, the finalize, and the drift split/retire refresh, via the same
 ``ServePlane`` construction the service runs — and walking their
 jaxprs with the shared :mod:`analysis.visitor` engine.
 
@@ -207,7 +208,8 @@ def _check_fold_contract(artifact, contract, scatter_sites):
 # --------------------------------------------------------------------------
 
 SMOKE = dict(k=16, k_prime=4, d=32, capacity=64, batch_size=8, n=64,
-             drift_half_life=8, heads="qwen1.5-0.5b", head_arch="ffn")
+             drift_half_life=8, heads="qwen1.5-0.5b", head_arch="ffn",
+             encoder="qwen1.5-0.5b", encode_seq_len=16)
 
 
 @dataclass
@@ -217,10 +219,13 @@ class Artifact:
     contract: Contract
 
 
-def _smoke_cfg(heads: bool = False):
+def _smoke_cfg(heads: bool = False, encoder: bool = False):
     from repro.fed.stream import StreamConfig
     kw = ({"heads": SMOKE["heads"], "head_arch": SMOKE["head_arch"]}
           if heads else {})
+    if encoder:
+        kw.update(encoder=SMOKE["encoder"],
+                  encode_seq_len=SMOKE["encode_seq_len"])
     return StreamConfig(k=SMOKE["k"], k_prime=SMOKE["k_prime"],
                         d=SMOKE["d"], capacity=SMOKE["capacity"],
                         batch_size=SMOKE["batch_size"],
@@ -233,6 +238,23 @@ def _heads_struct(cfg):
     from repro.models import heads as heads_mod
     return jax.eval_shape(lambda: heads_mod.init_heads(
         jax.random.PRNGKey(0), cfg.k, cfg.head_spec()))
+
+
+def _encoder_struct(cfg):
+    """Abstract (shape/dtype) encoder params for tracing the §17
+    encode step without materializing an init."""
+    from repro.models import encoder as enc_mod
+    return jax.eval_shape(lambda: enc_mod.init_encoder(
+        jax.random.PRNGKey(0), cfg.encoder_spec()))
+
+
+def _encode_args(cfg):
+    """The (B, n, seq, d) raw-sequence batch + token mask the encode
+    step prepends to the plain step arguments."""
+    S = jax.ShapeDtypeStruct
+    B, n, sq = cfg.batch_size, SMOKE["n"], cfg.encode_seq_len
+    return (S((B, n, sq, cfg.d), jnp.float32),       # token sequences
+            S((B, n, sq), jnp.bool_))                # token mask
 
 
 def _step_args(cfg):
@@ -304,6 +326,21 @@ def trace_artifacts(include_sharded: Optional[bool] = None
                                data_s, pmask_s, kv_s),
         Contract()))
 
+    # The §17 encode+serve step: the zoo encoder forward fused ahead of
+    # the label body. Encoding is pure matmul/softmax on its inputs —
+    # no RNG, no scatters, no collectives — so the artifact's contract
+    # is the plain serve step's (the solve's keyed RNG still threads
+    # from the request keys).
+    ecfg = _smoke_cfg(encoder=True)
+    enc_step = plane_mod._make_encode_step(ecfg)
+    tau_e, keys_e, _, pmask_e, kv_e = _step_args(ecfg)
+    data_e, tmask_e = _encode_args(ecfg)
+    arts.append(Artifact(
+        "encode_step",
+        jax.make_jaxpr(enc_step)(tau_e, _encoder_struct(ecfg), keys_e,
+                                 data_e, pmask_e, tmask_e, kv_e),
+        Contract()))
+
     def fold(state, slots, centers, cmask, weights, epochs):
         return server.aggregate_incremental(state, slots, centers, cmask,
                                             weights=weights, epochs=epochs)
@@ -369,9 +406,21 @@ def trace_artifacts(include_sharded: Optional[bool] = None
             jax.make_jaxpr(routed_sh)(tau_s, _heads_struct(hcfg),
                                       keys_s, data_s, pmask_s, kv_s),
             Contract(allow_collectives=frozenset({"all_gather"}))))
+        # Sharded §17 encode+serve: the batch axis stays embarrassingly
+        # parallel through the encode stage (encoder params replicated
+        # like tau), so no collective is allowed here either.
+        plane_e = plane_mod.ServePlane(ecfg, mesh=mesh,
+                                       serve_axes=("data",))
+        enc_sh = plane_e._encode_plane_for(s)[0]
+        arts.append(Artifact(
+            "encode_step_sharded",
+            jax.make_jaxpr(enc_sh)(tau_e, _encoder_struct(ecfg),
+                                   keys_e, data_e, pmask_e, tmask_e,
+                                   kv_e),
+            Contract()))
     else:
         skipped.extend(["serve_step_sharded", "fold_sharded",
-                        "routed_step_sharded"])
+                        "routed_step_sharded", "encode_step_sharded"])
     return arts, skipped
 
 

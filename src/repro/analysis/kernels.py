@@ -168,6 +168,21 @@ def ladder_plans() -> List[Tuple[str, dict]]:
             plans.append((f"route,S{S},d{d},B{B}",
                           moe_dispatch.combine_block_plan(S, d, B,
                                                           top_k=1)))
+    # The §17 ingestion-encoder forward: B * n_pad flattened token
+    # sequences per step at the default encode_seq_len, through the
+    # reduced zoo spec re-dimensioned to each dim column — both storage
+    # dtypes (the plan's encode_dtype choices).
+    from repro.models import encoder as enc_mod
+    sq = next(f.default for f in dataclasses.fields(StreamConfig)
+              if f.name == "encode_seq_len")
+    for n in (ladder()[0], ladder()[-1]):
+        for d, _, _ in DIM_COLUMNS:
+            spec = enc_mod.resolve_encoder_spec("qwen1.5-0.5b", d)
+            for dt in ("f32", "bf16"):
+                plans.append(
+                    (f"encode,T{B * n},S{sq},d{d},ff{spec.d_ff},{dt}",
+                     enc_mod.block_plan(B * n, sq, d, spec.d_ff,
+                                        spec.n_heads, dtype=dt)))
     return plans
 
 

@@ -127,6 +127,19 @@ class FederationPlan:
                labels, just no prediction). Head params ride checkpoint
                schema v5; ``Session.serve_predict``/``flush_predict``
                return the predictions.
+    Encoder:   ``encoder`` turns on the latent-space ingestion stage
+               (DESIGN.md §17): devices submit raw ``(n, seq, d)``
+               token/patch sequences and the serve plane encodes them
+               (pre-norm zoo blocks at width ``d``, masked-mean pooled)
+               ahead of the unchanged solve+attach (``off`` default —
+               every path bitwise-identical to a plan without the
+               field; any ``configs.list_archs()`` name adopts that
+               architecture's REDUCED depth/activation/FFN ratio/head
+               counts at width ``d``). ``encode_dtype`` picks f32 or
+               bf16 storage (f32 accumulation either way);
+               ``encode_seq_len`` caps each point's token-sequence
+               length (requests bucket over (n, seq) pad rungs).
+               Encoder params ride checkpoint schema v6.
     """
     k: int
     k_prime: int
@@ -155,6 +168,9 @@ class FederationPlan:
     heads: str = "off"
     head_capacity: float = 1.25
     head_arch: str = "ffn"
+    encoder: str = "off"
+    encode_dtype: str = "f32"
+    encode_seq_len: int = 64
     checkpoint: Optional[str] = None
 
     def __post_init__(self):
@@ -214,6 +230,8 @@ class FederationPlan:
             drift_max_moves=self.drift_max_moves,
             heads=self.heads, head_capacity=self.head_capacity,
             head_arch=self.head_arch,
+            encoder=self.encoder, encode_dtype=self.encode_dtype,
+            encode_seq_len=self.encode_seq_len,
             local_kw=dict(self.local_kw))
 
     def with_options(self, **kw) -> "FederationPlan":

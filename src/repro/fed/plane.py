@@ -28,6 +28,12 @@ single host or shard_mapped over a mesh:
     from the ``models``/``configs`` zoo, ``moe_combine`` back to
     request order. Same cache/versioning discipline as the plain step;
     the label outputs stay bitwise-identical to the heads=off plane.
+  * **encode stage** (§17, ``encoder != "off"``) — a zoo encoder
+    forward fused IN FRONT of the plain or routed step: devices submit
+    raw ``(n, seq, d)`` token/patch sequences, one jitted dispatch
+    embeds them (masked-mean pooled to ``d``) and runs the unchanged
+    solve+attach on the embeddings. Encoder params ride replicated
+    like tau; ``encoder=off`` planes are bitwise-untouched.
   * **double-buffered tau** (:class:`TauBuffer`) — serving reads
     ``bufs[active]``; a refresh builds the standby buffer while serving
     continues, and the swap is an atomic version bump. Every served
@@ -306,6 +312,53 @@ def _make_allk_step(cfg):
     return allk
 
 
+def _make_encode_fn(cfg):
+    """The ingestion-encoder forward (DESIGN.md §17) as the plane's
+    prepended stage: (B, n, S, d) raw token/patch sequences + (B, n, S)
+    token masks -> (B, n, d) f32 embeddings, through the zoo encoder
+    at the plan's ``encode_dtype`` (bf16 storage / f32 accumulation)."""
+    from repro.models import encoder as enc_mod
+    spec = cfg.encoder_spec()
+
+    def encode(enc_params, data, token_mask):
+        return enc_mod.apply_encoder(enc_params, data, token_mask, spec,
+                                     encode_dtype=cfg.encode_dtype)
+
+    return encode
+
+
+def _make_encode_step(cfg):
+    """Encode stage fused in front of THE serve-step body: one jitted
+    dispatch encodes the raw sequences and runs the unchanged
+    solve+attach on the embeddings — the (B, n, d) latent batch never
+    round-trips to host between the stages."""
+    base = _make_step(cfg)
+    encode = _make_encode_fn(cfg)
+
+    def step(tau, enc_params, keys, data, point_mask, token_mask,
+             k_valid):
+        emb = encode(enc_params, data, token_mask)
+        return base(tau, keys, emb, point_mask, k_valid)
+
+    return step
+
+
+def _make_encoded_routed_step(cfg, axes=None, axis_sizes=None):
+    """Encode stage fused in front of the routed personalization step:
+    the routed body (labels, vote, dispatch, heads, combine) operates
+    on the embeddings unchanged, so the per-cluster heads serve in the
+    SAME latent space the attachment clustered."""
+    routed = _make_routed_step(cfg, axes=axes, axis_sizes=axis_sizes)
+    encode = _make_encode_fn(cfg)
+
+    def step(tau, enc_params, head_params, keys, data, point_mask,
+             token_mask, k_valid):
+        emb = encode(enc_params, data, token_mask)
+        return routed(tau, head_params, keys, emb, point_mask, k_valid)
+
+    return step
+
+
 class ServePlane:
     """Executes the streaming hot path for an ``AttachService``.
 
@@ -377,11 +430,19 @@ class ServePlane:
         # and the benchmark assert stays flat in steady state.
         self._planes = {}
         self._routed = {}
+        self._encode = {}
+        self._enc_routed = {}
         self._signatures = set()
         self.compile_count = 0
         self._plane_for(n)
         if getattr(cfg, "heads", "off") != "off":
             self._routed_plane_for(n)
+        # The §17 encode entries build eagerly too — and ONLY when the
+        # encoder is on, so encoder=off planes are bitwise-untouched.
+        if getattr(cfg, "encoder", "off") != "off":
+            self._encode_plane_for(n)
+            if getattr(cfg, "heads", "off") != "off":
+                self._encoded_routed_plane_for(n)
 
     # ------------------------------------------------------------------
     def _submesh(self, s: int):
@@ -460,6 +521,113 @@ class ServePlane:
                      NamedSharding(mesh, P()))
         self._routed[s] = entry
         return entry
+
+    def _encode_plane_for(self, s: int):
+        """The compiled encode+serve entry for an active shard count —
+        the §17 sibling of :meth:`_plane_for` (which it calls first, so
+        shard-count validation stays the single source of truth).
+        Encoder params ride replicated like tau; the raw-sequence batch
+        and its token mask shard over the batch axis with the rest."""
+        entry = self._encode.get(s)
+        if entry is not None:
+            return entry
+        self._plane_for(s)
+        if s == 1:
+            entry = (jax.jit(_make_encode_step(self.cfg)), None, None)
+        else:
+            from jax.sharding import NamedSharding
+            mesh = self.mesh if s == self.n_shards else self._submesh(s)
+            spec = P(self.axes)
+            enc_sharded = _shard_map(
+                _make_encode_step(self.cfg), mesh=mesh,
+                in_specs=(P(), P(), spec, spec, spec, spec, spec),
+                out_specs=(spec,) * 4)
+            entry = (jax.jit(enc_sharded), NamedSharding(mesh, spec),
+                     NamedSharding(mesh, P()))
+        self._encode[s] = entry
+        return entry
+
+    def _encoded_routed_plane_for(self, s: int):
+        """The compiled encode+routed entry (§17 x §16): encoder AND
+        head params replicated, everything else sharded over the batch
+        axis."""
+        entry = self._enc_routed.get(s)
+        if entry is not None:
+            return entry
+        self._plane_for(s)
+        if s == 1:
+            entry = (jax.jit(_make_encoded_routed_step(self.cfg)),
+                     None, None)
+        else:
+            from jax.sharding import NamedSharding
+            mesh = self.mesh if s == self.n_shards else self._submesh(s)
+            sizes = tuple(int(mesh.shape[a]) for a in self.axes)
+            fn = _make_encoded_routed_step(self.cfg, axes=self.axes,
+                                           axis_sizes=sizes)
+            spec = P(self.axes)
+            fn_sharded = _shard_map(
+                fn, mesh=mesh,
+                in_specs=(P(), P(), P(), spec, spec, spec, spec, spec),
+                out_specs=(spec,) * 7)
+            entry = (jax.jit(fn_sharded), NamedSharding(mesh, spec),
+                     NamedSharding(mesh, P()))
+        self._enc_routed[s] = entry
+        return entry
+
+    def encode_step(self, tau, enc_params, keys, data, point_mask,
+                    token_mask, k_valid, shards=None):
+        """Serve one (B, n_pad, seq_pad, d) batch of raw token/patch
+        sequences: encode to (B, n_pad, d) embeddings and run THE serve
+        step on them in one fused dispatch (DESIGN.md §17). Returns
+        exactly the :meth:`step` quadruple — the fold reports are
+        computed in latent space, so fold/drift/autoscale downstream
+        are unchanged."""
+        s = self.n_shards if shards is None else int(shards)
+        step_fn, sharding, state_sh = self._encode_plane_for(s)
+        self._count("encode", s, data.shape)
+        if sharding is not None:
+            tau = jax.device_put(tau, state_sh)
+            enc_params = jax.device_put(enc_params, state_sh)
+            keys, data, point_mask, token_mask, k_valid = (
+                jax.device_put(keys, sharding),
+                jax.device_put(data, sharding),
+                jax.device_put(point_mask, sharding),
+                jax.device_put(token_mask, sharding),
+                jax.device_put(k_valid, sharding))
+        elif self.axes:
+            dev = self.mesh.devices.flatten()[0]
+            tau = jax.device_put(tau, dev)
+            enc_params = jax.device_put(enc_params, dev)
+        return step_fn(tau, enc_params, keys, data, point_mask,
+                       token_mask, k_valid)
+
+    def encoded_routed_step(self, tau, enc_params, head_params, keys,
+                            data, point_mask, token_mask, k_valid,
+                            shards=None):
+        """:meth:`encode_step` through the per-cluster heads: the
+        routed septuple of :meth:`routed_step`, with both the
+        attachment and the head forwards operating on the encoded
+        embeddings."""
+        s = self.n_shards if shards is None else int(shards)
+        step_fn, sharding, state_sh = self._encoded_routed_plane_for(s)
+        self._count("enc_routed", s, data.shape)
+        if sharding is not None:
+            tau = jax.device_put(tau, state_sh)
+            enc_params = jax.device_put(enc_params, state_sh)
+            head_params = jax.device_put(head_params, state_sh)
+            keys, data, point_mask, token_mask, k_valid = (
+                jax.device_put(keys, sharding),
+                jax.device_put(data, sharding),
+                jax.device_put(point_mask, sharding),
+                jax.device_put(token_mask, sharding),
+                jax.device_put(k_valid, sharding))
+        elif self.axes:
+            dev = self.mesh.devices.flatten()[0]
+            tau = jax.device_put(tau, dev)
+            enc_params = jax.device_put(enc_params, dev)
+            head_params = jax.device_put(head_params, dev)
+        return step_fn(tau, enc_params, head_params, keys, data,
+                       point_mask, token_mask, k_valid)
 
     def routed_step(self, tau, head_params, keys, data, point_mask,
                     k_valid, shards=None):

@@ -117,6 +117,15 @@ class ServedPrediction(NamedTuple):
 # per-request fold_in streams (which consume request ids).
 _HEADS_SALT = 0x48454144  # "HEAD"
 
+# Sibling salt for the ingestion-encoder init stream (DESIGN.md §17):
+# distinct from the head stream so enabling one never re-keys the other.
+_ENCODER_SALT = 0x454E434F  # "ENCO"
+
+# Smallest token-axis pad rung: sequences bucket to powers of two from
+# here up to ``encode_seq_len`` (the submit-time ceiling), bounding the
+# distinct compiled (n_pad, seq_pad) shapes to a static grid.
+_SEQ_RUNG_FLOOR = 8
+
 
 class _ServerStateV3(NamedTuple):
     """Restore template for pre-v4 checkpoints: the fold state before
@@ -158,6 +167,9 @@ class StreamConfig:
     heads: str = "off"          # per-cluster serving heads: off|linear|<config>
     head_capacity: float = 1.25  # dispatch queue slots per cluster, x B/k
     head_arch: str = "ffn"      # head architecture: ffn | transformer
+    encoder: str = "off"        # ingestion encoder: off | <config name>
+    encode_dtype: str = "f32"   # encoder storage: f32 | bf16 (f32 accum)
+    encode_seq_len: int = 64    # token-axis pad ceiling per point
     local_kw: dict = field(default_factory=dict)  # Algorithm 1 options
 
     def __post_init__(self):
@@ -247,6 +259,32 @@ class StreamConfig:
                                             self.d)
             except heads_mod.HeadConfigError as e:
                 _bad("heads", self.heads, str(e))
+        from repro.models.encoder import ENCODE_DTYPES
+        if self.encode_dtype not in ENCODE_DTYPES:
+            _bad("encode_dtype", self.encode_dtype,
+                 f"accepted values are {list(ENCODE_DTYPES)} (f32 keeps "
+                 "the encode stage bitwise-reproducible across restores; "
+                 "bf16 stores encoder params/activations in bfloat16 "
+                 "with f32 accumulation — DESIGN.md §17)")
+        if self.encoder != "off":
+            from repro.models import encoder as enc_mod
+            if (not isinstance(self.encode_seq_len, int)
+                    or self.encode_seq_len < 1):
+                _bad("encode_seq_len", self.encode_seq_len,
+                     "must be an int >= 1 (the per-point token-sequence "
+                     "pad ceiling) when the encoder is enabled")
+            try:
+                enc_mod.resolve_encoder_spec(self.encoder, self.d)
+            except enc_mod.EncoderConfigError as e:
+                _bad("encoder", self.encoder, str(e))
+
+    def encoder_spec(self):
+        """Resolved :class:`repro.models.encoder.EncoderSpec` for this
+        plan (None when the ingestion encoder is off)."""
+        if self.encoder == "off":
+            return None
+        from repro.models import encoder as enc_mod
+        return enc_mod.resolve_encoder_spec(self.encoder, self.d)
 
     def head_spec(self):
         """Resolved :class:`repro.models.heads.HeadSpec` for this plan
@@ -274,7 +312,8 @@ class AttachService:
                  seed: int = 0, next_id: int = 0,
                  since_refresh: int = 0, served_devices: int = 0,
                  served_points: int = 0, mesh=None, serve_axes=None,
-                 tau_buffer: Optional[TauBuffer] = None, heads=None):
+                 tau_buffer: Optional[TauBuffer] = None, heads=None,
+                 encoder=None):
         self.cfg = cfg
         try:
             self.plane = ServePlane(cfg, mesh=mesh, serve_axes=serve_axes)
@@ -328,6 +367,21 @@ class AttachService:
             self.heads = heads_mod.init_heads(
                 jax.random.fold_in(self._base_key, _HEADS_SALT),
                 cfg.k, self._head_spec)
+        # Ingestion encoder (DESIGN.md §17): one parameter set,
+        # deterministically derived from the service seed on its own
+        # salted stream (restores and re-inits agree), unless a v6
+        # checkpoint restore hands the params in.
+        self._enc_spec = cfg.encoder_spec()
+        self._encoded_points = 0
+        if self._enc_spec is None:
+            self.encoder = None
+        elif encoder is not None:
+            self.encoder = jax.tree.map(jnp.asarray, encoder)
+        else:
+            from repro.models import encoder as enc_mod
+            self.encoder = enc_mod.init_encoder(
+                jax.random.fold_in(self._base_key, _ENCODER_SALT),
+                self._enc_spec)
         # Warn-once latch keyed on (active ladder, rung): a global bool
         # here either re-fired every flush or went silent for a NEW
         # coalesced ladder after an autoscale switch — each distinct
@@ -388,10 +442,25 @@ class AttachService:
         return self._taubuf.version
 
     def submit(self, data, k_valid: Optional[int] = None) -> int:
-        """Enqueue one device's (n, d) data; returns its request id (the
-        fold slot, and the PRNG stream of its local solve)."""
+        """Enqueue one device's data; returns its request id (the fold
+        slot, and the PRNG stream of its local solve). With the encoder
+        off this is the historical (n, d) latent-point contract; with
+        ``encoder=<config>`` each point is a raw token/patch sequence —
+        (n, seq, d) with seq <= ``encode_seq_len`` — that the plane
+        encodes ahead of the solve (DESIGN.md §17)."""
         arr = np.asarray(data, np.float32)
-        assert arr.ndim == 2 and arr.shape[1] == self.cfg.d, arr.shape
+        if self._enc_spec is None:
+            assert arr.ndim == 2 and arr.shape[1] == self.cfg.d, arr.shape
+        else:
+            assert arr.ndim == 3 and arr.shape[2] == self.cfg.d, arr.shape
+            if arr.shape[1] < 1 or arr.shape[1] > self.cfg.encode_seq_len:
+                raise StreamConfigError(
+                    f"submit() got a token sequence of length "
+                    f"{arr.shape[1]}: with encoder="
+                    f"{self.cfg.encoder!r} every point must carry "
+                    f"1 <= seq <= encode_seq_len="
+                    f"{self.cfg.encode_seq_len} tokens (raise "
+                    f"encode_seq_len in the plan for longer inputs)")
         kv = self.cfg.k_prime if k_valid is None else int(k_valid)
         assert 1 <= kv <= self.cfg.k_prime, kv
         rid = self._next_id
@@ -420,6 +489,27 @@ class AttachService:
                 f"bucket_sizes to the plan to avoid oversized pads.",
                 ReproPerfWarning, stacklevel=3)
         return b
+
+    def _seq_rung(self, seq: int) -> int:
+        """The token-axis pad rung for one request: the next power of
+        two (floored at ``_SEQ_RUNG_FLOOR``), clamped to the
+        ``encode_seq_len`` ceiling submit() enforced — so the compiled
+        (n_pad, seq_pad) grid stays static per plan and short sequences
+        never pad to the full ceiling."""
+        return min(int(self.cfg.encode_seq_len),
+                   max(_SEQ_RUNG_FLOOR, pow2_ceil(seq)))
+
+    def _bucket_key(self, arr: np.ndarray,
+                    ladder: Optional[Tuple[int, ...]] = None):
+        """The flush-group key of one request: the point-count rung
+        alone with the encoder off (the historical int key — those
+        paths stay bitwise-untouched), the (n_pad, seq_pad) pair with
+        it on. Keys within one flush are homogeneous, so the sorted
+        group order stays deterministic either way."""
+        n_pad = self._bucket(arr.shape[0], ladder)
+        if self._enc_spec is None:
+            return n_pad
+        return (n_pad, self._seq_rung(arr.shape[1]))
 
     def flush(self) -> Dict[int, np.ndarray]:
         """Serve every pending request; returns {request_id: (n,) labels}.
@@ -488,10 +578,10 @@ class AttachService:
                 self.cfg.bucket_sizes,
                 mass=(tuple(float(m) for m in self._drift_mass)
                       if self.cfg.drift != "off" else ())))
-        buckets: Dict[int, list] = {}
+        buckets: Dict = {}
         for item in pending:
             buckets.setdefault(
-                self._bucket(item[1].shape[0], decision.ladder),
+                self._bucket_key(item[1], decision.ladder),
                 []).append(item)
         out, self._done = self._done, {}  # undelivered earlier results
         # Two-phase pipeline: phase 1 DISPATCHES every batch (serve
@@ -502,11 +592,11 @@ class AttachService:
         staged: List[tuple] = []
         t0 = time.perf_counter()
         try:
-            for n_pad in sorted(buckets):
-                group = buckets[n_pad]
+            for bucket in sorted(buckets):
+                group = buckets[bucket]
                 B = decision.batch_size
                 for lo in range(0, len(group), B):
-                    self._serve_batch(group[lo:lo + B], n_pad, staged,
+                    self._serve_batch(group[lo:lo + B], bucket, staged,
                                       decision)
             t1 = time.perf_counter()
             self._deliver(staged, out)
@@ -596,14 +686,20 @@ class AttachService:
         self._done.update(got)
         return mine
 
-    def _serve_batch(self, batch, n_pad: int, staged,
+    def _serve_batch(self, batch, bucket, staged,
                      decision: AutoscaleDecision) -> None:
         """Phase 1 of a flush: dispatch one batch's serve step + fold
         (+ cadence refresh) at the flush decision's (shards, batch)
-        shape and stage its device-side labels. Nothing here waits on
-        the device unless the admission policy needs report weights
+        shape and stage its device-side labels. ``bucket`` is the
+        ``_bucket_key`` the group was collected under — the point-count
+        rung alone (encoder off) or the (n_pad, seq_pad) pair (encoder
+        on, where the batch carries raw token sequences the plane
+        encodes ahead of the solve). Nothing here waits on the device
+        unless the admission policy needs report weights
         (``needs_weight`` policies synchronize once per batch)."""
         cfg = self.cfg
+        encoded = self._enc_spec is not None
+        n_pad, s_pad = bucket if encoded else (bucket, 0)
         B = decision.batch_size
         shards = decision.shards
         if cfg.autoscale != "off":
@@ -618,21 +714,47 @@ class AttachService:
             # right-sized group there drops to one shard).
             B = min(B, pow2_ceil(len(batch)))
             shards = shards_for(B, shards, self.autoscaler.n_axes)
-        data = np.zeros((B, n_pad, cfg.d), np.float32)
+        if encoded:
+            data = np.zeros((B, n_pad, s_pad, cfg.d), np.float32)
+            tmask = np.zeros((B, n_pad, s_pad), bool)
+        else:
+            data = np.zeros((B, n_pad, cfg.d), np.float32)
+            tmask = None
         pmask = np.zeros((B, n_pad), bool)
         kv = np.full((B,), cfg.k_prime, np.int32)
         rids = np.zeros((B,), np.int64)
         for i in range(B):
             rid, arr, k_valid = batch[min(i, len(batch) - 1)]  # pad=repeat
             n = arr.shape[0]
-            data[i, :n] = arr
+            if encoded:
+                s = arr.shape[1]
+                data[i, :n, :s] = arr
+                tmask[i, :n, :s] = True
+            else:
+                data[i, :n] = arr
             pmask[i, :n] = True
             kv[i] = k_valid
             rids[i] = rid
         keys = jax.vmap(lambda r: jax.random.fold_in(self._base_key, r))(
             jnp.asarray(rids, jnp.uint32))
         version = self._taubuf.version
-        if self._head_spec is not None:
+        if encoded:
+            self._encoded_points += sum(
+                item[1].shape[0] for item in batch)
+            if self._head_spec is not None:
+                (labels, centers, cmask, weights, preds, cluster,
+                 kept) = self.plane.encoded_routed_step(
+                    self.tau, self.encoder, self.heads, keys,
+                    jnp.asarray(data), jnp.asarray(pmask),
+                    jnp.asarray(tmask), jnp.asarray(kv), shards=shards)
+                entry = (batch, labels, version, preds, cluster, kept)
+            else:
+                labels, centers, cmask, weights = self.plane.encode_step(
+                    self.tau, self.encoder, keys, jnp.asarray(data),
+                    jnp.asarray(pmask), jnp.asarray(tmask),
+                    jnp.asarray(kv), shards=shards)
+                entry = (batch, labels, version)
+        elif self._head_spec is not None:
             (labels, centers, cmask, weights, preds, cluster,
              kept) = self.plane.routed_step(
                 self.tau, self.heads, keys, jnp.asarray(data),
@@ -815,7 +937,10 @@ class AttachService:
         head params, the heads/arch tag, the routed-serving counters,
         and any STAGED split/retire head re-map — so a restore
         mid-refresh-window commits the same perm at the same boundary.
-        Pending requests are not persisted."""
+        Schema v6 (encoder enabled) rides the ingestion-encoder params
+        under an encoder/dtype/seq-len tag plus the encoded-point
+        counter, so a restored service embeds submissions bitwise like
+        the writer. Pending requests are not persisted."""
         from repro.fed.policy import POLICY_IDS
         extra = {}
         if self._head_spec is not None:
@@ -828,6 +953,14 @@ class AttachService:
             if self._heads_perm is not None:
                 extra["heads_perm"] = np.asarray(self._heads_perm,
                                                  np.int64)
+        if self._enc_spec is not None:
+            from repro.checkpoint.store import encode_tag
+            extra["encoder"] = self.encoder
+            extra["encoder_tag"] = encode_tag(
+                f"{self.cfg.encoder}|{self.cfg.encode_dtype}|"
+                f"{self.cfg.encode_seq_len}")
+            extra["encoder_counters"] = np.asarray(
+                [self._encoded_points], np.int64)
         return save_pytree(path, {
             **extra,
             "tau_bufs": self._taubuf.bufs,
@@ -869,7 +1002,8 @@ class AttachService:
                                     "drift_id", "drift_state",
                                     "drift_mass", "server/.epoch",
                                     "heads_tag", "heads_counters",
-                                    "heads_perm"))
+                                    "heads_perm", "encoder_tag",
+                                    "encoder_counters"))
         # Refuse a policy mismatch up front (named error, not a bare
         # KeyError / silent state corruption): the checkpoint's slot
         # bookkeeping is only meaningful under the policy that wrote
@@ -930,6 +1064,27 @@ class AttachService:
                     f"head_arch={cfg.head_arch!r} does not match the "
                     f"checkpoint at {path!r}, which was saved under "
                     f"heads={sv_h!r}/head_arch={sv_a!r}")
+        # Schema v6 carries the ingestion-encoder params under an
+        # encoder/dtype/seq-len tag. Mismatch (including encoder="off"
+        # against a v6 archive, or a different config/dtype/ceiling)
+        # refuses up front — the writer's embeddings, and so its
+        # labels, could not be reproduced. Pre-v6 archives restore
+        # under ANY encoder config (additive, like heads): the encoder
+        # starts from the deterministic seed-derived init.
+        if "encoder_tag" in extras:
+            from repro.checkpoint.store import decode_tag
+            tag = decode_tag(extras["encoder_tag"])
+            want = (f"{cfg.encoder}|{cfg.encode_dtype}|"
+                    f"{cfg.encode_seq_len}")
+            if tag != want:
+                sv_e, sv_dt, sv_sl = tag.split("|", 2)
+                raise StreamConfigError(
+                    f"StreamConfig.encoder={cfg.encoder!r}/"
+                    f"encode_dtype={cfg.encode_dtype!r}/"
+                    f"encode_seq_len={cfg.encode_seq_len!r} does not "
+                    f"match the checkpoint at {path!r}, which was "
+                    f"saved under encoder={sv_e!r}/encode_dtype="
+                    f"{sv_dt!r}/encode_seq_len={sv_sl}")
         # Schema v2 carries the double-buffered tau; v1 (pre-plane)
         # checkpoints hold one tau — restored as version 0 with both
         # buffers equal, so old checkpoints keep replaying bitwise.
@@ -964,6 +1119,15 @@ class AttachService:
             like["heads_counters"] = np.zeros((2,), np.int64)
             if "heads_perm" in extras:
                 like["heads_perm"] = np.zeros((cfg.k,), np.int64)
+        if "encoder_tag" in extras:
+            # The deterministic init doubles as the exact-shape restore
+            # template (same spec -> same leaf shapes by construction).
+            from repro.models import encoder as enc_mod
+            like["encoder"] = enc_mod.init_encoder(
+                jax.random.PRNGKey(0), cfg.encoder_spec())
+            like["encoder_tag"] = np.zeros_like(
+                np.asarray(extras["encoder_tag"]))
+            like["encoder_counters"] = np.zeros((1,), np.int64)
         tree = load_pytree(path, like)
         if tree["policy"]:
             policy.load_state(tree["policy"])
@@ -979,7 +1143,11 @@ class AttachService:
                   since_refresh=int(cnt[1]), served_devices=int(cnt[2]),
                   served_points=int(cnt[3]), mesh=mesh,
                   serve_axes=serve_axes,
-                  heads=tree.get("heads"))
+                  heads=tree.get("heads"),
+                  encoder=tree.get("encoder"))
+        if "encoder_counters" in extras:
+            ec = np.asarray(extras["encoder_counters"], np.int64)
+            svc._encoded_points = int(ec[0])
         if "heads_counters" in extras:
             hc = np.asarray(extras["heads_counters"], np.int64)
             svc._routed_served = int(hc[0])
@@ -1021,6 +1189,19 @@ class AttachService:
             "remap_pending": self._heads_perm is not None,
         }
 
+    def _encoder_stats(self) -> dict:
+        if self._enc_spec is None:
+            return {"mode": "off"}
+        from repro.models.encoder import encoder_param_count
+        return {
+            "mode": self.cfg.encoder,
+            "dtype": self.cfg.encode_dtype,
+            "seq_len": self.cfg.encode_seq_len,
+            "layers": self._enc_spec.n_layers,
+            "params": encoder_param_count(self._enc_spec),
+            "encoded_points": self._encoded_points,
+        }
+
     def stats(self) -> dict:
         return {
             "served_devices": self._served_devices,
@@ -1035,6 +1216,7 @@ class AttachService:
             "refresh_pending": self._taubuf.pending,
             "autoscale": self.autoscaler.stats(),
             "heads": self._heads_stats(),
+            "encoder": self._encoder_stats(),
             "drift": {
                 "mode": self.cfg.drift,
                 "half_life": self.cfg.drift_half_life,

@@ -90,6 +90,58 @@ def test_prefill_and_decode(arch, built):
     assert int(cache2["len"][0]) == int(cache["len"][0]) + 1
 
 
+# --------------------------------------------------------------------------
+# §17 ingestion-encoder path: every zoo config must resolve (reduced
+# mode) and forward raw token sequences to finite (…, d) f32 embeddings
+# at both encode dtypes. d=48 divides every reduced config's n_heads
+# ({4, 6, 8} across the zoo).
+# --------------------------------------------------------------------------
+
+ENC_D = 48
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_encoder_spec_resolves_every_arch(arch):
+    from repro.models.encoder import resolve_encoder_spec
+    cfg = get_config(arch, reduced=True)
+    spec = resolve_encoder_spec(arch, ENC_D)
+    assert spec.d == ENC_D and spec.d_ff >= ENC_D
+    assert 1 <= spec.n_layers <= 2
+    assert ENC_D % spec.n_heads == 0
+    assert spec.activation == cfg.activation
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_encoder_forward_every_arch(arch):
+    from repro.models.encoder import (apply_encoder, init_encoder,
+                                      resolve_encoder_spec)
+    spec = resolve_encoder_spec(arch, ENC_D)
+    params = init_encoder(jax.random.PRNGKey(5), spec)
+    B, n, S = 3, 5, 12
+    x = jax.random.normal(jax.random.PRNGKey(6), (B, n, S, ENC_D))
+    tmask = np.zeros((B, n, S), bool)
+    tmask[:, :, :7] = True
+    tmask[0, 4] = False           # one item with zero valid tokens
+    for dt in ("f32", "bf16"):
+        y = apply_encoder(params, x, jnp.asarray(tmask), spec,
+                          encode_dtype=dt)
+        assert y.shape == (B, n, ENC_D), (arch, dt)
+        assert y.dtype == jnp.float32, (arch, dt)
+        assert np.all(np.isfinite(np.asarray(y))), (arch, dt)
+        # the all-masked item embeds to exactly zero
+        assert float(np.abs(np.asarray(y)[0, 4]).max()) == 0.0
+
+
+def test_encoder_rejects_indivisible_heads():
+    from repro.models.encoder import (EncoderConfigError,
+                                      resolve_encoder_spec)
+    # nemotron's reduced n_heads=6 does not divide d=32
+    with pytest.raises(EncoderConfigError, match="n_heads"):
+        resolve_encoder_spec("nemotron-4-15b", 32)
+    with pytest.raises(EncoderConfigError, match="accepted values"):
+        resolve_encoder_spec("not-a-config", 32)
+
+
 @pytest.mark.parametrize("arch", ARCHS)
 def test_init_cache_matches_prefill_cache_structure(arch, built):
     cfg, model, params = built[arch]

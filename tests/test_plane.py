@@ -415,6 +415,60 @@ def test_admit_batch_equals_sequential_admits():
             assert granted == want_granted  # cadence counts grants
 
 
+# --------------------------------- encoder=off bitwise parity (§17) ---
+
+
+@pytest.mark.parametrize("seed", [23, 29, 31])
+def test_encoder_off_plan_is_bitwise_inert(fixture_round, seed):
+    """§17 acceptance: ``encoder="off"`` plans replay the existing
+    serve/fold path bitwise — the encode fields are inert (even
+    non-default ``encode_dtype``/``encode_seq_len``), no encode planes
+    are compiled, and labels, versions, tau buffers, and every fold
+    state leaf match the pre-§17 default plan exactly."""
+    fm, rr = fixture_round
+    kw = dict(batch_size=2, refresh_every=3, refresh="async",
+              bucket_sizes=(32, 64, 128))
+    base = Session.from_round(_plan(**kw), rr)
+    off = Session.from_round(_plan(**kw, encoder="off",
+                                   encode_dtype="bf16",
+                                   encode_seq_len=999), rr)
+    reqs, _, kvs = _requests(fm, 7, seed=seed)
+    out_a = base.serve_versioned(reqs, kvs)
+    out_b = off.serve_versioned(reqs, kvs)
+    for (la, va), (lb, vb) in zip(out_a, out_b):
+        np.testing.assert_array_equal(la, lb)
+        assert va == vb
+    for x, y in zip(jax.tree.leaves(base.service.state),
+                    jax.tree.leaves(off.service.state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(
+        np.asarray(base.service._taubuf.bufs),
+        np.asarray(off.service._taubuf.bufs))
+    assert off.service.plane._encode == {}
+    assert off.service.plane._enc_routed == {}
+    assert off.service.encoder is None
+    assert off.service.stats()["encoder"]["mode"] == "off"
+
+
+def test_encoder_off_checkpoint_roundtrips_with_default_plan(
+        fixture_round, tmp_path):
+    """A checkpoint written by an explicit ``encoder="off"`` plan
+    restores under the default plan (and vice versa) — the off mode
+    adds no schema surface."""
+    fm, rr = fixture_round
+    sess = Session.from_round(_plan(encoder="off"), rr)
+    reqs, _, kvs = _requests(fm, 3, seed=37)
+    sess.serve(reqs, kvs)
+    path = str(tmp_path / "off.npz")
+    sess.save(path)
+    replica = Session.restore(path, _plan())
+    np.testing.assert_array_equal(np.asarray(replica.tau_centers),
+                                  np.asarray(sess.tau_centers))
+    more, _, mkv = _requests(fm, 2, seed=41)
+    for a, b in zip(sess.serve(more, mkv), replica.serve(more, mkv)):
+        np.testing.assert_array_equal(a, b)
+
+
 # --------------------------------------- fused step under shard_map ---
 
 
